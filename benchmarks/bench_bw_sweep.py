@@ -1,0 +1,53 @@
+"""Paper Fig. 13: bit-width sweep — model size (exponential shrink) and
+quantization error (the UInt3 cliff). Also measures integer-QNet inference
+wall time on this host for one design point."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_us
+from repro.core import cu, qnet as Q
+from repro.core.calibrate import calibrate
+from repro.core.quant import QuantConfig
+from repro.models import layers, mobilenet_v2 as mnv2
+
+
+def run():
+    # model size vs BW (Fig 13b)
+    for bw in (3, 4, 5, 6, 8, 32):
+        net = mnv2.build(alpha=0.75, input_hw=160, bits=min(bw, 32))
+        mib = (net.n_params(False) * bw) / 8 / 2**20
+        row(f"fig13_size_bw{bw}", 0.0, f"{mib:.2f}MiB ratio={32/bw:.1f}x")
+
+    # weight quantization error vs BW (Fig 13a proxy: SQNR)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(3, 3, 32, 64)) * 0.1, jnp.float32)
+    for bw in (3, 4, 5, 6, 8):
+        from repro.core.quant import fake_quant_minmax
+        wq = fake_quant_minmax(w, QuantConfig(bw, symmetric=True, channel_axis=-1))
+        err = float(jnp.mean((w - wq) ** 2))
+        sqnr = 10 * np.log10(float(jnp.mean(w**2)) / max(err, 1e-12))
+        row(f"fig13_sqnr_bw{bw}", 0.0, f"{sqnr:.1f}dB")
+
+    # integer inference wall time (this host, CPU) for one design point
+    net = mnv2.build(alpha=0.35, input_hw=32, num_classes=10)
+    params = layers.init_params(jax.random.PRNGKey(0), net)
+
+    def apply_fn(p, b):
+        return layers.forward(p, b, net, capture=True)[1]
+
+    batches = [jax.random.uniform(jax.random.PRNGKey(i), (1, 32, 32, 3),
+                                  minval=-1, maxval=1) for i in range(2)]
+    obs = calibrate(apply_fn, params, batches, QuantConfig(4, False, None))
+    qn = Q.quantize_net(params, net, obs)
+    run_q = jax.jit(lambda x: cu.run_qnet(qn, x))
+    run_f = jax.jit(lambda x: layers.forward(params, x, net)[0])
+    us_q = time_us(run_q, batches[0])
+    us_f = time_us(run_f, batches[0])
+    row("qnet_int_inference", us_q, f"float={us_f:.0f}us host-cpu")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Kernel-level microbenchmarks: the three Pallas kernels against their
+XLA-compiled oracles on this host. Pallas interpret mode is a correctness
+vehicle (Python execution), so wall time is reported for the ORACLE (XLA)
+path; the derived column carries the kernel's analytic VMEM/HBM accounting
+for the TPU target."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_us
+from repro.kernels import ref
+
+
+def run():
+    rng = np.random.default_rng(0)
+    # depthwise: paper Eq. 8 geometry (K=3, widest MobileNet-V2 dw layer)
+    c = 192
+    x = jnp.asarray(rng.integers(0, 16, (1, 56, 56, c)), jnp.int32)
+    w = jnp.asarray(rng.integers(-7, 8, (3, 3, c)), jnp.int32)
+    mult = jnp.ones(c, jnp.float32) * 0.01
+    zc = jnp.zeros(c, jnp.float32)
+    b = jnp.zeros(c, jnp.int32)
+    f = jax.jit(lambda *a: ref.depthwise_conv_q_ref(*a))
+    us = time_us(f, x, w, mult, zc, b)
+    hbm = (x.size + 56 * 56 * c) * 1 + w.size
+    row("kernel_depthwise_56x56x192", us,
+        f"hbm_bytes={hbm/1e3:.0f}KB parallel_ops={9*c}")
+
+    # fused IRB vs unfused traffic (the Body CU)
+    cc, e, co = 32, 192, 32
+    x = jnp.asarray(rng.integers(0, 16, (1, 28, 28, cc)), jnp.int32)
+    w1 = jnp.asarray(rng.integers(-7, 8, (cc, e)), jnp.int32)
+    w2 = jnp.asarray(rng.integers(-7, 8, (3, 3, e)), jnp.int32)
+    w3 = jnp.asarray(rng.integers(-7, 8, (e, co)), jnp.int32)
+    mk = lambda n: (jnp.ones(n, jnp.float32) * 0.01, jnp.zeros(n, jnp.float32),
+                    jnp.zeros(n, jnp.int32))
+    m1, c1, b1 = mk(e)
+    m2, c2, b2 = mk(e)
+    m3, c3, b3 = mk(co)
+    g = jax.jit(lambda *a: ref.fused_irb_q_ref(*a))
+    us = time_us(g, x, w1, m1, c1, b1, w2, m2, c2, b2, w3, m3, c3, b3)
+    s_io = (28 * 28 * (cc + co))
+    s_int = 2 * (28 * 28 * e)
+    row("kernel_fused_irb_28x28", us,
+        f"fused_saves={s_int/(s_io+s_int)*100:.0f}%_of_traffic "
+        f"vmem_resident={28*30*e*4/1e3:.0f}KB_strip")
+
+    # quantized matmul (LM linear, d=2048 -> 8192)
+    xf = jnp.asarray(rng.normal(size=(256, 2048)), jnp.float32)
+    wq = jnp.asarray(rng.integers(-127, 128, (2048, 1024)), jnp.int8)
+    sc = jnp.ones((1, 1024), jnp.float32) * 0.01
+    h = jax.jit(lambda a, b, s: ref.quant_matmul_ref(a, b, s[0]))
+    us = time_us(h, xf, wq, sc)
+    row("kernel_quant_matmul_256x2048x1024", us,
+        f"w_bytes_int8={wq.size/1e6:.1f}MB vs_f32={wq.size*4/1e6:.1f}MB")
+
+
+if __name__ == "__main__":
+    run()

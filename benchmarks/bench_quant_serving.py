@@ -1,0 +1,40 @@
+"""Beyond-paper: the paper's quantization applied to LM serving — measures
+the weight-memory roofline win (bytes moved per decode step) for BW in
+{bf16, int8, int4} and the host-CPU wall time of the dequant-matmul path."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_us
+from repro.configs import reduced_config
+from repro.models.lm import model as M
+
+HBM = 819e9
+
+
+def run():
+    base = reduced_config("llama3.2-1b")
+    sizes = {}
+    for bits, name in ((None, "bf16"), (8, "int8"), (4, "int4")):
+        cfg = dataclasses.replace(base, quant_bits=bits)
+        params, _ = M.init_params(cfg, jax.random.PRNGKey(0))
+        nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+        sizes[name] = nbytes
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+        logits, cache = M.prefill(params, cfg, tokens, max_len=16)
+        dec = jax.jit(lambda p, t, c, pos: M.decode_step(p, cfg, t, c, pos))
+        us = time_us(dec, params, tokens[:, :1], cache, jnp.int32(8))
+        # decode is weight-bound: per-step HBM time ~ param bytes / BW
+        t_w = nbytes / HBM
+        row(f"quant_serve_{name}", us,
+            f"param_bytes={nbytes/1e6:.2f}MB roofline_decode_us={t_w*1e6:.2f}")
+    row("quant_serve_compression", 0.0,
+        f"int8={sizes['bf16']/sizes['int8']:.2f}x "
+        f"int4={sizes['bf16']/sizes['int4']:.2f}x vs bf16")
+
+
+if __name__ == "__main__":
+    run()

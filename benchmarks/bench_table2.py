@@ -1,0 +1,42 @@
+"""Paper Table 2: MobileNet-V2 alpha x H sweep — Params(Mib) and #Ops(M).
+
+Pure-arithmetic reproduction from the NetSpec; `derived` compares against the
+paper's published numbers (relative error). The paper's #Ops includes the
+(pre-fusing) BN elementwise ops — see tests/test_bn_fuse.py.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.models import mobilenet_v2 as mnv2
+
+# paper Table 2 values: {alpha: (params_Mb, {H: ops_M})}
+PAPER = {
+    1.0: (13.31, {224: 313.621, 192: 230.755, 160: 160.638, 128: 103.269, 96: 58.649}),
+    0.75: (10.01, {224: 220.326, 192: 162.212, 160: 113.038, 128: 72.805, 96: 41.513}),
+    0.5: (7.48, {224: 104.164, 192: 76.868, 160: 53.772, 128: 34.875, 96: 20.177}),
+    0.35: (6.37, {224: 64.835, 192: 47.973, 160: 33.706, 128: 22.033, 96: 12.953}),
+}
+
+
+def run():
+    worst_p = worst_o = 0.0
+    for alpha, (p_mb, ops) in PAPER.items():
+        net = mnv2.build(alpha=alpha, input_hw=224, bits=4)
+        ours_mb = net.model_bits(with_bias=False) / 2**20  # Mib
+        err_p = abs(ours_mb - p_mb) / p_mb
+        worst_p = max(worst_p, err_p)
+        row(f"table2_params_a{alpha}", 0.0,
+            f"ours={ours_mb:.2f}Mib paper={p_mb} err={err_p*100:.1f}%")
+        for h, paper_ops in ops.items():
+            net_h = mnv2.build(alpha=alpha, input_hw=h, bits=4)
+            ours_ops = (net_h.count_macs() + net_h.count_bn_ops()) / 1e6
+            err = abs(ours_ops - paper_ops) / paper_ops
+            worst_o = max(worst_o, err)
+            row(f"table2_ops_a{alpha}_h{h}", 0.0,
+                f"ours={ours_ops:.1f}M paper={paper_ops} err={err*100:.1f}%")
+    row("table2_worst_err", 0.0,
+        f"params={worst_p*100:.1f}% ops={worst_o*100:.1f}%")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Paper Table 3/4/5: FPS per design point — TPU-v5e roofline projection.
+
+The paper measures FPS on a ZCU102 at 200 MHz. This container has no TPU, so
+we project per-image latency from the roofline model (int8 MXU path at the
+paper's BW=4 datapath): t = max(compute, memory) with
+
+    compute = MACs * 2 / (197e12 * int8_speedup)
+    memory  = (weights at BW bits + activation traffic) / 819e9
+
+and report FPS = 1/t for one chip, preserving the paper's design-space TREND
+(FPS grows as alpha/H shrink). The derived column carries the paper's
+measured FPS for reference.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.models import mobilenet_v2 as mnv2
+
+PEAK = 197e12  # bf16; int8 ~2x on v5e MXU
+HBM = 819e9
+
+# paper Table 3 FPS at 200MHz ZCU102
+PAPER_FPS = {
+    (0.75, 224): 11, (0.75, 192): 14, (0.75, 160): 18, (0.75, 128): 22,
+    (0.75, 96): 28,
+    (0.5, 224): 16, (0.5, 192): 19, (0.5, 160): 25, (0.5, 128): 30,
+    (0.5, 96): 37,
+    (0.35, 224): 20, (0.35, 192): 25, (0.35, 160): 31, (0.35, 128): 40,
+    (0.35, 96): 51,
+}
+
+
+def activation_bytes(net, bits=4):
+    h = net.input_hw
+    total = 0
+    for b in net.blocks:
+        for op in b.ops:
+            if op.kind == "dense":
+                total += (op.in_ch + op.out_ch) * bits // 8
+                continue
+            h_out = -(-h // op.stride)
+            total += (h * h * op.in_ch + h_out * h_out * op.out_ch) * bits // 8
+            h = h_out
+    return total
+
+
+def run():
+    prev_fps = None
+    for (alpha, hh), paper in sorted(PAPER_FPS.items()):
+        net = mnv2.build(alpha=alpha, input_hw=hh, bits=4)
+        macs = net.count_macs()
+        wbytes = net.model_bits(with_bias=False) / 8
+        abytes = activation_bytes(net)
+        t_c = macs * 2 / (PEAK * 2)  # int8 path
+        t_m = (wbytes + abytes) / HBM
+        fps = 1.0 / max(t_c, t_m)
+        row(f"table3_fps_a{alpha}_h{hh}", 0.0,
+            f"tpu_roofline_fps={fps:.0f} paper_zcu102_fps={paper} "
+            f"bound={'mem' if t_m > t_c else 'compute'}")
+    # trend check: FPS must increase monotonically as H decreases per alpha
+    for alpha in (0.75, 0.5, 0.35):
+        fps = []
+        for hh in (224, 192, 160, 128, 96):
+            net = mnv2.build(alpha=alpha, input_hw=hh, bits=4)
+            macs = net.count_macs()
+            t_c = macs * 2 / (PEAK * 2)
+            t_m = (net.model_bits(False) / 8 + activation_bytes(net)) / HBM
+            fps.append(1.0 / max(t_c, t_m))
+        mono = all(fps[i] < fps[i + 1] for i in range(len(fps) - 1))
+        row(f"table3_trend_a{alpha}", 0.0, f"fps_monotone_in_H={mono}")
+
+
+if __name__ == "__main__":
+    run()

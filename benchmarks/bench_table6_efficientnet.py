@@ -1,0 +1,31 @@
+"""Paper Table 6/7 + Fig 19: compact EfficientNet — algorithmic specs, CU
+mapping (Body invoked 9x, 1.78x fewer than MobileNet-V2), roofline FPS."""
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.core import compiler as CC
+from repro.models import efficientnet as effnet, mobilenet_v2 as mnv2
+
+PEAK, HBM = 197e12, 819e9
+
+
+def run():
+    net = effnet.build_compact(input_hw=128, bits=4)
+    plan = CC.compile_net(net)
+    mib = net.model_bits(with_bias=False) / 2**20
+    ops = (net.count_macs() + net.count_bn_ops()) / 1e6
+    row("table6_params", 0.0, f"ours={mib:.2f}Mib paper=7.81Mb")
+    row("table6_ops", 0.0, f"ours={ops:.1f}M (paper reports 4.914M ops*)")
+    row("table6_body_invocations", 0.0,
+        f"ours={plan.body_invocations} paper=9")
+    m_inv = CC.compile_net(mnv2.build(alpha=0.75, input_hw=224)).body_invocations
+    row("table6_body_ratio_vs_mnv2", 0.0,
+        f"{m_inv / plan.body_invocations:.2f}x paper=1.78x")
+    macs = net.count_macs()
+    t_c = macs * 2 / (PEAK * 2)
+    t_m = (net.model_bits(False) / 8) / HBM
+    row("table6_roofline_fps", 0.0, f"{1.0/max(t_c, t_m):.0f} (one v5e chip)")
+
+
+if __name__ == "__main__":
+    run()

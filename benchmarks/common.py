@@ -1,0 +1,26 @@
+"""Shared benchmark utilities. Every bench prints `name,us_per_call,derived`
+CSV rows (us_per_call = measured wall time on this host where meaningful,
+else 0; derived = the paper-table quantity being reproduced)."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_us(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def row(name: str, us: float, derived) -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line, flush=True)
+    return line

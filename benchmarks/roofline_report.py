@@ -1,0 +1,94 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline markdown table.
+
+    PYTHONPATH=src:. python -m benchmarks.roofline_report [--dir experiments/dryrun]
+
+Emits, per (arch x shape x mesh): the three roofline terms (seconds), the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs (useful-compute ratio), the
+roofline fraction (useful model FLOPs time / bound time), memory fit, and a
+one-line recommendation for the dominant term.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from collections import defaultdict
+
+PEAK = 197e12
+HBM_GB = 16e9  # v5e per-chip HBM
+
+
+def reco(r: dict) -> str:
+    b = r["roofline"]["bottleneck"]
+    if b == "memory":
+        return ("cut HBM traffic: lower-precision weights/acts, better "
+                "fusion, larger per-step batch re-use")
+    if b == "collective":
+        return ("cut collective payload: 2D-sharded activations, "
+                "grad compression, overlap via latency hiding")
+    return "raise MXU utilization: larger tiles, fewer remat recomputes"
+
+
+def load(dir_):
+    rows = []
+    for f in sorted(os.listdir(dir_)):
+        if f.endswith(".json"):
+            with open(os.path.join(dir_, f)) as fh:
+                rows.append(json.load(fh))
+    return rows
+
+
+def fmt(rows, mesh_filter=None):
+    print("| arch | shape | mesh | t_comp(s) | t_mem(s) | t_coll(s) | "
+          "bound | MF/HLO | roofline-frac | peak/chip | fits |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    n_ok = n_skip = n_err = 0
+    for r in rows:
+        if r["status"] == "skipped":
+            n_skip += 1
+            arch, shape, mesh = r["cell"].split("__")[:3]
+            if mesh_filter and mesh != mesh_filter:
+                continue
+            print(f"| {arch} | {shape} | {mesh} | — | — | — | skipped "
+                  f"(quadratic@512k) | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            n_err += 1
+            print(f"| {r['cell']} | ERROR: {r.get('error','')[:60]} |")
+            continue
+        n_ok += 1
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        rl = r["roofline"]
+        t_bound = max(rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"])
+        useful_t = r["model_flops_per_device"] / PEAK
+        frac = useful_t / t_bound if t_bound else 0.0
+        mem = r["memory"]
+        peak = max(mem.get("peak_bytes", 0),
+                   mem.get("temp_bytes", 0) + mem.get("argument_bytes", 0))
+        fits = "Y" if peak <= HBM_GB else f"N({peak/1e9:.0f}GB)"
+        ratio = r.get("useful_flops_ratio") or 0.0
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {rl['t_compute_s']:.2e} | {rl['t_memory_s']:.2e} "
+              f"| {rl['t_collective_s']:.2e} | {rl['bottleneck']} "
+              f"| {ratio:.2f} | {frac*100:.1f}% | {peak/1e9:.2f}GB | {fits} |")
+    print(f"\ncells: {n_ok} ok, {n_skip} skipped, {n_err} error")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--reco", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    fmt(rows, args.mesh)
+    if args.reco:
+        print("\nrecommendations (dominant-term):")
+        for r in rows:
+            if r["status"] == "ok":
+                print(f"  {r['cell']}: {reco(r)}")
+
+
+if __name__ == "__main__":
+    main()

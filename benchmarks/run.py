@@ -1,0 +1,46 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one module per paper table/figure:
+
+  bench_table2              Table 2   (alpha x H: params / #ops)
+  bench_bw_sweep            Fig. 13   (bit-width: size / SQNR / int inference)
+  bench_table3              Table 3/4 (FPS per design point, roofline-projected)
+  bench_fusion              Sec 5.1.2 (fused Body CU traffic reduction)
+  bench_table6_efficientnet Table 6/7 (compact EfficientNet + CU mapping)
+  bench_quant_serving       beyond-paper: LM weight-quantized serving
+  bench_kernels             kernel-level microbenchmarks
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_bw_sweep,
+        bench_fusion,
+        bench_kernels,
+        bench_quant_serving,
+        bench_table2,
+        bench_table3,
+        bench_table6_efficientnet,
+    )
+
+    print("name,us_per_call,derived")
+    mods = [
+        bench_table2, bench_bw_sweep, bench_table3, bench_fusion,
+        bench_table6_efficientnet, bench_quant_serving, bench_kernels,
+    ]
+    failures = 0
+    for m in mods:
+        try:
+            m.run()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{m.__name__},0.0,ERROR:{type(e).__name__}:{e}",
+                  file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

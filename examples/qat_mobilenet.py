@@ -1,0 +1,106 @@
+"""End-to-end driver (the paper's kind: power-efficient DSCNN *inference*).
+
+Full DeepDive front-end flow (Fig. 1/4) on a synthetic learnable dataset:
+
+    float pre-training -> online channel-wise 4-bit QAT -> calibration ->
+    post-training quantization (ReLU6 fusion) -> QNet artifact on disk ->
+    pure-integer inference accuracy report.
+
+    PYTHONPATH=src python examples/qat_mobilenet.py [--steps 150]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cu, qnet as Q
+from repro.core.calibrate import calibrate
+from repro.core.quant import QuantConfig
+from repro.data.pipeline import image_batch
+from repro.models import layers, mobilenet_v2 as mnv2
+from repro.train import optimizer as O
+
+HW, CLASSES = 16, 4
+
+
+def train(net, params, steps, qat, lr, seed=0, log_every=25):
+    ocfg = O.AdamWConfig(lr=lr, warmup_steps=5, total_steps=steps,
+                         weight_decay=0.0)
+    opt = O.init_state(params)
+
+    @jax.jit
+    def step(params, opt, images, labels):
+        def loss_fn(p):
+            logits, _ = layers.forward(p, images, net, qat=qat)
+            lp = jax.nn.log_softmax(logits)
+            return -jnp.take_along_axis(lp, labels[:, None], 1).mean()
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = O.apply_updates(params, g, opt, ocfg)
+        return params, opt, loss
+
+    for s in range(steps):
+        b = image_batch(seed, s, 32, HW, CLASSES)
+        params, opt, loss = step(params, opt, jnp.asarray(b["images"]),
+                                 jnp.asarray(b["labels"]))
+        if (s + 1) % log_every == 0:
+            print(f"  [{'qat' if qat else 'fp32'}] step {s+1} "
+                  f"loss={float(loss):.4f}")
+    return params
+
+
+def accuracy(fn, seed=99, n=8):
+    correct = total = 0
+    for s in range(n):
+        b = image_batch(seed, s, 32, HW, CLASSES)
+        pred = fn(jnp.asarray(b["images"]))
+        correct += int((np.asarray(pred) == b["labels"]).sum())
+        total += len(b["labels"])
+    return correct / total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--out", default="/tmp/qnet_mobilenet.bin")
+    args = ap.parse_args()
+
+    net = mnv2.build(alpha=0.35, input_hw=HW, num_classes=CLASSES)
+    params = layers.init_params(jax.random.PRNGKey(0), net)
+    print("stage 1: float pre-training")
+    params = train(net, params, args.steps, qat=False, lr=2e-3)
+    acc_fp = accuracy(lambda x: jnp.argmax(layers.forward(params, x, net)[0], -1))
+
+    print("stage 2: online channel-wise 4-bit quantization (QAT)")
+    params = train(net, params, args.steps // 2, qat=True, lr=5e-4)
+    acc_qat = accuracy(
+        lambda x: jnp.argmax(layers.forward(params, x, net, qat=True)[0], -1))
+
+    print("stage 3: calibration + post-training quantization -> QNet")
+    def apply_fn(p, b):
+        return layers.forward(p, b, net, capture=True)[1]
+    cal = [jnp.asarray(image_batch(1, s, 32, HW, CLASSES)["images"])
+           for s in range(4)]
+    obs = calibrate(apply_fn, params, cal, QuantConfig(4, False, None))
+    qn = Q.quantize_net(params, net, obs)
+    Q.save_qnet(qn, args.out)
+    qn2 = Q.load_qnet(args.out, net)
+    acc_int = accuracy(lambda x: jnp.argmax(cu.run_qnet(qn2, x), -1))
+
+    fp32_kb = net.n_params(False) * 4 / 1e3
+    print(f"\nresults:")
+    print(f"  float accuracy      : {acc_fp:.3f}")
+    print(f"  QAT (fake-quant)    : {acc_qat:.3f}")
+    print(f"  integer QNet        : {acc_int:.3f}")
+    print(f"  model size          : {qn2.model_bytes()/1e3:.1f} KB "
+          f"(FP32: {fp32_kb:.1f} KB, {fp32_kb/(qn2.model_bytes()/1e3):.1f}x)")
+    print(f"  QNet artifact       : {args.out}")
+
+
+if __name__ == "__main__":
+    main()

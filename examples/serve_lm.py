@@ -1,0 +1,21 @@
+"""Serve a small LM with batched requests (+ the paper's weight quantization).
+
+    PYTHONPATH=src python examples/serve_lm.py [--quant-bits 8]
+
+Uses the production Engine (prefill + lockstep batched decode) on the
+reduced llama3.2-1b config; --quant-bits applies DeepDive's range-based
+symmetric per-channel quantization to every linear operator.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--arch" not in argv:
+        argv = ["--arch", "llama3.2-1b", "--reduced", "--requests", "6",
+                "--slots", "3", "--max-new", "12"] + argv
+    main(argv)

@@ -1,0 +1,25 @@
+"""Train an LM on the deterministic synthetic stream with fault tolerance.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 100 \
+        [--arch mamba2-1.3b] [--grad-compress] [--resume]
+
+Reduced configs run on CPU; the same driver scales to the production mesh
+(see launch/dryrun.py for the lowered 512-chip step). Checkpoints land in
+--ckpt-dir and a restart with --resume continues the data stream exactly.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--arch" not in argv:
+        argv = ["--arch", "llama3.2-1b"] + argv
+    if "--reduced" not in argv:
+        argv.append("--reduced")
+    if "--ckpt-dir" not in argv:
+        argv += ["--ckpt-dir", "/tmp/repro_lm_ckpt"]
+    main(argv)

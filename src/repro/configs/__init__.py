@@ -1,0 +1,3 @@
+from repro.configs.registry import ARCHS, get_config, reduced_config
+
+__all__ = ["ARCHS", "get_config", "reduced_config"]

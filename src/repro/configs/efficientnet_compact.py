@@ -1,0 +1,6 @@
+"""Compact EfficientNet (the paper's second case study, Sec. 5.2)."""
+from repro.models import efficientnet as _e
+
+
+def get_config(input_hw: int = 128, bits: int = 4, **kw):
+    return _e.build_compact(input_hw=input_hw, bits=bits, **kw)

@@ -1,0 +1,27 @@
+"""phi-3-vision-4.2b [vlm]: phi3-mini backbone + CLIP frontend (STUB).
+
+32L d_model=3072 32H (kv=32) d_ff=8192 vocab=32064
+[hf:microsoft/Phi-3-vision-128k-instruct; hf]
+
+The CLIP vision tower is a modality-frontend stub: input_specs() provides
+precomputed patch embeddings [B, 576, d_model] (24x24 patches), projected by
+a single learned matrix and prepended to the token sequence.
+"""
+from repro.models.lm.config import LMConfig
+
+
+def get_config(**kw) -> LMConfig:
+    return LMConfig(
+        name="phi-3-vision-4.2b",
+        family="vlm",
+        n_layers=32,
+        d_model=3072,
+        n_heads=32,
+        n_kv_heads=32,
+        head_dim=96,
+        d_ff=8192,
+        vocab=32064,
+        frontend="vision",
+        frontend_len=576,
+        **kw,
+    )

@@ -1,0 +1,22 @@
+"""qwen3-32b [dense]: qk_norm, GQA.
+
+64L d_model=5120 64H (GQA kv=8) d_ff=25600 vocab=151936
+[hf:Qwen/Qwen3-8B; hf]
+"""
+from repro.models.lm.config import LMConfig
+
+
+def get_config(**kw) -> LMConfig:
+    return LMConfig(
+        name="qwen3-32b",
+        family="dense",
+        n_layers=64,
+        d_model=5120,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=80,
+        d_ff=25600,
+        vocab=151936,
+        qk_norm=True,
+        **kw,
+    )

@@ -1,0 +1,73 @@
+"""Architecture registry: --arch <id> -> LMConfig / NetSpec.
+
+`get_config(arch)` returns the FULL published configuration (exercised only
+via the dry-run — ShapeDtypeStruct, no allocation). `reduced_config(arch)`
+returns a structure-preserving shrunken version (same family, same flags,
+same layer pattern, tiny dims) used by the per-arch CPU smoke tests and to
+build the logical-sharding tree without materializing the full model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Union
+
+from repro.models.lm.config import LMConfig
+
+# arch id -> module path (LM archs) — the paper's own DSCNNs are separate
+ARCHS = {
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a27b",
+    "qwen3-32b": "repro.configs.qwen3_32b",
+    "llama3.2-1b": "repro.configs.llama32_1b",
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "codeqwen1.5-7b": "repro.configs.codeqwen15_7b",
+    "phi-3-vision-4.2b": "repro.configs.phi3_vision_42b",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t_large_v2",
+    "mamba2-1.3b": "repro.configs.mamba2_13b",
+}
+
+CNN_ARCHS = ("mobilenet-v2", "efficientnet-compact")
+
+
+def get_config(arch: str, **kw) -> LMConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)} + {CNN_ARCHS}")
+    mod = importlib.import_module(ARCHS[arch])
+    return mod.get_config(**kw)
+
+
+def reduced_config(arch: str, **kw) -> LMConfig:
+    """Shrink dims, keep structure (family, pattern, flags, divisibility)."""
+    cfg = get_config(arch, **kw)
+    r = dict(
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads > 1 else 1,
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=256,
+    )
+    if cfg.family == "hybrid":
+        r.update(n_layers=max(len(cfg.block_pattern),
+                              len(cfg.block_pattern) + cfg.n_layers % len(cfg.block_pattern)),
+                 lru_width=64, local_window=32)
+    elif cfg.family in ("encdec", "audio"):
+        r.update(n_layers=4, n_enc_layers=2, n_dec_layers=2, frontend_len=16)
+    elif cfg.family == "ssm":
+        r.update(n_layers=2, ssm_state=16, ssm_head_dim=16, ssm_chunk=8)
+    else:
+        r.update(n_layers=2)
+    if cfg.family == "moe":
+        # capacity_factor = n_experts makes routing lossless (cap == T) so the
+        # smoke tests can assert prefill/decode == teacher-forced forward
+        r.update(n_experts=min(cfg.n_experts, 8), top_k=min(cfg.top_k, 2),
+                 moe_d_ff=64, capacity_factor=8.0,
+                 shared_d_ff=64 if cfg.n_shared_experts else 0)
+    if cfg.family == "vlm":
+        r.update(frontend_len=8)
+    return dataclasses.replace(cfg, **r)
+
+
+__all__ = ["ARCHS", "CNN_ARCHS", "get_config", "reduced_config"]

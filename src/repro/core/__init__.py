@@ -1,0 +1,15 @@
+# The paper's primary contribution: DeepDive's front-end (quantization-aware
+# training pipeline) and back-end (Network SoC Compiler + heterogeneous CU
+# execution), adapted from edge-FPGA to TPU. See DESIGN.md.
+from repro.core import bn_fuse, calibrate, compiler, cu, graph, integer_ops, qnet, quant
+
+__all__ = [
+    "bn_fuse",
+    "calibrate",
+    "compiler",
+    "cu",
+    "graph",
+    "integer_ops",
+    "qnet",
+    "quant",
+]

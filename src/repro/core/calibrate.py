@@ -1,0 +1,92 @@
+"""Calibration + post-training ReLU6 fusion (DeepDive front-end, Sec. 3 tail).
+
+After BN-fused QAT, the paper runs the validation set once more to extract
+per-layer activation min/max, then *re-derives* the activation quantizer
+h^pq : [0, 6] -> [0, 2^BW - 1] so that the integer clip to [0, 2^BW - 1]
+performed by the Approximator & Clip unit IS the ReLU6 — i.e. the activation
+function is fused into the convolution's requantization for free.
+
+This module provides:
+  * `ActObserver`      — running min/max (and optional EMA) per tensor/channel
+  * `calibrate`        — drive a model over batches collecting observers
+  * `relu6_fused_qparams` — the h^pq quantizer: scale = 6 / (2^BW - 1), zp = 0
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .quant import QuantConfig, compute_scale_zp, observe_range
+
+
+@dataclasses.dataclass
+class ActObserver:
+    """Running range observer. Functional: `update` returns a new observer."""
+
+    min_val: jnp.ndarray
+    max_val: jnp.ndarray
+    momentum: Optional[float] = None  # None = true min/max; else EMA
+
+    @staticmethod
+    def init(shape=()) -> "ActObserver":
+        return ActObserver(
+            min_val=jnp.full(shape, jnp.inf), max_val=jnp.full(shape, -jnp.inf)
+        )
+
+    def update(self, x: jnp.ndarray, cfg: QuantConfig) -> "ActObserver":
+        mn, mx = observe_range(x, cfg)
+        if self.momentum is None:
+            new_mn = jnp.minimum(self.min_val, mn)
+            new_mx = jnp.maximum(self.max_val, mx)
+        else:
+            m = self.momentum
+            init = jnp.isinf(self.min_val)
+            new_mn = jnp.where(init, mn, m * self.min_val + (1 - m) * mn)
+            new_mx = jnp.where(init, mx, m * self.max_val + (1 - m) * mx)
+        return ActObserver(new_mn, new_mx, self.momentum)
+
+    def qparams(self, cfg: QuantConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return compute_scale_zp(self.min_val, self.max_val, cfg)
+
+
+def relu6_fused_qparams(cfg: QuantConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h^pq : [0, 6] -> [0, 2^BW - 1].
+
+    With ReLU6 the post-activation range is exactly [0, 6]; the asymmetric
+    quantizer then has S = 6 / (2^BW - 1), m_zp = 0, and the integer clip to
+    [0, 2^BW - 1] realizes ReLU6 exactly (paper Sec. 3, 'QNet ... output set to
+    the minimum and maximum quantized value automatically').
+    """
+    if cfg.symmetric:
+        raise ValueError("ReLU6 fusion requires the asymmetric representation")
+    scale = jnp.asarray(6.0 / cfg.qmax)
+    zp = jnp.asarray(0.0)
+    return scale, zp
+
+
+def calibrate(
+    apply_fn: Callable[..., Dict[str, jnp.ndarray]],
+    params,
+    batches: Iterable,
+    act_cfg: QuantConfig,
+) -> Dict[str, ActObserver]:
+    """Run `apply_fn(params, batch)` over batches; it must return a dict of
+    named intermediate activations. Returns per-name observers."""
+    observers: Dict[str, ActObserver] = {}
+    for batch in batches:
+        acts = apply_fn(params, batch)
+        for name, x in acts.items():
+            obs = observers.get(name)
+            if obs is None:
+                shape = () if act_cfg.channel_axis is None else (
+                    x.shape[act_cfg.channel_axis],
+                )
+                obs = ActObserver.init(shape)
+            observers[name] = obs.update(x, act_cfg)
+    return observers
+
+
+__all__ = ["ActObserver", "relu6_fused_qparams", "calibrate"]

@@ -1,0 +1,143 @@
+"""Heterogeneous Compute Unit runners — integer QNet execution (Sec. 4).
+
+The FPGA executes each CU as a fused pipeline: operators stream intermediate
+feature maps through FIFOs; only CU inputs/outputs touch shared DDR. The TPU
+analogue: each CU is ONE jitted function (one XLA program == one 'CU
+invocation'), so all intra-CU intermediates stay on-chip; for the Body CU the
+`kernels/fused_irb` Pallas kernel additionally pins the expanded intermediate
+into VMEM explicitly.
+
+All arithmetic inside a CU is integer: int MACs -> int32 accum -> requantize
+-> clip (the Approximator & Clip unit == fused ReLU6), following
+`core/integer_ops`. Zero floating point remains in the datapath except the
+requant multiplier (which also has a faithful fixed-point mode).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graph as G
+from repro.core.integer_ops import (
+    clip_act,
+    int_conv2d,
+    int_pointwise,
+    quantized_op_epilogue,
+)
+from repro.core.qnet import QNet, QOp
+
+
+def quantize_input(x: jnp.ndarray, scale: float, zp: float, bits: int = 8):
+    q = jnp.round(x / scale - zp)
+    return jnp.clip(q, 0, 2**bits - 1).astype(jnp.int32)
+
+
+def _run_qop(x_q: jnp.ndarray, qop: QOp, fixed_point: bool) -> jnp.ndarray:
+    op = qop.spec
+    w_q = jnp.asarray(qop.w_q, jnp.int32)
+    if op.kind == G.CONV:
+        acc = int_conv2d(x_q, w_q, stride=op.stride)
+    elif op.kind == G.DW:
+        acc = int_conv2d(x_q, w_q, stride=op.stride, groups=op.in_ch)
+    elif op.kind == G.PW:
+        acc = int_pointwise(x_q, w_q[0, 0] if w_q.ndim == 4 else w_q)
+    elif op.kind == G.DENSE:
+        acc = int_pointwise(x_q, w_q)
+    else:
+        raise ValueError(op.kind)
+
+    if op.act == G.HSIGMOID:
+        # gate: y = relu6(x + 3)/6 quantized to [0, qmax] with S=1/qmax.
+        # dequant the accumulator (S_x*S_w), apply hsigmoid, requantize.
+        y_fp = (
+            acc.astype(jnp.float32)
+            + qop.in_zp * jnp.asarray(qop.wsum, jnp.float32)
+        ) * (qop.in_scale * jnp.asarray(qop.w_scale, jnp.float32))
+        y_fp = y_fp + jnp.asarray(qop.bias_q, jnp.float32) * qop.out_scale
+        gate = jnp.clip(y_fp + 3.0, 0.0, 6.0) / 6.0
+        return jnp.round(gate / qop.out_scale).astype(jnp.int32)
+
+    return quantized_op_epilogue(
+        acc,
+        z_x=jnp.asarray(qop.in_zp, jnp.int32),
+        wsum=jnp.asarray(qop.wsum, jnp.int32),
+        bias_q=jnp.asarray(qop.bias_q, jnp.int32),
+        mult=jnp.asarray(qop.mult, jnp.float32),
+        qmax=qop.qmax,
+        z_y=jnp.asarray(0, jnp.int32),  # z_y folded into bias_q (qnet.py)
+        fixed_point=fixed_point,
+        mantissa=jnp.asarray(qop.mantissa, jnp.int64) if fixed_point else None,
+        shift=jnp.asarray(qop.shift, jnp.int32) if fixed_point else None,
+        clip_output=True,
+    )
+
+
+def _residual_add(
+    a_q, a_s, a_z, b_q, b_s, b_z, y_s, y_z, qmax: int
+) -> jnp.ndarray:
+    """Integer skip-line add: rescale both operands into the output domain."""
+    a = (a_q.astype(jnp.float32) + a_z) * (a_s / y_s)
+    b = (b_q.astype(jnp.float32) + b_z) * (b_s / y_s)
+    return jnp.clip(jnp.round(a + b) - round(y_z), 0, qmax).astype(jnp.int32)
+
+
+def run_block(
+    x_q: jnp.ndarray,
+    block: G.BlockSpec,
+    qnet: QNet,
+    in_s: float,
+    in_z: float,
+    fixed_point: bool = False,
+) -> Tuple[jnp.ndarray, float, float]:
+    """Execute one block (one CU invocation) fully fused in integer math."""
+    y = x_q
+    cur_s, cur_z = in_s, in_z
+    for op in block.ops:
+        qop = qnet.ops[op.name]
+        y = _run_qop(y, qop, fixed_point)
+        cur_s, cur_z = qop.out_scale, qop.out_zp
+        if block.se is not None and block.se_after == op.name:
+            sq, ex = qnet.ops[block.se.squeeze.name], qnet.ops[block.se.excite.name]
+            pooled = jnp.round(jnp.mean(y.astype(jnp.float32), axis=(1, 2))).astype(jnp.int32)
+            s = _run_qop(pooled, sq, fixed_point)
+            gate_q = _run_qop(s, ex, fixed_point)  # [B, C] in [0, qmax], S=1/qmax
+            # gated output keeps the dw quantizer: y' = y * gate
+            # S_y (y'_q + z) = S_y (y_q + z) * S_g * g_q  with z == 0 (ReLU6 fused)
+            y = jnp.round(
+                y.astype(jnp.float32)
+                * gate_q[:, None, None, :].astype(jnp.float32)
+                * ex.out_scale
+            ).astype(jnp.int32)
+    if block.residual:
+        y_s, y_z = qnet.res_q[block.name]
+        qmax = 2 ** block.ops[-1].act_bits - 1
+        y = _residual_add(x_q, in_s, in_z, y, cur_s, cur_z, y_s, y_z, qmax)
+        cur_s, cur_z = y_s, y_z
+    if block.avgpool:
+        y = jnp.round(jnp.mean(y.astype(jnp.float32), axis=(1, 2))).astype(jnp.int32)
+    return y, cur_s, cur_z
+
+
+def run_qnet(
+    qnet: QNet,
+    x: jnp.ndarray,
+    fixed_point: bool = False,
+    input_bits: int = 8,
+) -> jnp.ndarray:
+    """Full integer inference. Returns float logits (dequantized at the end,
+    where the FPGA hands confidence computation back to the PS/softmax)."""
+    net = qnet.spec
+    first = qnet.ops[net.blocks[0].ops[0].name]
+    y = quantize_input(x, first.in_scale, first.in_zp, input_bits)
+    cur_s, cur_z = first.in_scale, first.in_zp
+    for block in net.blocks:
+        y, cur_s, cur_z = run_block(y, block, qnet, cur_s, cur_z, fixed_point)
+    return (y.astype(jnp.float32) + cur_z) * cur_s
+
+
+__all__ = ["quantize_input", "run_block", "run_qnet"]

@@ -1,0 +1,199 @@
+"""Network graph IR consumed by the Network Compiler (Sec. 4.2).
+
+The front-end emits, and the back-end consumes, a tiny layer IR: a network is
+a sequence of blocks; each block is a sequence of convolutional operators plus
+optional residual / squeeze-excitation / pooling structure. The compiler
+(`core/compiler.py`) partitions blocks into Head / Body / Tail / Classifier
+CUs based on their recurrence pattern, exactly like the paper's Network SoC
+Compiler ("Depending on the recurrence of the convolutional operators, they
+are mapped to the Head, Body, Tail, and Classifier CU").
+
+The same IR drives:
+  * float inference & QAT        (models/layers.py interpreter)
+  * op/param counting            (Table 2 reproduction)
+  * quantization to QNet         (core/qnet.py)
+  * fused integer CU execution   (core/cu.py)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# Operator kinds
+CONV = "conv"  # normal convolution (spatial + channel reduction)
+DW = "dw"  # depthwise convolution (spatial only, groups == channels)
+PW = "pw"  # pointwise convolution (1x1, channel only)
+DENSE = "dense"  # classifier matmul
+
+# Activations
+RELU6 = "relu6"
+NONE = "none"  # linear (projection convs, classifier)
+HSIGMOID = "hsigmoid"  # hard sigmoid, Eq. 1 (EfficientNet SE gate)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """One convolutional operator (paper Sec. 4.1)."""
+
+    name: str
+    kind: str  # CONV | DW | PW | DENSE
+    in_ch: int
+    out_ch: int
+    kernel: int = 1
+    stride: int = 1
+    act: str = RELU6
+    bits: int = 4  # BW of this operator's datapath
+    act_bits: int = 4  # BW of its output activation tensor
+
+    def weight_shape(self) -> Tuple[int, ...]:
+        if self.kind == DW:
+            # HWIO with feature_group_count == C: [K, K, 1, C]; out channel last,
+            # matching the per-channel quantization axis of every other op.
+            return (self.kernel, self.kernel, 1, self.in_ch)
+        if self.kind == DENSE:
+            return (self.in_ch, self.out_ch)
+        return (self.kernel, self.kernel, self.in_ch, self.out_ch)
+
+    def n_params(self, with_bias: bool = True) -> int:
+        n = 1
+        for d in self.weight_shape():
+            n *= d
+        return n + (self.out_ch if with_bias else 0)
+
+    def macs(self, h: int, w: int) -> int:
+        """Multiply-accumulates to produce an (h, w) output map."""
+        if self.kind == DW:
+            return h * w * self.kernel * self.kernel * self.in_ch
+        if self.kind == DENSE:
+            return self.in_ch * self.out_ch
+        return h * w * self.kernel * self.kernel * self.in_ch * self.out_ch
+
+
+@dataclasses.dataclass(frozen=True)
+class SESpec:
+    """Squeeze-and-Excitation (EfficientNet IRB, Fig. 3b): global-avg ->
+    PW-SQ (reduce) -> PW-EX (expand) -> hard-sigmoid gate."""
+
+    channels: int
+    reduced: int
+    bits: int = 4
+    prefix: str = "se"
+
+    @property
+    def squeeze(self) -> OpSpec:
+        return OpSpec(
+            f"{self.prefix}/pw_sq", PW, self.channels, self.reduced,
+            act=RELU6, bits=self.bits, act_bits=self.bits,
+        )
+
+    @property
+    def excite(self) -> OpSpec:
+        return OpSpec(
+            f"{self.prefix}/pw_ex", PW, self.reduced, self.channels,
+            act=HSIGMOID, bits=self.bits, act_bits=self.bits,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """A fusable group of operators — the unit the compiler maps to one CU
+    invocation. `residual` adds the skip-line (Fig. 3) when shapes permit."""
+
+    name: str
+    ops: Tuple[OpSpec, ...]
+    residual: bool = False
+    se: Optional[SESpec] = None  # SE applied after the depthwise op
+    se_after: Optional[str] = None  # op name the SE gate follows
+    avgpool: bool = False  # global average pool after the ops (Tail CU)
+
+    @property
+    def stride(self) -> int:
+        s = 1
+        for op in self.ops:
+            s *= op.stride
+        return s
+
+    @property
+    def in_ch(self) -> int:
+        return self.ops[0].in_ch
+
+    @property
+    def out_ch(self) -> int:
+        return self.ops[-1].out_ch
+
+
+@dataclasses.dataclass(frozen=True)
+class NetSpec:
+    """Whole-network description (the front-end's 'network description model')."""
+
+    name: str
+    blocks: Tuple[BlockSpec, ...]
+    input_hw: int
+    input_ch: int = 3
+    num_classes: int = 1000
+
+    def all_ops(self):
+        for b in self.blocks:
+            for op in b.ops:
+                yield b, op
+            if b.se is not None:
+                yield b, b.se.squeeze
+                yield b, b.se.excite
+
+    def n_params(self, with_bias: bool = True) -> int:
+        return sum(op.n_params(with_bias) for _, op in self.all_ops())
+
+    def model_bits(self, with_bias: bool = True, bias_bits: int = 32) -> int:
+        """Model size in bits with per-op BW — reproduces Table 2 Params(Mb)."""
+        total = 0
+        for _, op in self.all_ops():
+            n = op.n_params(with_bias=False)
+            total += n * op.bits
+            if with_bias:
+                total += op.out_ch * bias_bits
+        return total
+
+    def count_macs(self) -> int:
+        """Total MACs for one input image (Table 2 '#Ops')."""
+        h = self.input_hw
+        total = 0
+        for b in self.blocks:
+            for op in b.ops:
+                if op.kind == DENSE:
+                    total += op.macs(1, 1)
+                    continue
+                h_out = -(-h // op.stride)  # ceil div, SAME padding
+                total += op.macs(h_out, h_out)
+                h = h_out
+            if b.se is not None:
+                # SE convs act on 1x1 pooled features
+                total += b.se.squeeze.macs(1, 1) + b.se.excite.macs(1, 1)
+        return total
+
+    def count_bn_ops(self) -> int:
+        """Elementwise ops the (unfused) BN layers would add — the ~4% claim."""
+        h = self.input_hw
+        total = 0
+        for b in self.blocks:
+            for op in b.ops:
+                if op.kind == DENSE:
+                    continue
+                h_out = -(-h // op.stride)
+                total += 2 * h_out * h_out * op.out_ch  # scale + shift per element
+                h = h_out
+        return total
+
+
+__all__ = [
+    "OpSpec",
+    "SESpec",
+    "BlockSpec",
+    "NetSpec",
+    "CONV",
+    "DW",
+    "PW",
+    "DENSE",
+    "RELU6",
+    "NONE",
+    "HSIGMOID",
+]

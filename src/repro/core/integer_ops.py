@@ -1,0 +1,145 @@
+"""Integer inference arithmetic — the Approximator & Clip unit (Sec. 4.1).
+
+The FPGA datapath performs:  int MACs -> int32 accumulator -> requantize
+(truncate/round by a per-channel multiplier) -> clip to [0, 2^BW - 1]
+(which doubles as the fused ReLU6).
+
+Number system (weights symmetric per out channel, activations asymmetric):
+
+    x  = S_x * (x_q + z_x)            x_q in [0, 2^BW-1]
+    w  = S_w[c] * w_q                  w_q in [-(2^{BW-1}-1), 2^{BW-1}-1]
+    y  = conv(x, w) + b
+    y_q = clip( round( M[c] * (acc[c] + z_x * wsum[c]) + b_q[c] ), 0, qmax )
+
+with    acc  = sum x_q * w_q          (pure integer MACs)
+        wsum = sum w_q                (folded at compile time)
+        M[c] = S_x * S_w[c] / S_y     (the requant multiplier)
+        b_q  = b / S_y                (bias pre-scaled into output units)
+
+Two requantization modes are provided:
+  * float multiplier (what XLA would do on TPU with an f32 epilogue), and
+  * fixed-point: M ~= m * 2^-shift with m an int32 mantissa — the faithful
+    model of the FPGA's integer 'Approximator' (round-half-up truncation).
+
+Both are validated against each other and against the dequantized float path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def quantize_multiplier(m: np.ndarray, bits: int = 31) -> Tuple[np.ndarray, np.ndarray]:
+    """Decompose positive float multiplier(s) M into (mantissa, shift) with
+    M ~= mantissa * 2^-shift, mantissa in [2^(bits-1), 2^bits)."""
+    m = np.asarray(m, np.float64)
+    if np.any(m <= 0):
+        raise ValueError("requant multiplier must be positive")
+    exp = np.ceil(np.log2(m))
+    mant = m / np.exp2(exp)  # in (0.5, 1]
+    mantissa = np.round(mant * (1 << bits)).astype(np.int64)
+    # handle mant == 1.0 rounding up to 2^bits
+    overflow = mantissa == (1 << bits)
+    mantissa = np.where(overflow, mantissa >> 1, mantissa)
+    exp = np.where(overflow, exp + 1, exp)
+    shift = (bits - exp).astype(np.int32)
+    return mantissa, shift
+
+
+def requantize_fixedpoint(
+    acc: jnp.ndarray, mantissa: jnp.ndarray, shift: jnp.ndarray
+) -> jnp.ndarray:
+    """y = round(acc * mantissa * 2^-shift) using only integer ops (int64 wide)."""
+    wide = acc.astype(jnp.int64) * mantissa.astype(jnp.int64)
+    # round half away from zero, like the FPGA 'Approximator' rounding mode
+    sh = shift.astype(jnp.int64)
+    bias = jnp.where(wide >= 0, jnp.int64(1), jnp.int64(-1)) << jnp.maximum(sh - 1, 0)
+    bias = jnp.where(sh > 0, bias, 0)
+    return ((wide + bias) >> sh).astype(jnp.int32)
+
+
+def requantize_float(acc: jnp.ndarray, mult: jnp.ndarray) -> jnp.ndarray:
+    return jnp.round(acc.astype(jnp.float32) * mult).astype(jnp.int32)
+
+
+def clip_act(y_q: jnp.ndarray, qmax: int) -> jnp.ndarray:
+    """The Clip unit == fused ReLU6 (Sec. 3: h^pq maps [0,6] onto [0, qmax])."""
+    return jnp.clip(y_q, 0, qmax)
+
+
+# ---------------------------------------------------------------------------
+# Integer operator bodies (used by the CU runners and as kernel oracles).
+# Layouts: activations NHWC, conv weights HWIO, depthwise HWC1, linear [Din,Dout].
+# ---------------------------------------------------------------------------
+
+
+def int_conv2d(
+    x_q: jnp.ndarray,
+    w_q: jnp.ndarray,
+    stride: int = 1,
+    padding: str = "SAME",
+    groups: int = 1,
+) -> jnp.ndarray:
+    """Integer convolution with int32 accumulation (normal / group / depthwise)."""
+    return jax.lax.conv_general_dilated(
+        x_q.astype(jnp.int32),
+        w_q.astype(jnp.int32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+        preferred_element_type=jnp.int32,
+    )
+
+
+def int_pointwise(x_q: jnp.ndarray, w_q: jnp.ndarray) -> jnp.ndarray:
+    """Pointwise conv == matmul over the channel axis (the paper's systolic fit)."""
+    return jax.lax.dot_general(
+        x_q.astype(jnp.int32),
+        w_q.astype(jnp.int32),
+        (((x_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def quantized_op_epilogue(
+    acc: jnp.ndarray,
+    z_x: jnp.ndarray,
+    wsum: jnp.ndarray,
+    bias_q: jnp.ndarray,
+    mult: jnp.ndarray,
+    qmax: int,
+    z_y: jnp.ndarray = 0,
+    fixed_point: bool = False,
+    mantissa: Optional[jnp.ndarray] = None,
+    shift: Optional[jnp.ndarray] = None,
+    clip_output: bool = True,
+) -> jnp.ndarray:
+    """acc -> requant -> (+bias) -> clip. Matches Fig. 8's Approximator & Clip.
+
+    bias_q is expressed in output-quant units (b / S_y), already rounded.
+    z_y is the output zero point (0 when ReLU6 is fused, Sec. 3).
+    """
+    corrected = acc + z_x.astype(jnp.int32) * wsum.astype(jnp.int32)
+    if fixed_point:
+        y = requantize_fixedpoint(corrected, mantissa, shift)
+    else:
+        y = requantize_float(corrected, mult)
+    y = y + bias_q.astype(jnp.int32) - jnp.asarray(z_y, jnp.int32)
+    if clip_output:
+        y = clip_act(y, qmax)
+    return y
+
+
+__all__ = [
+    "quantize_multiplier",
+    "requantize_fixedpoint",
+    "requantize_float",
+    "clip_act",
+    "int_conv2d",
+    "int_pointwise",
+    "quantized_op_epilogue",
+]

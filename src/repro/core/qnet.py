@@ -1,0 +1,232 @@
+"""QNet — the front-end's output artifact (Fig. 1, Fig. 4).
+
+A QNet holds, for every convolutional operator of the network:
+  * integer weights (symmetric per-output-channel, int8 storage; packed int4
+    for BW<=4 available via `quant.pack_int4`),
+  * the per-channel requantization multipliers M = S_x * S_w / S_y (both as
+    float and as fixed-point mantissa/shift pairs for the faithful FPGA
+    'Approximator' model),
+  * folded constants: wsum (zero-point correction) and bias_q (bias in output
+    units), and
+  * the activation quantizers — with ReLU6 *fused*: ReLU6-activated ops use
+    h^pq: [0,6] -> [0, 2^BW - 1] so the integer clip is the activation.
+
+`quantize_net` converts (float params [+ observers from calibration]) into a
+QNet; `core/cu.py` executes it with pure integer arithmetic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graph as G
+from repro.core.calibrate import ActObserver, relu6_fused_qparams
+from repro.core.integer_ops import quantize_multiplier
+from repro.core.quant import QuantConfig, compute_scale_zp, observe_range, quantize
+
+
+@dataclasses.dataclass
+class QOp:
+    """One quantized operator + all folded metadata (per-channel)."""
+
+    spec: G.OpSpec
+    w_q: np.ndarray  # int8, original weight shape
+    w_scale: np.ndarray  # [M]
+    wsum: np.ndarray  # [M] int32 — sum of w_q over reduction axes
+    bias_q: np.ndarray  # [M] int32 — round(b / S_y)
+    in_scale: float
+    in_zp: float
+    out_scale: float
+    out_zp: float
+    mult: np.ndarray  # [M] float — S_x * S_w / S_y
+    mantissa: np.ndarray  # [M] int64 fixed-point mantissa
+    shift: np.ndarray  # [M] int32 fixed-point shift
+    clip: bool  # True when ReLU6 is fused (clip == activation)
+
+    @property
+    def qmax(self) -> int:
+        return 2**self.spec.act_bits - 1
+
+
+@dataclasses.dataclass
+class QNet:
+    spec: G.NetSpec
+    ops: Dict[str, QOp]
+    # per residual block: (out_scale, out_zp) of the post-add tensor
+    res_q: Dict[str, Tuple[float, float]] = dataclasses.field(default_factory=dict)
+
+    def model_bytes(self) -> int:
+        """Packed model size in bytes (weights at their BW + int32 bias/meta)."""
+        total = 0
+        for name, qop in self.ops.items():
+            n = int(np.prod(qop.w_q.shape))
+            total += (n * qop.spec.bits + 7) // 8
+            total += qop.bias_q.size * 4
+        return total
+
+
+def _weight_qparams(w: np.ndarray, op: G.OpSpec) -> Tuple[np.ndarray, np.ndarray]:
+    cfg = QuantConfig(op.bits, symmetric=True, channel_axis=-1)
+    mn, mx = observe_range(jnp.asarray(w), cfg)
+    scale, zp = compute_scale_zp(mn, mx, cfg)
+    q = quantize(jnp.asarray(w), scale, zp, cfg)
+    return np.asarray(q, np.int8), np.asarray(scale)
+
+
+def _act_qparams(
+    op: G.OpSpec, observer: Optional[ActObserver]
+) -> Tuple[float, float]:
+    """Output activation quantizer: ReLU6-fused for relu6 ops (h^pq), or
+    calibration-derived asymmetric for linear / hsigmoid outputs."""
+    acfg = QuantConfig(op.act_bits, symmetric=False, channel_axis=None)
+    if op.act == G.RELU6:
+        s, z = relu6_fused_qparams(acfg)
+        return float(s), float(z)
+    if op.act == G.HSIGMOID:
+        return 1.0 / acfg.qmax, 0.0  # gate output range is exactly [0, 1]
+    if observer is None:
+        raise ValueError(f"calibration observer required for linear op {op.name}")
+    s, z = observer.qparams(acfg)
+    return float(s), float(z)
+
+
+def quantize_net(
+    params,
+    net: G.NetSpec,
+    observers: Dict[str, ActObserver],
+    input_range: Tuple[float, float] = (-1.0, 1.0),
+    input_bits: int = 8,
+) -> QNet:
+    """Post-training model quantization: float params + calibration -> QNet."""
+    qops: Dict[str, QOp] = {}
+    res_q: Dict[str, Tuple[float, float]] = {}
+    in_cfg = QuantConfig(input_bits, symmetric=False, channel_axis=None)
+    in_scale, in_zp = compute_scale_zp(
+        jnp.asarray(input_range[0]), jnp.asarray(input_range[1]), in_cfg
+    )
+    cur_scale, cur_zp = float(in_scale), float(in_zp)
+
+    for block in net.blocks:
+        for op in block.ops:
+            cur_scale, cur_zp = _quantize_op(
+                qops, params, op, cur_scale, cur_zp, observers
+            )
+            if block.se is not None and block.se_after == op.name:
+                # SE branch: squeeze reads the dw output quantizer; excite
+                # reads squeeze's; the hsigmoid gate output is [0,1] and the
+                # gated tensor keeps the dw quantizer (gating only shrinks).
+                s1, z1 = _quantize_op(
+                    qops, params, block.se.squeeze, cur_scale, cur_zp, observers
+                )
+                _quantize_op(qops, params, block.se.excite, s1, z1, observers)
+        if block.residual:
+            obs = observers.get(block.name + "/residual")
+            if obs is None:
+                raise ValueError(
+                    f"residual block {block.name} needs a '/residual' observer"
+                )
+            acfg = QuantConfig(block.ops[-1].act_bits, symmetric=False, channel_axis=None)
+            s, z = obs.qparams(acfg)
+            res_q[block.name] = (float(s), float(z))
+            cur_scale, cur_zp = float(s), float(z)
+    return QNet(net, qops, res_q)
+
+
+def _quantize_op(qops, params, op: G.OpSpec, in_scale, in_zp, observers):
+    w = np.asarray(params[op.name]["w"], np.float64)
+    b = np.asarray(params[op.name]["b"], np.float64)
+    w_q, w_scale = _weight_qparams(w, op)
+    out_scale, out_zp = _act_qparams(op, observers.get(op.name))
+    red_axes = tuple(range(w_q.ndim - 1))
+    wsum = w_q.astype(np.int64).sum(axis=red_axes).astype(np.int32)
+    # fold the output zero-point into the bias (one rounding fewer:
+    # y_q = round(M*acc) + round(b/S_y - z_y) keeps error <= 1 LSB)
+    bias_q = np.round(b / out_scale - out_zp).astype(np.int32)
+    mult = np.asarray(in_scale * w_scale.astype(np.float64) / out_scale)
+    mantissa, shift = quantize_multiplier(mult)
+    qops[op.name] = QOp(
+        spec=op,
+        w_q=w_q,
+        w_scale=w_scale,
+        wsum=wsum,
+        bias_q=bias_q,
+        in_scale=float(in_scale),
+        in_zp=float(in_zp),
+        out_scale=float(out_scale),
+        out_zp=float(out_zp),
+        mult=mult,
+        mantissa=mantissa,
+        shift=shift,
+        clip=op.act in (G.RELU6, G.HSIGMOID),
+    )
+    return float(out_scale), float(out_zp)
+
+
+# ---------------------------------------------------------------------------
+# serialization — QNet is the deployment artifact, so it must round-trip
+# ---------------------------------------------------------------------------
+
+
+def save_qnet(qnet: QNet, path: str) -> None:
+    arrays = {}
+    meta = {"net": qnet.spec.name, "ops": {}}
+    for name, q in qnet.ops.items():
+        key = name.replace("/", "__")
+        arrays[f"{key}.w_q"] = q.w_q
+        arrays[f"{key}.w_scale"] = np.asarray(q.w_scale)
+        arrays[f"{key}.wsum"] = q.wsum
+        arrays[f"{key}.bias_q"] = q.bias_q
+        arrays[f"{key}.mult"] = np.asarray(q.mult)
+        arrays[f"{key}.mantissa"] = q.mantissa
+        arrays[f"{key}.shift"] = q.shift
+        meta["ops"][name] = {
+            "in_scale": q.in_scale,
+            "in_zp": q.in_zp,
+            "out_scale": q.out_scale,
+            "out_zp": q.out_zp,
+            "clip": q.clip,
+            "bits": q.spec.bits,
+        }
+    meta["res_q"] = qnet.res_q
+    buf = io.BytesIO()
+    np.savez_compressed(buf, **arrays)
+    with open(path, "wb") as f:
+        f.write(len(json.dumps(meta)).to_bytes(8, "little"))
+        f.write(json.dumps(meta).encode())
+        f.write(buf.getvalue())
+
+
+def load_qnet(path: str, net: G.NetSpec) -> QNet:
+    with open(path, "rb") as f:
+        n = int.from_bytes(f.read(8), "little")
+        meta = json.loads(f.read(n).decode())
+        arrays = np.load(io.BytesIO(f.read()))
+    qops = {}
+    specs = {op.name: op for _, op in net.all_ops()}
+    for name, m in meta["ops"].items():
+        key = name.replace("/", "__")
+        qops[name] = QOp(
+            spec=specs[name],
+            w_q=arrays[f"{key}.w_q"],
+            w_scale=arrays[f"{key}.w_scale"],
+            wsum=arrays[f"{key}.wsum"],
+            bias_q=arrays[f"{key}.bias_q"],
+            in_scale=m["in_scale"],
+            in_zp=m["in_zp"],
+            out_scale=m["out_scale"],
+            out_zp=m["out_zp"],
+            mult=arrays[f"{key}.mult"],
+            mantissa=arrays[f"{key}.mantissa"],
+            shift=arrays[f"{key}.shift"],
+            clip=m["clip"],
+        )
+    res_q = {k: tuple(v) for k, v in meta.get("res_q", {}).items()}
+    return QNet(net, qops, res_q)
+
+
+__all__ = ["QOp", "QNet", "quantize_net", "save_qnet", "load_qnet"]

@@ -1,0 +1,204 @@
+"""Range-based linear quantization (DeepDive front-end, Sec. 3.2).
+
+Implements the paper's quantizer family:
+
+  * asymmetric:  [min_x, max_x] -> [0, 2^BW - 1]           (Eq. 7 mapping)
+  * symmetric :  [-max|x|, max|x|] -> [-(2^BW-1), 2^BW-1 - 1]
+
+with either per-tensor or per-output-channel granularity, plus the
+fake-quantization (quantize->dequantize) operator used for online
+quantization-aware training with a straight-through estimator (STE).
+
+The convention follows Eq. 7 of the paper:  x = S * (x_q + m_zp),
+i.e. the stored integer is x_q and the zero point m_zp satisfies
+S * (q(0) + m_zp) == 0  =>  m_zp = -round(-min_x / S)  (asymmetric).
+
+All functions are pure and jit/vmap/grad-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static configuration of one quantizer (hashable; safe as a jit static arg)."""
+
+    bits: int = 4
+    symmetric: bool = False
+    # axis over which separate (scale, zp) pairs are kept; None = per-tensor.
+    # For conv weights [K,K,N,M] the paper's per-output-channel mode is axis=-1.
+    channel_axis: Optional[int] = None
+    # Narrow-range symmetric uses [-(2^{BW-1}-1), 2^{BW-1}-1] keeping 0 exact.
+    narrow_range: bool = True
+
+    @property
+    def qmin(self) -> int:
+        if self.symmetric:
+            return -(2 ** (self.bits - 1)) + (1 if self.narrow_range else 0)
+        return 0
+
+    @property
+    def qmax(self) -> int:
+        if self.symmetric:
+            return 2 ** (self.bits - 1) - 1
+        return 2**self.bits - 1
+
+    @property
+    def levels(self) -> int:
+        return self.qmax - self.qmin
+
+
+def _reduce_axes(x: jnp.ndarray, channel_axis: Optional[int]) -> Tuple[int, ...]:
+    if channel_axis is None:
+        return tuple(range(x.ndim))
+    axis = channel_axis % x.ndim
+    return tuple(a for a in range(x.ndim) if a != axis)
+
+
+def compute_scale_zp(
+    min_x: jnp.ndarray, max_x: jnp.ndarray, cfg: QuantConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Derive (S, m_zp) from observed ranges.
+
+    Returns float scale S and *integer-valued* (but float-dtype) zero point such
+    that  dequant(q) = S * (q + m_zp)  reproduces 0.0 exactly.
+    """
+    min_x = jnp.minimum(min_x, 0.0)  # range must include 0 so zp is representable
+    max_x = jnp.maximum(max_x, 0.0)
+    if cfg.symmetric:
+        amax = jnp.maximum(jnp.abs(min_x), jnp.abs(max_x))
+        scale = amax / cfg.qmax
+        scale = jnp.where(scale <= 0, 1.0, scale)
+        zp = jnp.zeros_like(scale)
+        return scale, zp
+    scale = (max_x - min_x) / cfg.levels
+    scale = jnp.where(scale <= 0, 1.0, scale)
+    # x = S*(x_q + m_zp); x=min at x_q=qmin=0  =>  m_zp = min_x / S
+    zp = jnp.round(min_x / scale)
+    return scale, zp
+
+
+def observe_range(
+    x: jnp.ndarray, cfg: QuantConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Min/max over everything but the channel axis (calibration observer)."""
+    axes = _reduce_axes(x, cfg.channel_axis)
+    return jnp.min(x, axis=axes), jnp.max(x, axis=axes)
+
+
+def _broadcast_qparams(
+    x: jnp.ndarray, scale: jnp.ndarray, zp: jnp.ndarray, cfg: QuantConfig
+):
+    if cfg.channel_axis is None:
+        return scale, zp
+    axis = cfg.channel_axis % x.ndim
+    shape = [1] * x.ndim
+    shape[axis] = -1
+    return scale.reshape(shape), zp.reshape(shape)
+
+
+def quantize(
+    x: jnp.ndarray, scale: jnp.ndarray, zp: jnp.ndarray, cfg: QuantConfig
+) -> jnp.ndarray:
+    """h: T -> Q. Returns integers stored in int32 (packing handled elsewhere)."""
+    s, z = _broadcast_qparams(x, scale, zp, cfg)
+    q = jnp.round(x / s - z)
+    return jnp.clip(q, cfg.qmin, cfg.qmax).astype(jnp.int32)
+
+
+def dequantize(
+    q: jnp.ndarray, scale: jnp.ndarray, zp: jnp.ndarray, cfg: QuantConfig
+) -> jnp.ndarray:
+    s, z = _broadcast_qparams(q, scale, zp, cfg)
+    return (q.astype(s.dtype) + z) * s
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fake_quant(x, scale, zp, cfg: QuantConfig):
+    """Quantize->dequantize with STE gradient (the 'online quantization' op).
+
+    Forward emulates the integer datapath exactly; backward passes gradients
+    straight through inside the representable range and zeroes them outside
+    (standard clipped-STE, matching QAT practice the paper builds on [11]).
+    """
+    q = quantize(x, scale, zp, cfg)
+    return dequantize(q, scale, zp, cfg)
+
+
+def _fake_quant_fwd(x, scale, zp, cfg):
+    s, z = _broadcast_qparams(x, scale, zp, cfg)
+    lo = (cfg.qmin + z) * s
+    hi = (cfg.qmax + z) * s
+    mask = jnp.logical_and(x >= lo, x <= hi)
+    return fake_quant(x, scale, zp, cfg), mask
+
+
+def _fake_quant_bwd(cfg, mask, g):
+    return (jnp.where(mask, g, 0.0), None, None)
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+def fake_quant_minmax(x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """Fake-quant using the tensor's own dynamic range (weight QAT path)."""
+    mn, mx = observe_range(x, cfg)
+    mn, mx = jax.lax.stop_gradient(mn), jax.lax.stop_gradient(mx)
+    scale, zp = compute_scale_zp(mn, mx, cfg)
+    return fake_quant(x, scale, zp, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Sub-byte packing: the FPGA synthesizes true BW-bit datapaths; on TPU we keep
+# BW-bit *storage* by packing into int8 words (2x for 4-bit, 8/3 for ~3-bit is
+# not byte-aligned, so 3/5/6-bit packs into the next dense power layout).
+# ---------------------------------------------------------------------------
+
+
+def pack_int4(q: jnp.ndarray) -> jnp.ndarray:
+    """Pack int32 values in [0,15] (or [-8,7]) pairwise into uint8, last axis.
+
+    Last axis must be even. Low nibble = even index, high nibble = odd index.
+    """
+    if q.shape[-1] % 2:
+        raise ValueError(f"last axis must be even for int4 packing: {q.shape}")
+    u = jnp.asarray(q, jnp.uint8) & 0xF
+    lo = u[..., 0::2]
+    hi = u[..., 1::2]
+    return lo | (hi << 4)
+
+
+def unpack_int4(p: jnp.ndarray, signed: bool = False) -> jnp.ndarray:
+    lo = (p & 0xF).astype(jnp.int32)
+    hi = ((p >> 4) & 0xF).astype(jnp.int32)
+    q = jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], p.shape[-1] * 2)
+    if signed:
+        q = jnp.where(q >= 8, q - 16, q)
+    return q
+
+
+def packed_nbytes(shape: Tuple[int, ...], bits: int) -> int:
+    """Model-size accounting used by the paper (Params are reported in Mbit)."""
+    n = int(np.prod(shape))
+    return (n * bits + 7) // 8
+
+
+__all__ = [
+    "QuantConfig",
+    "compute_scale_zp",
+    "observe_range",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "fake_quant_minmax",
+    "pack_int4",
+    "unpack_int4",
+    "packed_nbytes",
+]

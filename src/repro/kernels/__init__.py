@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the paper's compute hot-spots (see README.md):
+#   depthwise_conv  - the depthwise CU (Eq. 8 parallelism)
+#   fused_irb       - the fused Body CU (expanded intermediates stay in VMEM)
+#   quant_matmul    - W4/W8 pointwise/linear GEMM with in-register dequant
+#   decode_attention- flash-decode w/ grouped GQA + int8-KV (beyond paper)
+# Each has ops.py wrappers and ref.py oracles; tests assert allclose.

@@ -1,0 +1,33 @@
+"""Shared helpers for the quantized Pallas kernels.
+
+The epilogue implements the paper's Approximator & Clip unit (Fig. 8):
+int32 accumulator -> per-channel requant multiply -> round -> +bias -> clip
+to [0, 2^BW - 1] (== fused ReLU6 when the op is ReLU6-activated).
+
+`zcorr` is the folded zero-point correction M * z_x * wsum (a per-channel
+constant computed at QNet build time), so the kernel itself never sees the
+input zero point.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def requant_clip(acc, mult, zcorr, bias_q, qmax: int, clip: bool = True):
+    """acc:int32[..., C]; mult/zcorr:f32[C]; bias_q:i32[C] -> int8-range int32."""
+    y = jnp.round(acc.astype(jnp.float32) * mult + zcorr).astype(jnp.int32)
+    y = y + bias_q.astype(jnp.int32)
+    if clip:
+        y = jnp.clip(y, 0, qmax)
+    return y
+
+
+def same_pad_amount(size: int, kernel: int, stride: int):
+    """SAME padding (lo, hi) for one spatial dim."""
+    out = -(-size // stride)
+    total = max((out - 1) * stride + kernel - size, 0)
+    lo = total // 2
+    return lo, total - lo, out
+
+
+__all__ = ["requant_clip", "same_pad_amount"]

@@ -1,0 +1,107 @@
+"""Quantized depthwise convolution Pallas kernel (paper Sec. 4.1.1).
+
+FPGA original: a 3D line buffer streams input rows; a K x K sliding window
+with parallel read ports feeds K*K*N parallel MACs (Eq. 8); results pass the
+Approximator & Clip unit.
+
+TPU adaptation: depthwise conv has *no channel reduction*, so the natural TPU
+mapping is channel-tiled VMEM blocks with the K x K accumulation fully
+unrolled as shifted vector multiplies over the (rows, cols) plane — the VPU
+analogue of K*K*N parallel MACs; there is nothing for the MXU to do (that is
+the paper's point: systolic arrays waste FMAs on depthwise).
+
+Grid: (batch, channel_tiles). Each grid step holds one zero-padded image
+slab [Hp, Wp, bc] in VMEM, computes all H_out rows (the 'line buffer' is the
+VMEM slab; Pallas double-buffers the HBM->VMEM stream across grid steps),
+applies the per-channel requant epilogue and writes [H_out, W_out, bc].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import requant_clip
+
+
+def _dw_kernel(x_ref, w_ref, mult_ref, zcorr_ref, bias_ref, o_ref,
+               *, kernel: int, stride: int, h_out: int, w_out: int, qmax: int,
+               clip: bool):
+    x = x_ref[0].astype(jnp.int32)  # [Hp, Wp, bc]
+    w = w_ref[...].astype(jnp.int32)  # [K, K, bc]
+    acc = jnp.zeros((h_out, w_out, x.shape[-1]), jnp.int32)
+    # K x K unrolled shifted multiply-accumulate == the sliding window
+    for ki in range(kernel):
+        for kj in range(kernel):
+            patch = jax.lax.slice(
+                x,
+                (ki, kj, 0),
+                (ki + (h_out - 1) * stride + 1, kj + (w_out - 1) * stride + 1, x.shape[-1]),
+                (stride, stride, 1),
+            )
+            acc = acc + patch * w[ki, kj][None, None, :]
+    y = requant_clip(acc, mult_ref[...], zcorr_ref[...], bias_ref[...], qmax, clip)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kernel", "stride", "qmax", "clip", "block_c", "interpret"),
+)
+def depthwise_conv_q(
+    x_q: jnp.ndarray,  # [B, H, W, C] int8/int32 quantized activations (zp folded)
+    w_q: jnp.ndarray,  # [K, K, C] int8 symmetric per-channel weights
+    mult: jnp.ndarray,  # [C] f32 requant multiplier S_x*S_w/S_y
+    zcorr: jnp.ndarray,  # [C] f32 folded zero-point correction M*z_x*wsum
+    bias_q: jnp.ndarray,  # [C] i32 bias in output units
+    *,
+    kernel: int = 3,
+    stride: int = 1,
+    qmax: int = 15,
+    clip: bool = True,
+    block_c: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pallas depthwise conv with SAME padding. Returns int32 in [0, qmax]."""
+    b, h, w, c = x_q.shape
+    from repro.kernels.common import same_pad_amount
+
+    ph_lo, ph_hi, h_out = same_pad_amount(h, kernel, stride)
+    pw_lo, pw_hi, w_out = same_pad_amount(w, kernel, stride)
+    xp = jnp.pad(
+        x_q, ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0))
+    )  # dw input is ReLU6-fused quantized: zp == 0, so zero padding is exact
+    hp, wp = xp.shape[1], xp.shape[2]
+    bc = min(block_c, c)
+    if c % bc:
+        raise ValueError(f"channels {c} must be divisible by block_c {bc}")
+
+    grid = (b, c // bc)
+    out = pl.pallas_call(
+        functools.partial(
+            _dw_kernel,
+            kernel=kernel,
+            stride=stride,
+            h_out=h_out,
+            w_out=w_out,
+            qmax=qmax,
+            clip=clip,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, bc), lambda i, j: (i, 0, 0, j)),
+            pl.BlockSpec((kernel, kernel, bc), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((bc,), lambda i, j: (j,)),
+            pl.BlockSpec((bc,), lambda i, j: (j,)),
+            pl.BlockSpec((bc,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, h_out, w_out, bc), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, h_out, w_out, c), jnp.int32),
+        interpret=interpret,
+    )(xp, w_q, mult, zcorr, bias_q)
+    return out
+
+
+__all__ = ["depthwise_conv_q"]

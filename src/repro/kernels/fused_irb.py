@@ -1,0 +1,187 @@
+"""Fused Inverted-Residual-Block Pallas kernel — the Body CU (Sec. 4.2.3).
+
+FPGA original: the Body CU executes pointwise(expand) -> depthwise ->
+pointwise(project) *concurrently in a fused fashion*, streaming intermediate
+feature maps through FIFOs so the t*C-expanded tensor never reaches DDR.
+
+TPU adaptation: one `pallas_call` whose grid walks (batch, output-row strips).
+Per grid step it:
+  1. loads an input strip (with dw halo rows) from the VMEM-resident image,
+  2. expands it on the MXU (int8 matmul, int32 accum) + requant/clip (ReLU6),
+  3. zero-masks halo positions (== the dw's SAME zero padding, exact because
+     ReLU6-fused quantization has zero-point 0),
+  4. runs the K x K depthwise accumulation on the strip (VPU),
+  5. projects back down on the MXU + requant,
+  6. optionally adds the skip-line in integer arithmetic.
+
+The expanded intermediate exists ONLY as kernel-local values (VMEM/VREG) —
+the exact analogue of the paper's stream FIFOs. HBM traffic per block is
+input + output + weights instead of input + output + 2 x t-times-expanded
+intermediates; see benchmarks/bench_fusion.py for the traffic accounting.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import requant_clip, same_pad_amount
+
+
+def _irb_kernel(
+    x_ref,
+    w1_ref, m1_ref, c1_ref, b1_ref,
+    w2_ref, m2_ref, c2_ref, b2_ref,
+    w3_ref, m3_ref, c3_ref, b3_ref,
+    o_ref,
+    *,
+    kernel: int,
+    stride: int,
+    th: int,
+    h: int,
+    w: int,
+    pad_top: int,
+    pad_left: int,
+    qmax: int,
+    residual: bool,
+    res_consts,
+):
+    si = pl.program_id(1)
+    nrows = (th - 1) * stride + kernel
+    wp = x_ref.shape[2]
+    w_out = -(-w // stride)  # SAME
+
+    # ---- 1. input strip (includes dw halo; x is HBM-padded with dead rows) ----
+    row0 = si * th * stride
+    x = x_ref[0, pl.dslice(row0, nrows), :, :].astype(jnp.int32)  # [nrows, Wp, C]
+
+    # ---- 2. pointwise expansion on the strip (MXU) ----
+    c_in = x.shape[-1]
+    e_ch = w1_ref.shape[-1]
+    acc1 = jnp.dot(
+        x.reshape(-1, c_in), w1_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    ).reshape(nrows, wp, e_ch)
+    e = requant_clip(acc1, m1_ref[...], c1_ref[...], b1_ref[...], qmax, clip=True)
+
+    # ---- 3. zero-mask halo rows/cols (the dw SAME padding; zp == 0) ----
+    grow = row0 + jax.lax.broadcasted_iota(jnp.int32, (nrows, wp), 0)
+    gcol = jax.lax.broadcasted_iota(jnp.int32, (nrows, wp), 1)
+    valid = (
+        (grow >= pad_top) & (grow < pad_top + h)
+        & (gcol >= pad_left) & (gcol < pad_left + w)
+    )
+    e = jnp.where(valid[:, :, None], e, 0)
+
+    # ---- 4. depthwise K x K on the expanded strip (VPU) ----
+    w2 = w2_ref[...].astype(jnp.int32)  # [K, K, E]
+    acc2 = jnp.zeros((th, w_out, e_ch), jnp.int32)
+    for ki in range(kernel):
+        for kj in range(kernel):
+            patch = jax.lax.slice(
+                e,
+                (ki, kj, 0),
+                (ki + (th - 1) * stride + 1, kj + (w_out - 1) * stride + 1, e_ch),
+                (stride, stride, 1),
+            )
+            acc2 = acc2 + patch * w2[ki, kj][None, None, :]
+    d = requant_clip(acc2, m2_ref[...], c2_ref[...], b2_ref[...], qmax, clip=True)
+
+    # ---- 5. pointwise projection (MXU) ----
+    c_out = w3_ref.shape[-1]
+    acc3 = jnp.dot(
+        d.reshape(-1, e_ch), w3_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    ).reshape(th, w_out, c_out)
+    y = requant_clip(acc3, m3_ref[...], c3_ref[...], b3_ref[...], qmax, clip=True)
+
+    # ---- 6. skip-line (residual path, Fig. 3) ----
+    if residual:
+        a_mult, a_off, b_mult, b_off = res_consts
+        a = x_ref[0, pl.dslice(pad_top + si * th, th), pad_left : pad_left + w, :]
+        a = a.astype(jnp.float32) * a_mult + a_off
+        yb = y.astype(jnp.float32) * b_mult + b_off
+        y = jnp.clip(jnp.round(a + yb), 0, qmax).astype(jnp.int32)
+
+    o_ref[0] = y
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "kernel", "stride", "qmax", "residual", "res_consts", "block_h", "interpret",
+    ),
+)
+def fused_irb_q(
+    x_q: jnp.ndarray,  # [B, H, W, C] quantized activations
+    w1_q: jnp.ndarray,  # [C, E]   expand
+    mult1, zcorr1, bias1,  # [E]
+    w2_q: jnp.ndarray,  # [K, K, E] depthwise
+    mult2, zcorr2, bias2,  # [E]
+    w3_q: jnp.ndarray,  # [E, Co]  project
+    mult3, zcorr3, bias3,  # [Co]
+    *,
+    kernel: int = 3,
+    stride: int = 1,
+    qmax: int = 15,
+    residual: bool = False,
+    res_consts=None,  # (a_mult, a_off, b_mult, b_off) static floats
+    block_h: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, h, w, c = x_q.shape
+    e_ch = w1_q.shape[-1]
+    c_out = w3_q.shape[-1]
+    ph_lo, ph_hi, h_out = same_pad_amount(h, kernel, stride)
+    pw_lo, pw_hi, w_out = same_pad_amount(w, kernel, stride)
+    # pad so every strip's halo load is in range (values are masked, not read)
+    th = min(block_h, h_out)
+    while h_out % th:
+        th -= 1
+    max_row = (h_out // th - 1) * th * stride + (th - 1) * stride + kernel
+    extra = max(max_row - (ph_lo + h + ph_hi), 0)
+    xp = jnp.pad(x_q, ((0, 0), (ph_lo, ph_hi + extra), (pw_lo, pw_hi), (0, 0)))
+    hp, wp = xp.shape[1], xp.shape[2]
+
+    grid = (b, h_out // th)
+    kern = functools.partial(
+        _irb_kernel,
+        kernel=kernel,
+        stride=stride,
+        th=th,
+        h=h,
+        w=w,
+        pad_top=ph_lo,
+        pad_left=pw_lo,
+        qmax=qmax,
+        residual=residual,
+        res_consts=res_consts,
+    )
+    vec = lambda n: pl.BlockSpec((n,), lambda i, j: (0,))  # noqa: E731
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, c), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((c, e_ch), lambda i, j: (0, 0)),
+            vec(e_ch), vec(e_ch), vec(e_ch),
+            pl.BlockSpec((kernel, kernel, e_ch), lambda i, j: (0, 0, 0)),
+            vec(e_ch), vec(e_ch), vec(e_ch),
+            pl.BlockSpec((e_ch, c_out), lambda i, j: (0, 0)),
+            vec(c_out), vec(c_out), vec(c_out),
+        ],
+        out_specs=pl.BlockSpec((1, th, w_out, c_out), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h_out, w_out, c_out), jnp.int32),
+        interpret=interpret,
+    )(
+        xp,
+        w1_q, mult1, zcorr1, bias1,
+        w2_q, mult2, zcorr2, bias2,
+        w3_q, mult3, zcorr3, bias3,
+    )
+    return out
+
+
+__all__ = ["fused_irb_q"]

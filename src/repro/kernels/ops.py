@@ -1,0 +1,191 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These adapt QNet metadata (per-channel scales, zero-point corrections) into
+the raw kernel signatures, pick interpret mode automatically (CPU container
+-> interpret=True; real TPU -> compiled), and expose a float `quantized_linear`
+for the LM architectures (weight-only quantization, the paper's Sec. 3.2 math).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qnet import QOp, QNet
+from repro.core import graph as G
+from repro.core.quant import QuantConfig, compute_scale_zp, observe_range, quantize
+from repro.kernels import depthwise_conv as _dw
+from repro.kernels import fused_irb as _irb
+from repro.kernels import quant_matmul as _qmm
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _epilogue_consts(qop: QOp) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(mult, zcorr, bias') for the kernel epilogue.
+
+    kernel computes round(acc * mult + zcorr) + bias; z_y is already folded
+    into bias_q at QNet build time (see qnet._quantize_op).
+    """
+    mult = jnp.asarray(qop.mult, jnp.float32)
+    zcorr = jnp.asarray(qop.in_zp * qop.mult * qop.wsum, jnp.float32)
+    bias = jnp.asarray(qop.bias_q, jnp.int32)
+    return mult, zcorr, bias
+
+
+def run_dw_qop(x_q: jnp.ndarray, qop: QOp, interpret: Optional[bool] = None):
+    """Depthwise QNet op via the Pallas kernel."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    mult, zcorr, bias = _epilogue_consts(qop)
+    w = jnp.asarray(qop.w_q)  # [K, K, 1, C] -> [K, K, C]
+    w = w.reshape(w.shape[0], w.shape[1], w.shape[-1])
+    c = x_q.shape[-1]
+    bc = c
+    for cand in (128, 64, 32, 16, 8):
+        if c % cand == 0 and c >= cand:
+            bc = cand
+            break
+    return _dw.depthwise_conv_q(
+        x_q, w, mult, zcorr, bias,
+        kernel=qop.spec.kernel, stride=qop.spec.stride, qmax=qop.qmax,
+        clip=qop.clip, block_c=bc, interpret=interp,
+    )
+
+
+def run_irb_block(
+    x_q: jnp.ndarray,
+    block: G.BlockSpec,
+    qnet: QNet,
+    in_s: float,
+    in_z: float,
+    interpret: Optional[bool] = None,
+):
+    """Body-CU invocation: a full IRB through the fused Pallas kernel.
+
+    Only for expand->dw->project blocks (no SE). Returns (y_q, out_s, out_z).
+    """
+    interp = (not on_tpu()) if interpret is None else interpret
+    assert len(block.ops) == 3 and block.se is None
+    q1, q2, q3 = (qnet.ops[op.name] for op in block.ops)
+    m1, c1, b1 = _epilogue_consts(q1)
+    m2, c2, b2 = _epilogue_consts(q2)
+    m3, c3, b3 = _epilogue_consts(q3)
+    res_consts = None
+    out_s, out_z = q3.out_scale, q3.out_zp
+    if block.residual:
+        y_s, y_z = qnet.res_q[block.name]
+        res_consts = (
+            in_s / y_s,
+            in_s / y_s * in_z - round(y_z),
+            q3.out_scale / y_s,
+            q3.out_scale / y_s * q3.out_zp,
+        )
+        out_s, out_z = y_s, y_z
+    w2 = jnp.asarray(q2.w_q)
+    w2 = w2.reshape(w2.shape[0], w2.shape[1], w2.shape[-1])
+    y = _irb.fused_irb_q(
+        x_q,
+        jnp.asarray(q1.w_q)[0, 0] if q1.w_q.ndim == 4 else jnp.asarray(q1.w_q),
+        m1, c1, b1,
+        w2, m2, c2, b2,
+        jnp.asarray(q3.w_q)[0, 0] if q3.w_q.ndim == 4 else jnp.asarray(q3.w_q),
+        m3, c3, b3,
+        kernel=q2.spec.kernel,
+        stride=q2.spec.stride,
+        qmax=q3.qmax,
+        residual=block.residual,
+        res_consts=res_consts,
+        interpret=interp,
+    )
+    return y, out_s, out_z
+
+
+# ---------------------------------------------------------------------------
+# LM-side weight-only quantized linear (per-channel / grouped, BW in {4, 8})
+# ---------------------------------------------------------------------------
+
+
+def quantize_weight_for_matmul(
+    w: jnp.ndarray, bits: int = 4, group_size: Optional[int] = None
+):
+    """[K, N] float -> (w_q packed, scales [G, N]) symmetric per-(group, out)."""
+    k, n = w.shape
+    if group_size is None:
+        group_size = k
+    g = k // group_size
+    wg = w.reshape(g, group_size, n)
+    cfg = QuantConfig(bits, symmetric=True, channel_axis=None)
+    amax = jnp.max(jnp.abs(wg), axis=1)  # [G, N]
+    scale = jnp.where(amax > 0, amax / cfg.qmax, 1.0)
+    q = jnp.clip(jnp.round(wg / scale[:, None, :]), cfg.qmin, cfg.qmax)
+    q = q.reshape(k, n).astype(jnp.int32)
+    if bits == 4:
+        packed = _qmm.pack_int4(jnp.where(q < 0, q + 16, q).astype(jnp.int32))
+        return packed, scale
+    return q.astype(jnp.int8), scale
+
+
+def quantized_linear(
+    x: jnp.ndarray,
+    w_q: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    bits: int = 4,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """y = x @ dequant(w_q). x: [..., K]. Uses the Pallas quant_matmul."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    # pad M to a block multiple
+    bm = 128 if m >= 128 else m
+    pad = (-m) % bm
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    n = w_q.shape[1] * (2 if bits == 4 else 1)
+    bn = 128 if n % 128 == 0 else n
+    group = k // w_scale.shape[0]
+    bk = min(512, group) if group < 512 or group % 512 else 512
+    while k % bk or (group % bk and bk % group):
+        bk //= 2
+    y = _qmm.quant_matmul(
+        x2, w_q, w_scale, bits=bits, block_m=bm, block_n=bn, block_k=bk,
+        interpret=interp,
+    )
+    if pad:
+        y = y[:m]
+    return y.reshape(*lead, n).astype(x.dtype)
+
+
+def decode_attend(q, kv_cache, kv_len, interpret: Optional[bool] = None):
+    """Flash-decode attention over a model KV cache dict.
+
+    q: [B, 1, H, dh] (one new token); kv_cache: {"k","v"[,"k_scale","v_scale"]}
+    with k/v [B, S, KV, dh]. Returns [B, 1, H, dh].
+    """
+    from repro.kernels.decode_attention import decode_attention
+
+    interp = (not on_tpu()) if interpret is None else interpret
+    b, one, h, dh = q.shape
+    kv = kv_cache["k"].shape[2]
+    qg = q.reshape(b, kv, h // kv, dh)
+    out = decode_attention(
+        qg, kv_cache["k"], kv_cache["v"], kv_len,
+        kv_cache.get("k_scale"), kv_cache.get("v_scale"), interpret=interp)
+    return out.reshape(b, 1, h, dh)
+
+
+__all__ = [
+    "run_dw_qop",
+    "run_irb_block",
+    "quantize_weight_for_matmul",
+    "quantized_linear",
+    "decode_attend",
+    "on_tpu",
+]

@@ -1,0 +1,457 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may touch jax (device count is now locked to 512) ---
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from functools import partial  # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, get_config, reduced_config  # noqa: E402
+from repro.dist.sharding import named_sharding, tree_shardings, use_mesh  # noqa: E402
+from repro.launch import roofline as RL  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.plans import plan_for  # noqa: E402
+from repro.models.lm import model as M  # noqa: E402
+from repro.models.lm.config import SHAPES, LMConfig, ShapeSpec  # noqa: E402
+from repro.train import optimizer as O  # noqa: E402
+from repro.train.train_loop import make_train_step  # noqa: E402
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape x mesh) cell:
+  1. builds the full published config (ShapeDtypeStruct only — no alloc),
+  2. derives parameter/optimizer/cache shardings from the logical-axis tree,
+  3. jits the train/prefill/decode step with in/out shardings,
+  4. `.lower().compile()` — success proves the distribution config is
+     coherent (sharding propagation, collective legality, memory layout),
+  5. records memory_analysis / cost_analysis / collective-bytes into
+     experiments/dryrun/*.json for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+
+SKIP = "SKIP"
+
+
+def shape_by_name(name: str) -> ShapeSpec:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def cell_status(cfg: LMConfig, shape: ShapeSpec) -> str:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return SKIP  # quadratic full attention at 512k context — excluded
+    return "run"
+
+
+def input_specs(cfg: LMConfig, shape: ShapeSpec):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f = jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+    if shape.mode == "train":
+        batch = {"tokens": sds((b, s), i32)}
+        if cfg.family == "vlm":
+            batch["embeds"] = sds((b, cfg.frontend_len, cfg.d_model), f)
+        if cfg.family in ("encdec", "audio"):
+            batch["enc_inputs"] = sds((b, cfg.frontend_len, cfg.d_model), f)
+        return batch
+    if shape.mode == "prefill":
+        batch = {"tokens": sds((b, s), i32)}
+        if cfg.family == "vlm":
+            batch["embeds"] = sds((b, cfg.frontend_len, cfg.d_model), f)
+        if cfg.family in ("encdec", "audio"):
+            batch["enc_inputs"] = sds((b, cfg.frontend_len, cfg.d_model), f)
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    batch = {"token": sds((b, 1), i32), "pos": sds((), i32)}
+    return batch
+
+
+def fitted(mesh, axes, leaf):
+    from repro.dist.sharding import _fit_spec_to_shape, logical_to_spec
+    from jax.sharding import NamedSharding
+    spec = _fit_spec_to_shape(logical_to_spec(axes, mesh), leaf.shape, mesh)
+    return NamedSharding(mesh, spec)
+
+
+def batch_shardings(batch, mesh):
+    def spec(name, leaf):
+        if name == "pos":
+            return named_sharding(mesh, ())
+        return fitted(mesh, ("batch",) + (None,) * (leaf.ndim - 1), leaf)
+
+    return {k: spec(k, v) for k, v in batch.items()}
+
+
+def cache_shardings(cache_shapes, mesh):
+    """Path-keyed shardings for KV/recurrent caches (shape-fitted)."""
+    from repro.dist.sharding import _fit_spec_to_shape, logical_to_spec
+    from jax.sharding import NamedSharding
+
+    def mk(axes, leaf):
+        spec = _fit_spec_to_shape(
+            logical_to_spec(axes, mesh), leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    def one(path, leaf):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = leaf.ndim
+        if key == "pos":
+            return mk((None,) * nd, leaf)
+        if key in ("k", "v"):
+            # [(L,)? B, S, KV, hd]
+            lead = (None,) * (nd - 4)
+            return mk((*lead, "batch", None, "heads", None), leaf)
+        if key in ("k_scale", "v_scale"):
+            lead = (None,) * (nd - 3)
+            return mk((*lead, "batch", None, "heads"), leaf)
+        if key == "ssd":
+            lead = (None,) * (nd - 4)
+            return mk((*lead, "batch", "heads", None, None), leaf)
+        if key == "conv":
+            lead = (None,) * (nd - 3)
+            return mk((*lead, "batch", None, "ffn"), leaf)
+        if key == "h":
+            lead = (None,) * (nd - 2)
+            return mk((*lead, "batch", "ffn"), leaf)
+        return mk((None,) * nd, leaf)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def _opt_state_shardings(param_sh, m_shapes, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def _is_q(x):
+        return isinstance(x, dict) and set(x) in (
+            {"q", "scale"}, {"q", "scale", "zero"})
+
+    def one(p_sh, m_leaf):
+        if _is_q(m_leaf):  # int8 state: q shares param spec, scale per-row
+            spec = p_sh.spec
+            first = spec[0] if len(spec) else None
+            nd = m_leaf["scale"].ndim
+            scale_spec = P(first, *([None] * (nd - 1))) if nd else P()
+            out = {"q": p_sh, "scale": NamedSharding(mesh, scale_spec)}
+            if "zero" in m_leaf:
+                out["zero"] = NamedSharding(mesh, scale_spec)
+            return out
+        return p_sh
+
+    # m_shapes mirrors params 1:1 once int8 dicts are treated as leaves
+    flat_p, pdef = jax.tree.flatten(param_sh)
+    flat_m = jax.tree.flatten(m_shapes, is_leaf=_is_q)[0]
+    return pdef.unflatten([one(p, m) for p, m in zip(flat_p, flat_m)])
+
+
+def build_param_machinery(cfg: LMConfig, arch: str, mesh, fsdp: bool):
+    key = jax.random.PRNGKey(0)
+    param_shapes = jax.eval_shape(lambda k: M.init_params(cfg, k)[0], key)
+    # logical tree from a structure-preserving reduced config (tiny, real
+    # init) — must carry every flag that changes the PARAM TREE STRUCTURE
+    rcfg = dataclasses.replace(
+        reduced_config(arch), quant_bits=cfg.quant_bits, remat=cfg.remat,
+        rglru_diagonal_gates=cfg.rglru_diagonal_gates)
+    _, logical = M.init_params(rcfg, key)
+    param_sh = tree_shardings(logical, mesh, fsdp=fsdp, shapes=param_shapes)
+    return param_shapes, param_sh, logical
+
+
+def build_cfg(arch: str, shape: ShapeSpec, plan, *, scan_unroll: bool,
+              depth: Optional[int] = None) -> LMConfig:
+    is_train = shape.mode == "train"
+    cfg = get_config(
+        arch,
+        remat=plan.remat if is_train else "none",
+        quant_bits=None if is_train else plan.quant_bits,
+        kv_bits=None if is_train else plan.kv_bits,
+        rglru_diagonal_gates=plan.rglru_diagonal_gates,
+        rglru_chunk=plan.rglru_chunk,
+        scan_unroll=scan_unroll,
+    )
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, capacity_factor=plan.capacity_factor)
+    if plan.ssm_chunk and cfg.family == "ssm":
+        cfg = dataclasses.replace(cfg, ssm_chunk=plan.ssm_chunk)
+    if depth is not None:
+        if cfg.family in ("encdec", "audio"):
+            cfg = dataclasses.replace(
+                cfg, n_layers=2 * depth, n_enc_layers=depth,
+                n_dec_layers=depth)
+        else:
+            cfg = dataclasses.replace(cfg, n_layers=depth)
+    return cfg
+
+
+def depth_points(cfg: LMConfig):
+    """(L1, L2, n_super_full): depths with 1 and 2 super-blocks (+ tail),
+    and the full super-block count, for the two-point extrapolation
+    (per-layer HLO cost is exactly linear in the super-block count)."""
+    if cfg.family in ("encdec", "audio"):
+        return 1, 2, cfg.n_enc_layers
+    kinds = M.layer_kinds(cfg)
+    pat, n_super, tail = M._kind_groups(kinds)
+    p, t = len(pat), len(tail)
+    return p + t, 2 * p + t, n_super
+
+
+def lower_cell(arch: str, shape: ShapeSpec, *, multi_pod: bool,
+               plan_overrides=None, scan_unroll: bool = True,
+               depth: Optional[int] = None):
+    plan = plan_for(arch, **(plan_overrides or {}))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    cfg = build_cfg(arch, shape, plan, scan_unroll=scan_unroll, depth=depth)
+    status = cell_status(cfg, shape)
+    if status == SKIP:
+        return {"status": "skipped",
+                "reason": "quadratic attention at 512k context"}
+
+    param_shapes, param_sh, logical = build_param_machinery(
+        cfg, arch, mesh, plan.fsdp)
+    batch = input_specs(cfg, shape)
+    batch_sh = batch_shardings(batch, mesh)
+
+    accum_mult = 1
+    with use_mesh(mesh, fsdp=plan.fsdp):
+        if shape.mode == "train":
+            opt_cfg = O.AdamWConfig(state_bits=plan.opt_bits)
+            opt_shapes = jax.eval_shape(
+                partial(O.init_state, state_bits=plan.opt_bits), param_shapes)
+            # AdamW m/v inherit the param shardings (TP [+FSDP] — ZeRO-style);
+            # int8 state leaves are {"q","scale"}: q shares the param spec,
+            # the per-row scale keeps only the first-axis sharding.
+            m_sh = _opt_state_shardings(param_sh, opt_shapes.m, mesh)
+            v_sh = _opt_state_shardings(param_sh, opt_shapes.v, mesh)
+            opt_sh = O.AdamWState(named_sharding(mesh, ()), m_sh, v_sh)
+            # Lower ONE microbatch and scale the roofline terms by grad_accum
+            # analytically (unrolling the accumulation loop would multiply
+            # HLO size for zero extra information; memory_analysis of the
+            # microbatch step is the per-step peak that matters).
+            accum_mult = plan.grad_accum
+            if plan.grad_accum > 1:
+                mb = {k: jax.ShapeDtypeStruct(
+                    (v.shape[0] // plan.grad_accum, *v.shape[1:]), v.dtype)
+                    for k, v in batch.items()}
+                batch = mb
+                batch_sh = batch_shardings(batch, mesh)
+            step_fn = make_train_step(
+                cfg, opt_cfg, grad_accum=1,
+                accum_dtype=jnp.dtype(plan.accum_dtype))
+            fn = jax.jit(
+                step_fn,
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                out_shardings=(param_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(param_shapes, opt_shapes, batch)
+        elif shape.mode == "prefill":
+            max_len = shape.seq_len + (
+                cfg.frontend_len if cfg.family == "vlm" else 0)
+
+            def prefill_fn(params, batch):
+                return M.prefill(
+                    params, cfg, batch["tokens"], max_len=max_len,
+                    embeds=batch.get("embeds"),
+                    enc_inputs=batch.get("enc_inputs"))
+
+            cache_shapes = jax.eval_shape(
+                lambda: M.init_cache(cfg, shape.global_batch, max_len,
+                                     enc_len=cfg.frontend_len))
+            cache_sh = cache_shardings(cache_shapes, mesh)
+            logits_shape = jax.ShapeDtypeStruct(
+                (shape.global_batch, 1, M.padded_vocab(cfg)), jnp.bfloat16)
+            logits_sh = fitted(mesh, ("batch", None, "vocab"), logits_shape)
+            fn = jax.jit(
+                prefill_fn,
+                in_shardings=(param_sh, batch_sh),
+                out_shardings=(logits_sh, cache_sh),
+            )
+            lowered = fn.lower(param_shapes, batch)
+        else:  # decode
+            max_len = shape.seq_len
+            cache_shapes = jax.eval_shape(
+                lambda: M.init_cache(cfg, shape.global_batch, max_len,
+                                     enc_len=cfg.frontend_len))
+            cache_sh = cache_shardings(cache_shapes, mesh)
+            logits_shape = jax.ShapeDtypeStruct(
+                (shape.global_batch, 1, M.padded_vocab(cfg)), jnp.bfloat16)
+            logits_sh = fitted(mesh, ("batch", None, "vocab"), logits_shape)
+
+            def decode_fn(params, token, caches, pos):
+                return M.decode_step(params, cfg, token, caches, pos)
+
+            fn = jax.jit(
+                decode_fn,
+                in_shardings=(param_sh, batch_sh["token"], cache_sh,
+                              batch_sh["pos"]),
+                out_shardings=(logits_sh, cache_sh),
+                donate_argnums=(2,),
+            )
+            lowered = fn.lower(
+                param_shapes, batch["token"], cache_shapes, batch["pos"])
+
+    return {"status": "lowered", "lowered": lowered, "cfg": cfg,
+            "n_dev": n_dev, "plan": dataclasses.asdict(plan),
+            "accum_mult": accum_mult}
+
+
+def _extrapolate(r1, r2, n_super: int) -> "RL.Roofline":
+    """full = r(L1) + (n_super - 1) * (r(L2) - r(L1)); exact because per-
+    super-block HLO cost is linear in the super-block count."""
+    k = n_super - 1
+    detail = {
+        key: int(r1.coll_detail.get(key, 0)
+                 + k * (r2.coll_detail.get(key, 0) - r1.coll_detail.get(key, 0)))
+        for key in set(r1.coll_detail) | set(r2.coll_detail)
+    }
+    return RL.Roofline(
+        flops=r1.flops + k * (r2.flops - r1.flops),
+        hbm_bytes=r1.hbm_bytes + k * (r2.hbm_bytes - r1.hbm_bytes),
+        coll_bytes=r1.coll_bytes + k * (r2.coll_bytes - r1.coll_bytes),
+        coll_detail=detail,
+        n_devices=r1.n_devices,
+    )
+
+
+def run_cell(arch: str, shape: ShapeSpec, *, multi_pod: bool, out_dir: str,
+             plan_overrides=None, tag: str = "", method: str = "twopoint"):
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"{arch}__{shape.name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    t0 = time.time()
+    try:
+        if method == "twopoint":
+            # cost terms: two shallow UNROLLED lowerings, extrapolated
+            # exactly in depth; memory + compile-proof: the FULL config,
+            # production (scanned) lowering.
+            plan = plan_for(arch, **(plan_overrides or {}))
+            cfg_probe = build_cfg(arch, shape, plan, scan_unroll=False)
+            if cell_status(cfg_probe, shape) == SKIP:
+                res = {"status": "skipped",
+                       "reason": "quadratic attention at 512k context"}
+            else:
+                l1, l2, n_super = depth_points(cfg_probe)
+                rs = []
+                for d in (l1, l2):
+                    rv = lower_cell(arch, shape, multi_pod=multi_pod,
+                                    plan_overrides=plan_overrides,
+                                    scan_unroll=True, depth=d)
+                    rs.append(RL.from_compiled(rv["lowered"].compile(),
+                                               rv["n_dev"]))
+                res = lower_cell(arch, shape, multi_pod=multi_pod,
+                                 plan_overrides=plan_overrides,
+                                 scan_unroll=False)
+                res["roofline_obj"] = _extrapolate(rs[0], rs[1], n_super)
+        else:  # method == "unroll": single fully-unrolled lowering
+            res = lower_cell(arch, shape, multi_pod=multi_pod,
+                             plan_overrides=plan_overrides, scan_unroll=True)
+        if res["status"] == "skipped":
+            report = {"cell": cell_id, "status": "skipped",
+                      "reason": res["reason"]}
+        else:
+            lowered = res.pop("lowered")
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            rl = res.pop("roofline_obj", None)
+            if rl is None:
+                rl = RL.from_compiled(compiled, res["n_dev"])
+            am = res.get("accum_mult", 1)
+            if am > 1:  # one lowered microbatch -> full accumulation step
+                rl = RL.Roofline(rl.flops * am, rl.hbm_bytes * am,
+                                 rl.coll_bytes * am, rl.coll_detail,
+                                 rl.n_devices)
+            cfg = res.pop("cfg")
+            mf = RL.model_flops(cfg, shape, cfg.active_param_count())
+            mf_per_dev = mf / res["n_dev"]
+            report = {
+                "cell": cell_id,
+                "status": "ok",
+                "arch": arch,
+                "shape": shape.name,
+                "mesh": mesh_name,
+                "plan": res["plan"],
+                "t_lower_s": round(t_lower, 1),
+                "t_compile_s": round(t_compile, 1),
+                "memory": {
+                    "argument_bytes": mem.argument_size_in_bytes,
+                    "output_bytes": mem.output_size_in_bytes,
+                    "temp_bytes": mem.temp_size_in_bytes,
+                    "peak_bytes": getattr(mem, "peak_memory_in_bytes",
+                                          mem.temp_size_in_bytes),
+                },
+                "roofline": rl.summary(),
+                "model_flops_per_device": mf_per_dev,
+                "useful_flops_ratio": (
+                    mf_per_dev / rl.flops if rl.flops else None),
+                "params": cfg.param_count(),
+                "active_params": cfg.active_param_count(),
+            }
+    except Exception as e:  # noqa: BLE001 — dry-run must report, not die
+        report = {"cell": cell_id, "status": "error",
+                  "error": f"{type(e).__name__}: {e}",
+                  "trace": traceback.format_exc()[-2000:]}
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cell_id + ".json"), "w") as f:
+        json.dump(report, f, indent=1)
+    status = report["status"]
+    extra = ""
+    if status == "ok":
+        r = report["roofline"]
+        extra = (f" bottleneck={r['bottleneck']}"
+                 f" t=({r['t_compute_s']:.2e},{r['t_memory_s']:.2e},"
+                 f"{r['t_collective_s']:.2e})s"
+                 f" compile={report['t_compile_s']}s")
+    elif status == "error":
+        extra = " " + report["error"][:160]
+    print(f"[dryrun] {cell_id}: {status}{extra}", flush=True)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES], default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--method", choices=("twopoint", "unroll"),
+                    default="twopoint")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [shape_by_name(args.shape)] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                path = os.path.join(
+                    args.out, f"{arch}__{shape.name}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") in ("ok", "skipped"):
+                            print(f"[dryrun] skip existing {path}", flush=True)
+                            continue
+                run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                         method=args.method)
+
+
+if __name__ == "__main__":
+    main()

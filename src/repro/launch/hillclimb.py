@@ -1,0 +1,73 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+from repro.launch.dryrun import run_cell, shape_by_name  # noqa: E402
+
+"""§Perf hillclimb driver: re-lower one cell with plan overrides and a tag.
+
+    python -m repro.launch.hillclimb --arch qwen3-32b --shape decode_32k \
+        --tag kv8 --set kv_bits=8
+    python -m repro.launch.hillclimb --arch recurrentgemma-2b \
+        --shape prefill_32k --tag diag --set rglru_diagonal_gates=true
+
+Results land in experiments/perf/<cell>__<tag>.json next to the baselines in
+experiments/dryrun/, so before/after deltas are directly comparable.
+"""
+
+
+def parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    if v.lower() in ("true", "false"):
+        return k, v.lower() == "true"
+    if v.lower() in ("none", "null"):
+        return k, None
+    try:
+        return k, int(v)
+    except ValueError:
+        try:
+            return k, float(v)
+        except ValueError:
+            return k, v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="plan override key=value (repeatable)")
+    ap.add_argument("--out", default="experiments/perf")
+    ap.add_argument("--baseline-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    overrides = dict(parse_override(kv) for kv in args.set)
+    shape = shape_by_name(args.shape)
+    report = run_cell(args.arch, shape, multi_pod=args.multi_pod,
+                      out_dir=args.out, plan_overrides=overrides,
+                      tag=args.tag)
+    # delta vs baseline
+    mesh = "2x16x16" if args.multi_pod else "16x16"
+    base_path = os.path.join(args.baseline_dir,
+                             f"{args.arch}__{args.shape}__{mesh}.json")
+    if report.get("status") == "ok" and os.path.exists(base_path):
+        with open(base_path) as f:
+            base = json.load(f)
+        if base.get("status") == "ok":
+            b, n = base["roofline"], report["roofline"]
+            for term in ("t_compute_s", "t_memory_s", "t_collective_s"):
+                delta = (n[term] - b[term]) / b[term] * 100 if b[term] else 0
+                print(f"  {term}: {b[term]:.3e} -> {n[term]:.3e} "
+                      f"({delta:+.1f}%)")
+            bt = max(b["t_compute_s"], b["t_memory_s"], b["t_collective_s"])
+            nt = max(n["t_compute_s"], n["t_memory_s"], n["t_collective_s"])
+            print(f"  bound: {bt:.3e} ({b['bottleneck']}) -> "
+                  f"{nt:.3e} ({n['bottleneck']})  [{(nt-bt)/bt*100:+.1f}%]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Float-side interpreter of the NetSpec IR: init / forward / QAT forward.
+
+This is the "network description model" side of the DeepDive flow (Fig. 1):
+a pure-JAX functional CNN whose parameters are pytrees keyed by op name.
+Three execution modes share one traversal:
+
+  * mode='float' : FP32 inference (pre-trained reference; BN folded already)
+  * mode='qat'   : fake-quantized weights + activations (online quantization)
+  * capture=True : returns named intermediate activations for calibration
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import graph as G
+from repro.core.quant import QuantConfig, fake_quant, fake_quant_minmax
+
+# ---------------------------------------------------------------------------
+# primitive float ops (NHWC, HWIO)
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x, w, stride=1, padding="SAME", groups=1):
+    return jax.lax.conv_general_dilated(
+        x,
+        w.astype(x.dtype),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+
+
+def depthwise_conv2d(x, w, stride=1, padding="SAME"):
+    """w: [K, K, 1, C] — groups == C, no channel reduction (Fig. 2c)."""
+    c = x.shape[-1]
+    return conv2d(x, w, stride=stride, padding=padding, groups=c)
+
+
+def pointwise_conv2d(x, w):
+    """w: [1, 1, Cin, Cout] or [Cin, Cout] — channel-only mixing (matmul)."""
+    if w.ndim == 4:
+        w = w[0, 0]
+    return jnp.einsum("...c,cd->...d", x, w.astype(x.dtype))
+
+
+def relu6(x):
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def hsigmoid(x):
+    """Eq. 1: ReLU6(x + 3) / 6."""
+    return relu6(x + 3.0) / 6.0
+
+
+def apply_act(x, act: str):
+    if act == G.RELU6:
+        return relu6(x)
+    if act == G.HSIGMOID:
+        return hsigmoid(x)
+    if act == G.NONE:
+        return x
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_op_params(key, op: G.OpSpec, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    shape = op.weight_shape()
+    fan_in = op.kernel * op.kernel * (op.in_ch if op.kind != G.DW else 1)
+    if op.kind == G.DENSE:
+        fan_in = op.in_ch
+    std = (2.0 / max(fan_in, 1)) ** 0.5
+    w = std * jax.random.normal(key, shape, dtype)
+    b = jnp.zeros((op.out_ch,), dtype)
+    return {"w": w, "b": b}
+
+
+def init_params(key, net: G.NetSpec, dtype=jnp.float32):
+    params = {}
+    for _, op in net.all_ops():
+        key, sub = jax.random.split(key)
+        params[op.name] = init_op_params(sub, op, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def weight_channel_axis(op: G.OpSpec) -> int:
+    """Output-channel axis of the op's weight (per-channel quant axis, Fig. 5)."""
+    return -1
+
+
+def _apply_op(x, op: G.OpSpec, p, *, qat: bool):
+    w, b = p["w"], p["b"]
+    if qat:
+        # per-output-channel symmetric weight fake-quant at the op's BW
+        w = fake_quant_minmax(
+            w, QuantConfig(op.bits, symmetric=True, channel_axis=weight_channel_axis(op))
+        )
+    if op.kind == G.CONV:
+        y = conv2d(x, w, stride=op.stride)
+    elif op.kind == G.DW:
+        y = depthwise_conv2d(x, w, stride=op.stride)
+    elif op.kind == G.PW:
+        y = pointwise_conv2d(x, w)
+    elif op.kind == G.DENSE:
+        y = x @ w.astype(x.dtype)
+    else:
+        raise ValueError(op.kind)
+    y = y + b.astype(y.dtype)
+    y = apply_act(y, op.act)
+    if qat and op.act != G.NONE:
+        # online activation quantization at the op's activation bit-width
+        y = fake_quant_minmax(y, QuantConfig(op.act_bits, False, None))
+    return y
+
+
+def _apply_block(x, block: G.BlockSpec, params, *, qat, capture):
+    y = x
+    for op in block.ops:
+        y = _apply_op(y, op, params[op.name], qat=qat)
+        if capture is not None:
+            capture[op.name] = y
+        if block.se is not None and block.se_after == op.name:
+            y = _apply_se(y, block.se, params, qat=qat, capture=capture)
+    if block.residual and x.shape == y.shape:
+        y = x + y
+        if capture is not None:
+            capture[block.name + "/residual"] = y
+    if block.avgpool:
+        y = global_avg_pool(y)
+        if capture is not None:
+            capture[block.name + "/avgpool"] = y
+    return y
+
+
+def _apply_se(x, se: G.SESpec, params, *, qat, capture):
+    s = global_avg_pool(x)  # squeeze: global spatial features
+    s = _apply_op(s, se.squeeze, params[se.squeeze.name], qat=qat)
+    s = _apply_op(s, se.excite, params[se.excite.name], qat=qat)
+    if capture is not None:
+        capture["se_gate"] = s
+    return x * s[:, None, None, :]
+
+
+def forward(
+    params,
+    x: jnp.ndarray,
+    net: G.NetSpec,
+    *,
+    qat: bool = False,
+    capture: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Run the network. Returns (logits, activations|None)."""
+    acts: Optional[Dict[str, jnp.ndarray]] = {} if capture else None
+    y = x
+    for block in net.blocks:
+        y = _apply_block(y, block, params, qat=qat, capture=acts)
+    return y, acts
+
+
+__all__ = [
+    "conv2d",
+    "depthwise_conv2d",
+    "pointwise_conv2d",
+    "relu6",
+    "hsigmoid",
+    "apply_act",
+    "global_avg_pool",
+    "init_params",
+    "forward",
+]

@@ -1,0 +1,412 @@
+"""Transformer building blocks shared by the assigned LM architectures.
+
+Pure-JAX functional modules. Parameters are nested dicts; every init_*
+function returns `(params, logical)` where `logical` mirrors the structure
+with tuples of logical axis names consumed by dist/sharding.py (TP over
+'heads'/'ffn'/'vocab', EP over 'experts', optional FSDP over 'embed').
+
+Quantization tie-in (the paper's front-end applied to LMs): when an LMConfig
+sets quant_bits, linear weights are stored as int8 (or packed int4) with
+per-output-channel scales — the same range-based symmetric scheme as
+core/quant.py — and dequantized in-graph next to the matmul, which cuts the
+weight-side memory roofline term by 4x/8x (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import unpack_int4
+from repro.dist.sharding import axis_size, shard
+from repro.models.lm.config import LMConfig
+
+Params = Dict
+F32 = jnp.float32
+
+
+def dt(cfg: LMConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear (+ weight-only quantization), norm, rope
+# ---------------------------------------------------------------------------
+
+
+def init_linear(key, d_in: int, d_out: int, ax_in: str, ax_out: str,
+                cfg: LMConfig, std: Optional[float] = None):
+    std = std if std is not None else d_in**-0.5
+    w = std * jax.random.normal(key, (d_in, d_out), F32)
+    if cfg.quant_bits in (4, 8):
+        qmax = 2 ** (cfg.quant_bits - 1) - 1
+        amax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+        scale = jnp.where(amax > 0, amax / qmax, 1.0)
+        q = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(jnp.int8)
+        if cfg.quant_bits == 4:
+            u = jnp.where(q < 0, q + 16, q).astype(jnp.uint8)
+            packed = (u[:, 0::2] & 0xF) | ((u[:, 1::2] & 0xF) << 4)
+            p = {"w_q": packed, "scale": scale.astype(dt(cfg))}
+            lg = {"w_q": (ax_in, ax_out), "scale": (None, ax_out)}
+            return p, lg
+        p = {"w_q": q, "scale": scale.astype(dt(cfg))}
+        return p, {"w_q": (ax_in, ax_out), "scale": (None, ax_out)}
+    return {"w": w.astype(dt(cfg))}, {"w": (ax_in, ax_out)}
+
+
+def linear(x, p):
+    if "w" in p:
+        return x @ p["w"].astype(x.dtype)
+    w_q = p["w_q"]
+    if w_q.dtype == jnp.uint8:  # packed int4
+        q = unpack_int4(w_q, signed=True)
+    else:
+        q = w_q.astype(jnp.int32)
+    w = q.astype(x.dtype) * p["scale"].astype(x.dtype)
+    return x @ w
+
+
+def init_norm(key, d: int, cfg: LMConfig):
+    return {"scale": jnp.ones((d,), dt(cfg))}, {"scale": (None,)}
+
+
+def rms_norm(x, p, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(F32)), axis=-1, keepdims=True)
+    y = x.astype(F32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(F32)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """x: [B, S, H, dh]; positions: [B, S] or [S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(F32) * freqs  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA; full / blockwise-flash / local-window / cross / decode)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: LMConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    hd = cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p, lg = {}, {}
+    p["wq"], lg["wq"] = init_linear(ks[0], d, cfg.n_heads * hd, "embed", "heads", cfg)
+    p["wk"], lg["wk"] = init_linear(ks[1], d, cfg.n_kv_heads * hd, "embed", "heads", cfg)
+    p["wv"], lg["wv"] = init_linear(ks[2], d, cfg.n_kv_heads * hd, "embed", "heads", cfg)
+    p["wo"], lg["wo"] = init_linear(ks[3], cfg.n_heads * hd, d, "heads", "embed", cfg)
+    if cfg.qk_norm:
+        p["qnorm"], lg["qnorm"] = init_norm(ks[4], hd, cfg)
+        p["knorm"], lg["knorm"] = init_norm(ks[5], hd, cfg)
+    return p, lg
+
+
+def _repeat_kv(k, n_heads):
+    rep = n_heads // k.shape[2]
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+# --- int8 KV cache (the paper's quantization applied to the decode cache:
+#     per-(position, kv-head) symmetric scales; halves the dominant HBM
+#     traffic of memory-bound decode — §Perf lever `kv_bits`) ---------------
+
+
+def kv_quant(x):
+    amax = jnp.max(jnp.abs(x.astype(F32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.round(x.astype(F32) / scale[..., None]).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def kv_dequant(q, scale, dtype):
+    return (q.astype(F32) * scale[..., None].astype(F32)).astype(dtype)
+
+
+def _attn_core(q, k, v, mask, scale):
+    """q [B,Sq,H,dh]; k/v [B,Sk,KV,dh] (KV <= H); mask [.,1,Sq,Sk].
+
+    GQA is evaluated GROUPED — einsum over [KV, rep] — instead of
+    materializing the repeated K/V. jnp.repeat made every decode step read
+    rep x the cache bytes (qwen3 decode_32k: 8x64 layers ~= 550 GB/device
+    per step); grouping reads each cache byte once (§Perf cell A, iter 1)."""
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    # K/V stay in their storage dtype (bf16): upcasting them to f32 first
+    # materializes an f32 copy of the WHOLE cache per layer (qwen3 decode:
+    # ~8 GB/dev/layer). MXU-style f32 accumulation via preferred_element_type
+    # reads each cache byte once (§Perf cell A, iter 2).
+    if rep == 1:
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                       preferred_element_type=F32) * scale
+        s = jnp.where(mask, s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v,
+                          preferred_element_type=F32)
+    qg = q.reshape(b, sq, kv, rep, dh)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
+                   preferred_element_type=F32) * scale
+    s = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", w.astype(v.dtype), v,
+                     preferred_element_type=F32)
+    return out.reshape(b, sq, h, dh)
+
+
+def full_attention(q, k, v, *, causal: bool, window: int = 0,
+                   kv_offset: int = 0, kv_len=None):
+    """Direct attention. kv_offset = absolute position of q[0] minus k[0]
+    (for decode with a cache, q position = kv_offset + i)."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    qpos = kv_offset + jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    mask = mask[None, None]
+    if kv_len is not None:  # [B] valid cache lengths
+        mask = mask & (kpos[None, None, None, :] < kv_len[:, None, None, None])
+    out = _attn_core(q, k, v, mask, dh**-0.5)
+    return out.astype(q.dtype)
+
+
+def pos_attention(q, k, v, kpos, q_pos, window: int = 0):
+    """Attention over a ring cache with explicit absolute key positions.
+
+    kpos: [Sk] int32 (−1 = empty slot); q_pos: scalar absolute position of q.
+    """
+    b, sq, h, dh = q.shape
+    qpos = q_pos + jnp.arange(sq)
+    mask = (kpos[None, :] >= 0) & (kpos[None, :] <= qpos[:, None])
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    out = _attn_core(q, k, v, mask[None, None], dh**-0.5)
+    return out.astype(q.dtype)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, window: int = 0,
+                        block_k: int = 1024):
+    """Flash-style online-softmax over KV blocks (lax.scan) — keeps the
+    S x S score matrix out of memory for long-context prefill."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    kv = k.shape[2]
+    rep = h // kv
+    pad = (-sk) % block_k  # ragged tail (e.g. VLM: 32768 tokens + 576 patches)
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    skp = sk + pad
+    nb = skp // block_k
+    kb = k.reshape(b, nb, block_k, kv, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, block_k, kv, dh).transpose(1, 0, 2, 3, 4)
+    qf = q.astype(F32).reshape(b, sq, kv, rep, dh)
+    scale = dh**-0.5
+    qpos = jnp.arange(sq)
+
+    def step(carry, blk):
+        m, l, acc = carry  # [b, kv, rep, sq], ..., [b, kv, rep, sq, dh]
+        kblk, vblk, bi = blk
+        kpos = bi * block_k + jnp.arange(block_k)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qf, kblk.astype(F32)) * scale
+        mask = kpos[None, :] < sk  # ignore ragged padding
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bgrqk,bkgd->bgrqd", p, vblk.astype(F32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, rep, sq), -jnp.inf, F32)
+    l0 = jnp.zeros((b, kv, rep, sq), F32)
+    a0 = jnp.zeros((b, kv, rep, sq, dh), F32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kb, vb, jnp.arange(nb))
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    # [b, kv, rep, sq, dh] -> [b, sq, h, dh]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def attention_block(p, x, cfg: LMConfig, positions, *, causal=True,
+                    window: int = 0, kv_cache=None, cache_pos=None,
+                    xk=None, blockwise_threshold: int = 8192):
+    """Self- or cross-attention with optional KV cache.
+
+    Returns (out, new_cache). kv_cache: dict(k=[B,Smax,KV,dh], v=...).
+    cache_pos: scalar int32 — write position for decode.
+    xk: memory for cross-attention (keys/values computed from xk).
+    """
+    hd = cfg.head_dim
+    src = x if xk is None else xk
+    q = linear(x, p["wq"]).reshape(*x.shape[:-1], cfg.n_heads, hd)
+    k = linear(src, p["wk"]).reshape(*src.shape[:-1], cfg.n_kv_heads, hd)
+    v = linear(src, p["wv"]).reshape(*src.shape[:-1], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qnorm"], cfg.norm_eps)
+        k = rms_norm(k, p["knorm"], cfg.norm_eps)
+    q = shard(q, "batch", None,
+              "heads" if cfg.n_heads % axis_size("model") == 0 else None, None)
+    # GQA: only constrain kv heads when they divide the TP axis; otherwise
+    # let GSPMD keep them partially replicated (avoids involuntary remat)
+    kv_ax = "heads" if cfg.n_kv_heads % axis_size("model") == 0 else None
+    k = shard(k, "batch", None, kv_ax, None)
+    if xk is None:  # self-attention: rope
+        q = rope(q, positions, cfg.rope_theta)
+        if cache_pos is None:
+            kpos = positions
+        else:
+            kpos = cache_pos + jnp.arange(k.shape[1])
+        k = rope(k, kpos, cfg.rope_theta)
+
+    new_cache = kv_cache
+    quant = kv_cache is not None and "k_scale" in kv_cache
+
+    def _store(x_new, cache_q, cache_s, idx):
+        if quant:
+            qv, sv = kv_quant(x_new)
+            cq = jax.lax.dynamic_update_slice_in_dim(cache_q, qv, idx, axis=1)
+            cs = jax.lax.dynamic_update_slice_in_dim(cache_s, sv, idx, axis=1)
+            return cq, cs
+        cq = jax.lax.dynamic_update_slice_in_dim(
+            cache_q, x_new.astype(cache_q.dtype), idx, axis=1)
+        return cq, cache_s
+
+    def _read(cache_q, cache_s):
+        if quant:
+            return kv_dequant(cache_q, cache_s, q.dtype)
+        return cache_q
+
+    if kv_cache is not None:
+        if cache_pos is not None:  # decode: insert this step's k/v
+            size = kv_cache["k"].shape[1]
+            ring = "pos" in kv_cache  # windowed ring buffer (local attention)
+            idx = jnp.mod(cache_pos, size) if ring else cache_pos
+            kc, ks = _store(k, kv_cache["k"], kv_cache.get("k_scale"), idx)
+            vc, vs = _store(v, kv_cache["v"], kv_cache.get("v_scale"), idx)
+            new_cache = {"k": kc, "v": vc}
+            if quant:
+                new_cache.update(k_scale=ks, v_scale=vs)
+            kd, vd = _read(kc, ks), _read(vc, vs)
+            if ring:
+                posc = jax.lax.dynamic_update_slice_in_dim(
+                    kv_cache["pos"],
+                    (cache_pos + jnp.arange(k.shape[1])).astype(jnp.int32),
+                    idx, axis=0)
+                new_cache["pos"] = posc
+                out = pos_attention(q, kd, vd, posc, cache_pos, window)
+            else:
+                kv_len = jnp.full((x.shape[0],), cache_pos + k.shape[1], jnp.int32)
+                out = full_attention(
+                    q, kd, vd, causal=False, window=window,
+                    kv_offset=cache_pos, kv_len=kv_len,
+                )
+        else:  # prefill: fill cache from 0
+            size = kv_cache["k"].shape[1]
+            s = k.shape[1]
+            if "pos" in kv_cache:  # ring: keep only the last `size` positions
+                take = min(s, size)
+                kc, ks = _store(k[:, -take:], kv_cache["k"],
+                                kv_cache.get("k_scale"), 0)
+                vc, vs = _store(v[:, -take:], kv_cache["v"],
+                                kv_cache.get("v_scale"), 0)
+                # NOTE: ring-slot alignment assumes size | s (true for the
+                # assigned shapes: window 2048 divides 32768/524288 prefills)
+                posc = jax.lax.dynamic_update_slice_in_dim(
+                    kv_cache["pos"], jnp.arange(s - take, s, dtype=jnp.int32),
+                    0, axis=0)
+                new_cache = {"k": kc, "v": vc, "pos": posc}
+            else:
+                kc, ks = _store(k, kv_cache["k"], kv_cache.get("k_scale"), 0)
+                vc, vs = _store(v, kv_cache["v"], kv_cache.get("v_scale"), 0)
+                new_cache = {"k": kc, "v": vc}
+            if quant:
+                new_cache.update(k_scale=ks, v_scale=vs)
+            out = _self_attn(q, k, v, causal, window, blockwise_threshold)
+    else:
+        if xk is None:
+            out = _self_attn(q, k, v, causal, window, blockwise_threshold)
+        else:
+            out = full_attention(q, k, v, causal=False)
+    out = out.reshape(*x.shape[:-1], cfg.n_heads * hd)
+    return linear(out, p["wo"]), new_cache
+
+
+def _self_attn(q, k, v, causal, window, threshold):
+    if k.shape[1] > threshold:
+        return blockwise_attention(q, k, v, causal=causal, window=window)
+    return full_attention(q, k, v, causal=causal, window=window)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP + dense decoder block
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: LMConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p, lg = {}, {}
+    p["wi"], lg["wi"] = init_linear(ks[0], d, f, "embed", "ffn", cfg)
+    p["wg"], lg["wg"] = init_linear(ks[1], d, f, "embed", "ffn", cfg)
+    p["wo"], lg["wo"] = init_linear(ks[2], f, d, "ffn", "embed", cfg)
+    return p, lg
+
+
+def mlp(p, x):
+    h = jax.nn.silu(linear(x, p["wg"])) * linear(x, p["wi"])
+    h = shard(h, "batch", *(None,) * (h.ndim - 2), "ffn")
+    return linear(h, p["wo"])
+
+
+def init_dense_block(key, cfg: LMConfig):
+    ks = jax.random.split(key, 4)
+    p, lg = {}, {}
+    p["ln1"], lg["ln1"] = init_norm(ks[0], cfg.d_model, cfg)
+    p["attn"], lg["attn"] = init_attention(ks[1], cfg)
+    p["ln2"], lg["ln2"] = init_norm(ks[2], cfg.d_model, cfg)
+    p["mlp"], lg["mlp"] = init_mlp(ks[3], cfg)
+    return p, lg
+
+
+def dense_block(p, x, cfg: LMConfig, positions, *, kv_cache=None,
+                cache_pos=None, window: int = 0):
+    h, new_cache = attention_block(
+        p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, positions,
+        causal=True, window=window, kv_cache=kv_cache, cache_pos=cache_pos,
+    )
+    x = x + h
+    x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    x = shard(x, "batch", "seq", None)
+    return x, new_cache
+
+
+__all__ = [
+    "init_linear", "linear", "init_norm", "rms_norm", "rope",
+    "init_attention", "attention_block", "full_attention",
+    "blockwise_attention", "init_mlp", "mlp", "init_dense_block",
+    "dense_block", "dt",
+]

@@ -1,0 +1,183 @@
+"""Mamba-2 block via the SSD (state-space duality) algorithm (arXiv:2405.21060).
+
+The SSD form evaluates the selective SSM
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * (B_t  x_t^T)        (per head)
+    y_t = C_t^T h_t + D * x_t
+
+with a *chunked, matmul-dominant* algorithm: intra-chunk terms become an
+attention-like quadratic form (MXU-friendly), inter-chunk terms reduce to a
+short `lax.scan` over chunk states — exactly the restructuring that makes an
+SSM map well to a systolic/matrix unit, mirroring how DeepDive re-maps sparse
+operators onto the right compute unit.
+
+State for decode is O(H * P * N) per sequence — constant in context length,
+which is why mamba2 runs the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.lm.config import LMConfig
+from repro.models.lm.common import dt, init_linear, init_norm, linear, rms_norm
+
+F32 = jnp.float32
+
+
+def dims(cfg: LMConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    return d_in, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba2_block(key, cfg: LMConfig):
+    d = cfg.d_model
+    d_in, nh, hp, ns = dims(cfg)
+    ks = jax.random.split(key, 6)
+    p, lg = {}, {}
+    # fused input projection: [z (gate), x, B, C, dt]
+    proj_out = 2 * d_in + 2 * ns + nh
+    p["in_proj"], lg["in_proj"] = init_linear(ks[0], d, proj_out, "embed", "ffn", cfg)
+    p["conv_w"] = 0.1 * jax.random.normal(ks[1], (cfg.conv_width, d_in + 2 * ns), F32).astype(dt(cfg))
+    lg["conv_w"] = (None, "ffn")
+    p["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(F32)
+    lg["A_log"] = ("heads",)
+    p["D"] = jnp.ones((nh,), F32)
+    lg["D"] = ("heads",)
+    p["dt_bias"] = jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+        ks[3], (nh,), F32, jnp.log(1e-3), jnp.log(1e-1))))).astype(F32)
+    lg["dt_bias"] = ("heads",)
+    p["norm"], lg["norm"] = init_norm(ks[4], d_in, cfg)
+    p["out_proj"], lg["out_proj"] = init_linear(ks[5], d_in, d, "ffn", "embed", cfg)
+    return p, lg
+
+
+def _segsum(dtA):
+    """dtA: [..., Q] -> cumulative decay matrix log L[i, j] = sum_{j<k<=i} dtA_k
+    (lower-triangular; -inf above diagonal)."""
+    q = dtA.shape[-1]
+    cs = jnp.cumsum(dtA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # [..., i, j] = sum_(j, i]
+    ii = jnp.arange(q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dtv, A, B, C, chunk: int):
+    """Chunked SSD scan.
+
+    x  : [b, s, h, p]    (pre-discretized input; we fold dt into x and B)
+    dtv: [b, s, h]       softplus'd step sizes
+    A  : [h]             negative decay rates
+    B,C: [b, s, n]       (single group, broadcast over heads)
+    Returns y [b, s, h, p], final_state [b, h, n, p].
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:  # ragged tail: dt=0 is state-neutral (decay 1, update 0)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtv = jnp.pad(dtv, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    s_pad = s + pad
+    nc = s_pad // q
+
+    xr = x.reshape(b, nc, q, h, p).astype(F32)
+    dtr = dtv.reshape(b, nc, q, h).astype(F32)
+    Br = B.reshape(b, nc, q, n).astype(F32)
+    Cr = C.reshape(b, nc, q, n).astype(F32)
+
+    dtA = dtr * A[None, None, None, :]  # [b, nc, q, h]  (A < 0)
+    # intra-chunk (attention-like, causal with decay):
+    L = jnp.exp(_segsum(dtA.transpose(0, 1, 3, 2)))  # [b, nc, h, q, q]
+    scores = jnp.einsum("bcin,bcjn->bcij", Cr, Br)  # [b, nc, q, q]
+    att = scores[:, :, None] * L  # [b, nc, h, i, j]
+    y_intra = jnp.einsum("bchij,bcjh,bcjhp->bcihp", att, dtr, xr)
+
+    # chunk states: S_c = sum_j exp(sum_{j<k<q} dtA) * dt_j * B_j x_j^T
+    decay_to_end = jnp.exp(
+        jnp.cumsum(dtA, axis=2)[:, :, -1:, :] - jnp.cumsum(dtA, axis=2)
+    )  # [b, nc, q, h]
+    states = jnp.einsum(
+        "bcjh,bcjn,bcjhp->bchnp", decay_to_end * dtr, Br, xr
+    )  # [b, nc, h, n, p]
+
+    # inter-chunk: scan chunk-level recurrence  S_out = S_in * decay + S_c
+    chunk_decay = jnp.exp(jnp.sum(dtA, axis=2))  # [b, nc, h]
+
+    def step(carry, inp):
+        st, dec = inp  # [b,h,n,p], [b,h]
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    init = jnp.zeros((b, h, n, p), F32)
+    final, entering = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    entering = entering.transpose(1, 0, 2, 3, 4)  # [b, nc, h, n, p]
+
+    # contribution of the entering state to each position in the chunk
+    decay_from_start = jnp.exp(jnp.cumsum(dtA, axis=2))  # [b, nc, q, h]
+    y_inter = jnp.einsum(
+        "bcin,bchnp,bcih->bcihp", Cr, entering, decay_from_start
+    )
+    y = (y_intra + y_inter).reshape(b, s_pad, h, p)[:, :s]
+    return y, final
+
+
+def ssd_step(x, dtv, A, B, C, state):
+    """One decode step. x: [b, 1, h, p]; state: [b, h, n, p] f32."""
+    dtA = (dtv[:, 0].astype(F32) * A[None, :])  # [b, h]
+    dec = jnp.exp(dtA)
+    upd = jnp.einsum("bn,bhp->bhnp", B[:, 0].astype(F32),
+                     dtv[:, 0, :, None].astype(F32) * x[:, 0].astype(F32))
+    new_state = state * dec[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", C[:, 0].astype(F32), new_state)
+    return y[:, None], new_state
+
+
+def mamba2_block(p, x, cfg: LMConfig, state: Optional[dict] = None):
+    """Full block. state: {'conv': [B, K-1, d_conv_in], 'ssd': [B,H,N,P]}."""
+    from repro.models.lm.rglru import _causal_conv1d
+
+    b, s, d = x.shape
+    d_in, nh, hp, ns = dims(cfg)
+    zxbcdt = linear(x, p["in_proj"])
+    z, xin, Bc, Cc, dtv = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + ns, 2 * d_in + 2 * ns], axis=-1
+    )
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    decode = state is not None and s == 1
+    conv_state = state["conv"] if decode else None
+    conv_out, new_conv = _causal_conv1d(conv_in, p["conv_w"].astype(F32), conv_state)
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
+    xin, Bc, Cc = jnp.split(conv_out, [d_in, d_in + ns], axis=-1)
+    xh = xin.reshape(b, s, nh, hp)
+    xh = shard(xh, "batch", None, "heads", None)
+    dtv = jax.nn.softplus(dtv.astype(F32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    if decode:
+        y, ssd_state = ssd_step(xh, dtv, A, Bc, Cc, state["ssd"])
+    else:
+        y, ssd_state = ssd_chunked(xh, dtv, A, Bc, Cc, cfg.ssm_chunk)
+    y = y + p["D"][None, None, :, None] * xh.astype(F32)
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = linear(y, p["out_proj"])
+    new_state = {
+        "conv": (new_conv if new_conv is not None else jnp.zeros(
+            (b, cfg.conv_width - 1, d_in + 2 * ns), dt(cfg))),
+        "ssd": ssd_state,
+    }
+    return out, new_state
+
+
+__all__ = ["init_mamba2_block", "mamba2_block", "ssd_chunked", "ssd_step", "dims"]

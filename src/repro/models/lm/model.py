@@ -1,0 +1,558 @@
+"""LM model assembly: init / train forward / prefill / decode per family.
+
+Structure mirrors the paper's CU decomposition (DESIGN.md §4): Head CU =
+embedding (+ modality frontend stub), Body CU = the repeated block executed
+via `jax.lax.scan` over stacked layer parameters (the exact analogue of
+'host schedules the Body CU j times'), Tail CU = final norm, Classifier CU =
+the LM head. Scan keeps the HLO O(1) in depth, which is what makes the
+480B-class dry-runs compile quickly.
+
+Every init_* returns (params, logical) where logical mirrors params with
+tuples of logical axis names (see dist/sharding.py). Stacked layer params
+get a leading `None` (the scan axis is never sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.lm import common as C
+from repro.models.lm import mamba2 as M2
+from repro.models.lm import moe as MOE
+from repro.models.lm import rglru as RG
+from repro.models.lm.config import LMConfig
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# per-family single-layer init/apply
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: LMConfig, kind: str):
+    """kind: dense | moe | rec | attn_local | ssm | enc | dec."""
+    ks = jax.random.split(key, 6)
+    p, lg = {}, {}
+    if kind == "ssm":
+        p["ln1"], lg["ln1"] = C.init_norm(ks[0], cfg.d_model, cfg)
+        p["mix"], lg["mix"] = M2.init_mamba2_block(ks[1], cfg)
+        return p, lg
+    p["ln1"], lg["ln1"] = C.init_norm(ks[0], cfg.d_model, cfg)
+    if kind == "rec":
+        p["mix"], lg["mix"] = RG.init_rglru_block(ks[1], cfg)
+    else:
+        p["mix"], lg["mix"] = C.init_attention(ks[1], cfg)
+    p["ln2"], lg["ln2"] = C.init_norm(ks[2], cfg.d_model, cfg)
+    if kind == "moe":
+        p["ffn"], lg["ffn"] = MOE.init_moe(ks[3], cfg)
+    else:
+        p["ffn"], lg["ffn"] = C.init_mlp(ks[3], cfg)
+    if kind == "dec":  # cross-attention sublayer
+        p["ln_x"], lg["ln_x"] = C.init_norm(ks[4], cfg.d_model, cfg)
+        p["xattn"], lg["xattn"] = C.init_attention(ks[5], cfg)
+    return p, lg
+
+
+def _apply_layer(p, x, cfg: LMConfig, kind: str, positions, *,
+                 cache=None, cache_pos=None, memory=None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), F32)
+    h = C.rms_norm(x, p["ln1"], cfg.norm_eps)
+    new_cache = cache
+    if kind == "ssm":
+        out, new_cache = M2.mamba2_block(p["mix"], h, cfg, state=cache)
+        if cache is None:  # training: no state carried
+            new_cache = None
+        return x + out, new_cache, aux
+    if kind == "rec":
+        out, new_cache = RG.rglru_block(p["mix"], h, cfg, state=cache)
+        if cache is None:
+            new_cache = None
+    else:
+        window = cfg.local_window if kind == "attn_local" else 0
+        causal = kind != "enc"
+        out, new_cache = C.attention_block(
+            p["mix"], h, cfg, positions, causal=causal, window=window,
+            kv_cache=cache.get("self") if isinstance(cache, dict) and "self" in cache else cache,
+            cache_pos=cache_pos,
+        )
+    x = x + out
+    if kind == "dec" and memory is not None:
+        hx = C.rms_norm(x, p["ln_x"], cfg.norm_eps)
+        if isinstance(cache, dict) and "cross" in cache:
+            # cross K/V are precomputed at prefill; reuse
+            xout = _cross_from_cache(p["xattn"], hx, cfg, cache["cross"])
+            new_cache = {"self": new_cache, "cross": cache["cross"]}
+        else:
+            xout, _ = C.attention_block(
+                p["xattn"], hx, cfg, positions, causal=False, xk=memory)
+            if cache is not None:
+                new_cache = {"self": new_cache,
+                             "cross": _make_cross_cache(p["xattn"], cfg, memory)}
+        x = x + xout
+    hf = C.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        out, aux = MOE.moe_ffn(p["ffn"], hf, cfg)
+    else:
+        out = C.mlp(p["ffn"], hf)
+    x = x + out
+    x = shard(x, "batch", "seq", None)
+    return x, new_cache, aux
+
+
+def _make_cross_cache(p_attn, cfg, memory):
+    hd = cfg.head_dim
+    k = C.linear(memory, p_attn["wk"]).reshape(*memory.shape[:-1], cfg.n_kv_heads, hd)
+    v = C.linear(memory, p_attn["wv"]).reshape(*memory.shape[:-1], cfg.n_kv_heads, hd)
+    return {"k": k, "v": v}
+
+
+def _cross_from_cache(p_attn, x, cfg, cross):
+    hd = cfg.head_dim
+    q = C.linear(x, p_attn["wq"]).reshape(*x.shape[:-1], cfg.n_heads, hd)
+    if cfg.qk_norm:
+        q = C.rms_norm(q, p_attn["qnorm"], cfg.norm_eps)
+    out = C.full_attention(q, cross["k"], cross["v"], causal=False)
+    out = out.reshape(*x.shape[:-1], cfg.n_heads * hd)
+    return C.linear(out, p_attn["wo"])
+
+
+# ---------------------------------------------------------------------------
+# layer-kind schedule per family
+# ---------------------------------------------------------------------------
+
+
+def layer_kinds(cfg: LMConfig) -> Tuple[str, ...]:
+    if cfg.family == "moe":
+        return tuple("moe" for _ in range(cfg.n_layers))
+    if cfg.family == "ssm":
+        return tuple("ssm" for _ in range(cfg.n_layers))
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("attn",)
+        return tuple(
+            ("attn_local" if pat[i % len(pat)] == "attn" else "rec")
+            for i in range(cfg.n_layers)
+        )
+    return tuple("dense" for _ in range(cfg.n_layers))
+
+
+def _kind_groups(kinds: Tuple[str, ...]):
+    """Group layers into a repeating super-block for scan + an unrolled tail."""
+    if len(set(kinds)) == 1:
+        return (kinds[0],), len(kinds), ()
+    pat = _pattern_period(kinds)
+    n_super = len(kinds) // len(pat)
+    tail = kinds[n_super * len(pat):]
+    return pat, n_super, tail
+
+
+def _pattern_period(kinds):
+    """Smallest prefix that tiles the whole layer-kind sequence."""
+    for plen in range(1, len(kinds) + 1):
+        if all(kinds[i] == kinds[i % plen] for i in range(len(kinds))):
+            return kinds[:plen]
+    return kinds
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+
+def padded_vocab(cfg: LMConfig) -> int:
+    """Megatron-style vocab padding so the TP axis always divides V.
+
+    The published vocab size is kept for the loss/sampling semantics (pad
+    logits are masked to -inf in `logits_from_hidden`)."""
+    return -(-cfg.vocab // 512) * 512
+
+
+def init_params(cfg: LMConfig, key) -> Tuple[Dict, Dict]:
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {}
+    lg: Dict[str, Any] = {}
+    std = cfg.d_model**-0.5
+    vp = padded_vocab(cfg)
+    p["embed"] = (std * jax.random.normal(ks[0], (vp, cfg.d_model), F32)
+                  ).astype(C.dt(cfg))
+    lg["embed"] = ("vocab", "embed")
+    if not cfg.tie_embeddings:
+        p["lm_head"], lg["lm_head"] = C.init_linear(
+            ks[1], cfg.d_model, vp, "embed", "vocab", cfg)
+    p["ln_f"], lg["ln_f"] = C.init_norm(ks[2], cfg.d_model, cfg)
+
+    def stack(key, kind, n):
+        keys = jax.random.split(key, max(n, 1))
+        _, single_lg = _init_layer(keys[0], cfg, kind)
+        stacked = jax.vmap(lambda k: _init_layer(k, cfg, kind)[0])(keys)
+        stacked_lg = jax.tree.map(
+            lambda ax: (None, *ax), single_lg,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                a is None or isinstance(a, str) for a in x),
+        )
+        return stacked, stacked_lg
+
+    if cfg.family in ("encdec", "audio"):
+        p["enc"], lg["enc"] = stack(ks[3], "enc", cfg.n_enc_layers)
+        p["dec"], lg["dec"] = stack(ks[4], "dec", cfg.n_dec_layers)
+        p["ln_enc"], lg["ln_enc"] = C.init_norm(ks[5], cfg.d_model, cfg)
+        return p, lg
+
+    kinds = layer_kinds(cfg)
+    pat, n_super, tail = _kind_groups(kinds)
+    if len(pat) == 1:
+        p["layers"], lg["layers"] = stack(ks[3], pat[0], n_super)
+    else:
+        sup_p, sup_lg = {}, {}
+        for i, kind in enumerate(pat):
+            sup_p[f"l{i}"], sup_lg[f"l{i}"] = stack(
+                jax.random.fold_in(ks[3], i), kind, n_super)
+        p["layers"], lg["layers"] = sup_p, sup_lg
+    for i, kind in enumerate(tail):
+        p[f"tail{i}"], lg[f"tail{i}"] = _init_layer(
+            jax.random.fold_in(ks[4], i), cfg, kind)
+    if cfg.frontend:
+        # modality frontend STUB: a single projection from precomputed
+        # patch/frame embeddings into d_model (the real encoder is external)
+        p["frontend_proj"], lg["frontend_proj"] = C.init_linear(
+            ks[6], cfg.d_model, cfg.d_model, None, "embed", cfg)
+    return p, lg
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, cfg: LMConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def _run_stack(params, x, cfg, positions, *, caches=None, cache_pos=None):
+    """Scan the (super-)block stack. caches: pytree aligned with layers or None.
+
+    Returns (x, new_caches, aux_sum)."""
+    kinds = layer_kinds(cfg)
+    pat, n_super, tail = _kind_groups(kinds)
+
+    def super_body(carry, xs):
+        xx, aux = carry
+        layer_p, layer_c = xs
+        new_c = {}
+        if len(pat) == 1:
+            xx, nc, a = _apply_layer(
+                layer_p, xx, cfg, pat[0], positions,
+                cache=layer_c, cache_pos=cache_pos)
+            new_c = nc
+            aux = aux + a
+        else:
+            for i, kind in enumerate(pat):
+                ci = layer_c[f"l{i}"] if layer_c is not None else None
+                xx, nc, a = _apply_layer(
+                    layer_p[f"l{i}"], xx, cfg, kind, positions,
+                    cache=ci, cache_pos=cache_pos)
+                new_c[f"l{i}"] = nc
+                aux = aux + a
+        return (xx, aux), new_c
+
+    layer_caches = caches["layers"] if caches is not None else None
+    (x, aux), new_layer_caches = jax.lax.scan(
+        _remat(super_body, cfg),
+        (x, jnp.zeros((), F32)),
+        (params["layers"], layer_caches),
+        unroll=cfg.scan_unroll,
+    )
+    new_caches = {"layers": new_layer_caches} if caches is not None else None
+    for i, kind in enumerate(tail):
+        ci = caches[f"tail{i}"] if caches is not None else None
+        x, nc, a = _apply_layer(
+            params[f"tail{i}"], x, cfg, kind, positions,
+            cache=ci, cache_pos=cache_pos)
+        aux = aux + a
+        if caches is not None:
+            new_caches[f"tail{i}"] = nc
+    return x, new_caches, aux
+
+
+def embed_tokens(params, cfg: LMConfig, tokens, embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(C.dt(cfg))
+    if cfg.family in ("vlm",) and embeds is not None:
+        fe = C.linear(embeds.astype(C.dt(cfg)), params["frontend_proj"])
+        x = jnp.concatenate([fe, x], axis=1)
+    x = shard(x, "batch", "seq", None)
+    return x
+
+
+def logits_from_hidden(params, cfg: LMConfig, x):
+    x = C.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].astype(x.dtype).T
+    else:
+        logits = C.linear(x, params["lm_head"])
+    vp = padded_vocab(cfg)
+    if vp != cfg.vocab:  # mask the padding rows out of the softmax
+        mask = jnp.arange(vp) < cfg.vocab
+        logits = jnp.where(mask, logits, -1e30)
+    return shard(logits, "batch", None, "vocab")
+
+
+def forward_train(params, cfg: LMConfig, tokens, embeds=None, enc_inputs=None):
+    """Causal LM (or enc-dec) forward. Returns logits [B, S, V]."""
+    if cfg.family in ("encdec", "audio"):
+        return _encdec_forward(params, cfg, tokens, enc_inputs)
+    x = embed_tokens(params, cfg, tokens, embeds)
+    positions = jnp.arange(x.shape[1])
+    x, _, aux = _run_stack(params, x, cfg, positions)
+    return logits_from_hidden(params, cfg, x), aux
+
+
+def _enc_layer_body(cfg):
+    def body(x, layer_p):
+        xx, _, _ = _apply_layer(layer_p, x, cfg, "enc", jnp.arange(x.shape[1]))
+        return xx, None
+    return body
+
+
+def _encdec_forward(params, cfg: LMConfig, tokens, enc_inputs):
+    enc_x = enc_inputs.astype(C.dt(cfg))  # [B, S_enc, D] precomputed frames
+    enc_x = shard(enc_x, "batch", "seq", None)
+    enc_x, _ = jax.lax.scan(
+        _remat(_enc_layer_body(cfg), cfg), enc_x, params["enc"],
+        unroll=cfg.scan_unroll)
+    memory = C.rms_norm(enc_x, params["ln_enc"], cfg.norm_eps)
+
+    x = embed_tokens(params, cfg, tokens)
+    positions = jnp.arange(x.shape[1])
+
+    def dec_body(carry, layer_p):
+        xx = carry
+        xx, _, _ = _apply_layer(layer_p, xx, cfg, "dec", positions, memory=memory)
+        return xx, None
+
+    x, _ = jax.lax.scan(_remat(dec_body, cfg), x, params["dec"],
+                        unroll=cfg.scan_unroll)
+    return logits_from_hidden(params, cfg, x), jnp.zeros((), F32)
+
+
+def loss_fn(params, cfg: LMConfig, batch):
+    """Next-token cross-entropy. batch: dict(tokens [B,S] [, embeds, enc_inputs])."""
+    tokens = batch["tokens"]
+    logits, aux = forward_train(
+        params, cfg, tokens,
+        embeds=batch.get("embeds"), enc_inputs=batch.get("enc_inputs"))
+    # align: predict tokens[:, 1:] from logits[:, :-1] (vlm: last S positions)
+    if cfg.family == "vlm" and batch.get("embeds") is not None:
+        logits = logits[:, -tokens.shape[1]:]
+    lp = jax.nn.log_softmax(logits[:, :-1].astype(F32), axis=-1)
+    lp = shard(lp, "batch", None, "vocab")
+    tgt = tokens[:, 1:]
+    # one-hot contraction instead of take_along_axis: keeps the vocab axis
+    # sharded (TP) with a tiny psum instead of an all-gather of the logits.
+    # The one-hot itself MUST carry the vocab sharding constraint or GSPMD
+    # materializes it replicated: [B,S,V] f32 was the peak-memory term of
+    # every train cell (e.g. llama train_4k 33.2 GB/chip -> fits; §Perf #0).
+    onehot = shard(jax.nn.one_hot(tgt, lp.shape[-1], dtype=lp.dtype),
+                   "batch", None, "vocab")
+    ll = jnp.sum(lp * onehot, axis=-1)
+    loss = -ll.mean()
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# caches: init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache(cfg: LMConfig, kind: str, batch: int, max_len: int):
+    hd, kvh = cfg.head_dim or 0, cfg.n_kv_heads
+    dtype = C.dt(cfg)
+    if kind == "ssm":
+        d_in, nh, hp, ns = M2.dims(cfg)
+        return {
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, d_in + 2 * ns), dtype),
+            "ssd": jnp.zeros((batch, nh, ns, hp), F32),
+        }
+    if kind == "rec":
+        return {
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), dtype),
+            "h": jnp.zeros((batch, cfg.lru_width), F32),
+        }
+    kv_dtype = jnp.int8 if cfg.kv_bits == 8 else dtype
+    if kind == "attn_local":
+        size = min(max_len, cfg.local_window)
+        cache = {
+            "k": jnp.zeros((batch, size, kvh, hd), kv_dtype),
+            "v": jnp.zeros((batch, size, kvh, hd), kv_dtype),
+            "pos": jnp.full((size,), -1, jnp.int32),
+        }
+        if cfg.kv_bits == 8:
+            cache["k_scale"] = jnp.zeros((batch, size, kvh), jnp.bfloat16)
+            cache["v_scale"] = jnp.zeros((batch, size, kvh), jnp.bfloat16)
+        return cache
+    cache = {
+        "k": jnp.zeros((batch, max_len, kvh, hd), kv_dtype),
+        "v": jnp.zeros((batch, max_len, kvh, hd), kv_dtype),
+    }
+    if cfg.kv_bits == 8:
+        cache["k_scale"] = jnp.zeros((batch, max_len, kvh), jnp.bfloat16)
+        cache["v_scale"] = jnp.zeros((batch, max_len, kvh), jnp.bfloat16)
+    if kind == "dec":
+        return {"self": cache, "cross": None}  # cross filled at prefill
+    return cache
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, enc_len: int = 0):
+    kinds = layer_kinds(cfg)
+    if cfg.family in ("encdec", "audio"):
+        dtype = C.dt(cfg)
+        hd, kvh = cfg.head_dim, cfg.n_kv_heads
+        per = {
+            "self": {
+                "k": jnp.zeros((cfg.n_dec_layers, batch, max_len, kvh, hd), dtype),
+                "v": jnp.zeros((cfg.n_dec_layers, batch, max_len, kvh, hd), dtype),
+            },
+            "cross": {
+                "k": jnp.zeros((cfg.n_dec_layers, batch, enc_len, kvh, hd), dtype),
+                "v": jnp.zeros((cfg.n_dec_layers, batch, enc_len, kvh, hd), dtype),
+            },
+        }
+        return per
+    pat, n_super, tail = _kind_groups(kinds)
+    if len(pat) == 1:
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_super, *x.shape)).copy(),
+            _layer_cache(cfg, pat[0], batch, max_len))
+        caches = {"layers": stacked}
+    else:
+        caches = {"layers": {}}
+        for i, kind in enumerate(pat):
+            single = _layer_cache(cfg, kind, batch, max_len)
+            caches["layers"][f"l{i}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_super, *x.shape)).copy(), single)
+    for i, kind in enumerate(tail):
+        caches[f"tail{i}"] = _layer_cache(cfg, kind, batch, max_len)
+    return caches
+
+
+def cache_logical(cfg: LMConfig):
+    """Logical axes for cache leaves (batch-sharded, heads model-sharded)."""
+    def leaf_axes(x):
+        if x.ndim >= 4:  # [(L,)? B, S, KV, hd] or ssd [(L,)? B, H, N, P]
+            lead = (None,) * (x.ndim - 4)
+            return (*lead, "batch", None, "heads", None)
+        if x.ndim >= 2:
+            return ("batch",) + (None,) * (x.ndim - 1)
+        return (None,) * x.ndim
+    return leaf_axes
+
+
+def prefill(params, cfg: LMConfig, tokens, max_len: int, embeds=None,
+            enc_inputs=None):
+    """Run the prompt, fill caches. Returns (last_logits, cache)."""
+    b = tokens.shape[0]
+    if cfg.family in ("encdec", "audio"):
+        return _encdec_prefill(params, cfg, tokens, max_len, enc_inputs)
+    caches = init_cache(cfg, b, max_len)
+    x = embed_tokens(params, cfg, tokens, embeds)
+    positions = jnp.arange(x.shape[1])
+    x, new_caches, _ = _run_stack(params, x, cfg, positions, caches=caches)
+    logits = logits_from_hidden(params, cfg, x[:, -1:])
+    return logits, new_caches
+
+
+def decode_step(params, cfg: LMConfig, token, caches, pos):
+    """token: [B, 1] int32; pos: scalar int32 (current absolute position)."""
+    if cfg.family in ("encdec", "audio"):
+        return _encdec_decode(params, cfg, token, caches, pos)
+    x = embed_tokens(params, cfg, token)
+    positions = pos + jnp.arange(1)
+    x, new_caches, _ = _run_stack(
+        params, x, cfg, positions, caches=caches, cache_pos=pos)
+    logits = logits_from_hidden(params, cfg, x)
+    return logits, new_caches
+
+
+def _encdec_prefill(params, cfg, tokens, max_len, enc_inputs):
+    enc_x = enc_inputs.astype(C.dt(cfg))
+    enc_x, _ = jax.lax.scan(_enc_layer_body(cfg), enc_x, params["enc"],
+                            unroll=cfg.scan_unroll)
+    memory = C.rms_norm(enc_x, params["ln_enc"], cfg.norm_eps)
+    b, s_enc = memory.shape[0], memory.shape[1]
+    caches = init_cache(cfg, b, max_len, enc_len=s_enc)
+    hd, kvh = cfg.head_dim, cfg.n_kv_heads
+
+    def cross_body(_, layer_p):
+        k = C.linear(memory, layer_p["xattn"]["wk"]).reshape(b, s_enc, kvh, hd)
+        v = C.linear(memory, layer_p["xattn"]["wv"]).reshape(b, s_enc, kvh, hd)
+        return None, {"k": k, "v": v}
+
+    _, cross = jax.lax.scan(cross_body, None, params["dec"],
+                            unroll=cfg.scan_unroll)
+    caches["cross"] = cross
+
+    x = embed_tokens(params, cfg, tokens)
+    positions = jnp.arange(x.shape[1])
+
+    def dec_body(xx, xs):
+        layer_p, self_c, cross_c = xs
+        hh = C.rms_norm(xx, layer_p["ln1"], cfg.norm_eps)
+        out, new_self = C.attention_block(
+            layer_p["mix"], hh, cfg, positions, causal=True,
+            kv_cache=self_c, cache_pos=None)
+        xx = xx + out
+        hx = C.rms_norm(xx, layer_p["ln_x"], cfg.norm_eps)
+        xx = xx + _cross_from_cache(layer_p["xattn"], hx, cfg, cross_c)
+        xx = xx + C.mlp(layer_p["ffn"], C.rms_norm(xx, layer_p["ln2"], cfg.norm_eps))
+        return xx, new_self
+
+    x, new_self = jax.lax.scan(
+        dec_body, x,
+        (params["dec"],
+         {"k": caches["self"]["k"], "v": caches["self"]["v"]},
+         cross),
+        unroll=cfg.scan_unroll,
+    )
+    caches = {"self": new_self, "cross": cross}
+    logits = logits_from_hidden(params, cfg, x[:, -1:])
+    return logits, caches
+
+
+def _encdec_decode(params, cfg, token, caches, pos):
+    x = embed_tokens(params, cfg, token)
+    positions = pos + jnp.arange(1)
+
+    def dec_body(xx, xs):
+        layer_p, self_c, cross_c = xs
+        hh = C.rms_norm(xx, layer_p["ln1"], cfg.norm_eps)
+        out, new_self = C.attention_block(
+            layer_p["mix"], hh, cfg, positions, causal=True,
+            kv_cache=self_c, cache_pos=pos)
+        xx = xx + out
+        hx = C.rms_norm(xx, layer_p["ln_x"], cfg.norm_eps)
+        xx = xx + _cross_from_cache(layer_p["xattn"], hx, cfg, cross_c)
+        xx = xx + C.mlp(layer_p["ffn"], C.rms_norm(xx, layer_p["ln2"], cfg.norm_eps))
+        return xx, new_self
+
+    x, new_self = jax.lax.scan(
+        dec_body, x, (params["dec"], caches["self"], caches["cross"]),
+        unroll=cfg.scan_unroll)
+    caches = {"self": new_self, "cross": caches["cross"]}
+    logits = logits_from_hidden(params, cfg, x)
+    return logits, caches
+
+
+__all__ = [
+    "init_params", "forward_train", "loss_fn", "init_cache", "prefill",
+    "decode_step", "layer_kinds", "cache_logical",
+]

@@ -1,0 +1,107 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch (GShard-style).
+
+Used by arctic-480b (128 routed experts, top-2, plus a *dense residual* MLP in
+parallel) and qwen2-moe-a2.7b (60 routed experts, top-4, plus shared experts).
+
+Expert-parallel design: the expert buffer [E, C, D] carries logical axis
+'experts' -> mesh axis 'model', so expert weights and expert compute shard
+E-ways while attention shards over heads — tokens move between data and
+expert shards via the XLA-inserted all-to-all around the scatter/gather.
+Capacity-based dropping keeps every shape static (required for pjit).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.lm.config import LMConfig
+from repro.models.lm.common import dt, init_linear, init_mlp, linear, mlp
+
+F32 = jnp.float32
+
+
+def init_moe(key, cfg: LMConfig):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    std = d**-0.5
+    p = {
+        "router": {"w": (std * jax.random.normal(ks[0], (d, e), F32)).astype(dt(cfg))},
+        "wi": (std * jax.random.normal(ks[1], (e, d, f), F32)).astype(dt(cfg)),
+        "wg": (std * jax.random.normal(ks[2], (e, d, f), F32)).astype(dt(cfg)),
+        "wo": (f**-0.5 * jax.random.normal(ks[3], (e, f, d), F32)).astype(dt(cfg)),
+    }
+    # NOTE: experts and ffn would both map to 'model' — EP wins (the paper's
+    # heterogeneity principle: give each operator ITS parallelism axis); the
+    # per-expert FFN stays unsharded inside its expert shard.
+    lg = {
+        "router": {"w": ("embed", None)},
+        "wi": ("experts", "embed", None),
+        "wg": ("experts", "embed", None),
+        "wo": ("experts", None, "embed"),
+    }
+    if cfg.n_shared_experts:
+        p["shared"], lg["shared"] = init_mlp(ks[4], cfg, d_ff=cfg.shared_d_ff)
+    if cfg.dense_residual:
+        p["dense"], lg["dense"] = init_mlp(ks[4], cfg, d_ff=cfg.d_ff)
+    return p, lg
+
+
+def moe_ffn(p, x, cfg: LMConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, D] -> (y, aux_loss). Capacity-dropped top-k routing."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt @ p["router"]["w"].astype(xt.dtype)).astype(F32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)  # [T, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(0)
+    ce = jnp.zeros((e,), F32).at[idx.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    # capacity per expert
+    cap = int(max(1, round(k * t * cfg.capacity_factor / e)))
+    cap = min(cap, t)
+
+    # position of each (token, choice) within its expert's buffer
+    flat_e = idx.reshape(-1)  # [T*k], token-major order
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # [T*k, E]
+    pos = jnp.cumsum(onehot, axis=0) - 1  # positions per expert
+    flat_pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = flat_pos < cap
+    safe_pos = jnp.where(keep, flat_pos, 0)
+
+    # dispatch: scatter tokens into the expert buffer [E, C, D]
+    xk = jnp.repeat(xt, k, axis=0)  # [T*k, D] (token-major, matches flat_e)
+    contrib = jnp.where(keep[:, None], xk, 0)
+    buf = jnp.zeros((e, cap, d), xt.dtype)
+    buf = buf.at[flat_e, safe_pos].add(jnp.where(keep[:, None], contrib, 0))
+    buf = shard(buf, "experts", None, None)
+
+    # expert compute (batched over E; shards E-ways)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(buf.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(buf.dtype))
+    h = shard(h, "experts", None, None)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(buf.dtype))
+    out_buf = shard(out_buf, "experts", None, None)
+
+    # combine: gather back and weight by the gate
+    y_tk = out_buf[flat_e, safe_pos]  # [T*k, D]
+    y_tk = jnp.where(keep[:, None], y_tk, 0)
+    y = (y_tk.reshape(t, k, d) * gate[..., None].astype(xt.dtype)).sum(1)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(p["shared"], xt)
+    if cfg.dense_residual:
+        y = y + mlp(p["dense"], xt)
+    return y.reshape(b, s, d), aux
+
+
+__all__ = ["init_moe", "moe_ffn"]

@@ -1,0 +1,159 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (diagonal linear RNN with input and recurrence gates):
+
+    r_t = sigmoid(W_a x_t + b_a)                (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)                (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)      (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Block: two parallel input projections (value branch + gelu gate branch);
+the value branch passes a short causal depthwise conv1d then the RG-LRU;
+output = W_o (h * gelu(gate)). Training/prefill evaluates the recurrence with
+`jax.lax.associative_scan` (parallel prefix — sub-quadratic and TPU-friendly);
+decode is an O(1) state update. This is the sub-quadratic path that makes
+long_500k runnable for the hybrid architecture.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.lm.config import LMConfig
+from repro.models.lm.common import dt, init_linear, linear
+
+F32 = jnp.float32
+_C = 8.0
+
+
+def init_rglru_block(key, cfg: LMConfig):
+    d, r = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 7)
+    p, lg = {}, {}
+    p["wx"], lg["wx"] = init_linear(ks[0], d, r, "embed", "ffn", cfg)
+    p["wgate"], lg["wgate"] = init_linear(ks[1], d, r, "embed", "ffn", cfg)
+    p["conv_w"] = 0.1 * jax.random.normal(ks[2], (cfg.conv_width, r), F32).astype(dt(cfg))
+    lg["conv_w"] = (None, "ffn")
+    if cfg.rglru_diagonal_gates:
+        # Griffin-style per-dimension gates: elementwise, collective-free
+        # under TP (the [R,R] gate matmuls contract over the sharded R axis
+        # and cost one psum per layer — see EXPERIMENTS.md §Perf)
+        p["wa"] = 0.05 * jax.random.normal(ks[3], (r,), F32).astype(dt(cfg))
+        p["wi"] = 0.05 * jax.random.normal(ks[4], (r,), F32).astype(dt(cfg))
+        lg["wa"] = ("ffn",)
+        lg["wi"] = ("ffn",)
+    else:
+        # gate matrices contract over the sharded R axis (row-parallel; one psum)
+        p["wa"], lg["wa"] = init_linear(ks[3], r, r, "ffn", None, cfg, std=0.05)
+        p["wi"], lg["wi"] = init_linear(ks[4], r, r, "ffn", None, cfg, std=0.05)
+    # Lambda parameterized so a_t starts in [0.9, 0.999]
+    u = jax.random.uniform(ks[5], (r,), F32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log(u)/c)
+    p["lam"] = lam.astype(F32)
+    lg["lam"] = ("ffn",)
+    p["wo"], lg["wo"] = init_linear(ks[6], r, d, "ffn", "embed", cfg)
+    return p, lg
+
+
+def _causal_conv1d(x, w, state=None):
+    """x: [B, S, R]; w: [K, R] depthwise. state: [B, K-1, R] for decode."""
+    kw = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (kw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(kw)
+    )
+    new_state = xp[:, -(kw - 1) :, :] if kw > 1 else None
+    return y, new_state
+
+
+def _rglru_gates(p, xc):
+    if not isinstance(p["wa"], dict):  # diagonal gates (collective-free, TP)
+        r_gate = jax.nn.sigmoid((xc * p["wa"]).astype(F32))
+        i_gate = jax.nn.sigmoid((xc * p["wi"]).astype(F32))
+    else:
+        r_gate = jax.nn.sigmoid(linear(xc, p["wa"]).astype(F32))
+        i_gate = jax.nn.sigmoid(linear(xc, p["wi"]).astype(F32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r_gate  # [B, S, R]
+    a = jnp.exp(log_a)
+    gated_x = i_gate * xc.astype(F32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+    return a, b
+
+
+def _comb(l, r):
+    al, bl = l
+    ar, br = r
+    return al * ar, bl * ar + br
+
+
+def rglru_scan(p, xc, chunk: int = 0):
+    """Parallel evaluation of h_t = a_t h_{t-1} + b_t over the sequence.
+
+    chunk == 0: one associative scan over the whole sequence (log2(S) sweep
+    levels -> O(S log S) intermediate traffic). chunk > 0: associative scan
+    within chunks + a sequential lax.scan carrying the chunk-boundary state —
+    the memory-traffic structure of SSD, a §Perf lever."""
+    a, b = _rglru_gates(p, xc)
+    if not chunk or xc.shape[1] <= chunk:
+        _, h = jax.lax.associative_scan(_comb, (a, b), axis=1)
+        return h.astype(xc.dtype), h[:, -1].astype(F32)
+
+    bsz, s, r = xc.shape
+    pad = (-s) % chunk
+    if pad:  # a=1, b=0 is recurrence-neutral
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    ac = a.reshape(bsz, nc, chunk, r).transpose(1, 0, 2, 3)
+    bc = b.reshape(bsz, nc, chunk, r).transpose(1, 0, 2, 3)
+
+    def step(h0, ab):
+        aa, bb = ab
+        a_cum, b_cum = jax.lax.associative_scan(_comb, (aa, bb), axis=1)
+        h = a_cum * h0[:, None, :] + b_cum  # fold in the carried state
+        return h[:, -1], h
+
+    h_last, hs = jax.lax.scan(step, jnp.zeros((bsz, r), F32), (ac, bc))
+    h = hs.transpose(1, 0, 2, 3).reshape(bsz, nc * chunk, r)[:, :s]
+    return h.astype(xc.dtype), h_last.astype(F32)
+
+
+def rglru_step(p, xc, h_prev):
+    """One decode step. xc: [B, 1, R]; h_prev: [B, R] f32."""
+    a, b = _rglru_gates(p, xc)
+    h = a[:, 0] * h_prev + b[:, 0]
+    return h[:, None, :].astype(xc.dtype), h
+
+
+def rglru_block(p, x, cfg: LMConfig, state: Optional[dict] = None):
+    """Full recurrent block. state: {'conv': [B,K-1,R], 'h': [B,R]} or None.
+
+    Returns (out, new_state)."""
+    xv = linear(x, p["wx"])
+    xv = shard(xv, "batch", None, "ffn")
+    g = jax.nn.gelu(linear(x, p["wgate"]))
+    # decode = single-token step against carried state; train/prefill = scan
+    # (prefill passes a zero-initialized state, which the scan path assumes)
+    decode = state is not None and x.shape[1] == 1
+    conv_state = state["conv"] if decode else None
+    xc, new_conv = _causal_conv1d(xv, p["conv_w"].astype(F32), conv_state)
+    if decode:
+        h, h_last = rglru_step(p, xc, state["h"])
+    else:
+        h, h_last = rglru_scan(p, xc, chunk=cfg.rglru_chunk)
+    out = linear(h.astype(g.dtype) * g, p["wo"])
+    new_state = {
+        "conv": (new_conv if new_conv is not None else jnp.zeros(
+            (x.shape[0], cfg.conv_width - 1, cfg.lru_width), dt(cfg))),
+        "h": h_last,
+    }
+    return out, new_state
+
+
+__all__ = ["init_rglru_block", "rglru_block", "rglru_scan", "rglru_step"]

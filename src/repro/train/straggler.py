@@ -1,0 +1,74 @@
+"""Straggler detection + mitigation policy (fault-tolerance substrate).
+
+SPMD training is synchronous: one slow chip stalls every step. The two
+production mitigations this framework implements:
+
+  1. detect — `StepWatchdog` tracks an EMA of step wall-times and flags
+     steps beyond `threshold` x EMA (transient stragglers: network blips,
+     preemption warnings, thermal throttling);
+  2. act — persistent stragglers trigger the checkpoint-evict-resume path:
+     the launcher checkpoints (async, already hot), the scheduler drops or
+     replaces the slow host, and training resumes with the SAME data stream
+     (deterministic skip) on the resized data-parallel mesh (elastic
+     re-shard on restore, tests/test_fault_tolerance.py).
+
+The watchdog is runtime-cheap (host-side timing only) and drives the
+`on_straggler` callback — launch/train.py wires it to checkpoint-now.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+
+@dataclasses.dataclass
+class StepWatchdog:
+    threshold: float = 2.0  # flag steps slower than threshold x EMA
+    ema_beta: float = 0.9
+    patience: int = 3  # consecutive flags => persistent straggler
+    warmup: int = 5  # steps before flagging starts
+    on_straggler: Optional[Callable[[int, float, float], None]] = None
+
+    _ema: Optional[float] = None
+    _steps: int = 0
+    _consecutive: int = 0
+    _t0: Optional[float] = None
+    flagged: List[int] = dataclasses.field(default_factory=list)
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> bool:
+        """Record one step; returns True if a persistent straggler fired."""
+        dt = time.perf_counter() - self._t0
+        return self.observe(dt)
+
+    def observe(self, dt: float) -> bool:
+        self._steps += 1
+        if self._ema is None:
+            self._ema = dt
+            return False
+        slow = (self._steps > self.warmup
+                and dt > self.threshold * self._ema)
+        if slow:
+            self.flagged.append(self._steps)
+            self._consecutive += 1
+        else:
+            self._consecutive = 0
+            # only fold healthy steps into the EMA, so a straggly stretch
+            # cannot normalize itself away
+            self._ema = self.ema_beta * self._ema + (1 - self.ema_beta) * dt
+        if self._consecutive >= self.patience:
+            if self.on_straggler is not None:
+                self.on_straggler(self._steps, dt, self._ema)
+            self._consecutive = 0
+            return True
+        return False
+
+    @property
+    def ema(self) -> Optional[float]:
+        return self._ema
+
+
+__all__ = ["StepWatchdog"]

@@ -1,0 +1,88 @@
+"""Train-step builder: microbatched grads + AdamW + (optional) compression.
+
+`make_train_step(cfg, opt_cfg, grad_accum)` returns a pure function
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+with gradient accumulation over `grad_accum` microbatches via `lax.scan`
+(bounds activation memory for the 480B-class configs), donate-friendly
+signature, and deterministic semantics suitable for checkpoint/restart
+bitwise-continuation tests.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import model as M
+from repro.models.lm.config import LMConfig
+from repro.train import optimizer as O
+from repro.train import grad_compress as GC
+
+F32 = jnp.float32
+
+
+def _split_microbatches(batch, n: int):
+    def sp(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} % grad_accum {n}"
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(
+    cfg: LMConfig,
+    opt_cfg: O.AdamWConfig,
+    grad_accum: int = 1,
+    loss_fn: Optional[Callable] = None,
+    compress: bool = False,
+    accum_dtype=F32,
+):
+    loss_fn = loss_fn or (lambda p, b: M.loss_fn(p, cfg, b))
+
+    def grads_of(params, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, grads
+
+        micro = _split_microbatches(batch, grad_accum)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(accum_dtype), acc, grads)
+            return (acc, loss_acc + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+        (gacc, loss_sum), _ = jax.lax.scan(
+            body, (zeros, jnp.zeros((), F32)), micro, unroll=cfg.scan_unroll)
+        inv = 1.0 / grad_accum
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, gacc)
+
+    def train_step(params, opt_state, batch, err_state=None):
+        loss, grads = grads_of(params, batch)
+        if compress:
+            grads, err_state = GC.compress_tree(grads, err_state)
+        params, opt_state, metrics = O.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss)
+        if compress:
+            return params, opt_state, err_state, metrics
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: LMConfig, loss_fn: Optional[Callable] = None):
+    loss_fn = loss_fn or (lambda p, b: M.loss_fn(p, cfg, b))
+
+    def eval_step(params, batch):
+        return loss_fn(params, batch)
+
+    return eval_step
+
+
+__all__ = ["make_train_step", "make_eval_step"]

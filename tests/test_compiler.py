@@ -1,0 +1,46 @@
+"""Network SoC Compiler: CU partition, invocation counts, knobs (Sec. 4.2)."""
+import pytest
+
+from repro.core import compiler as CC
+from repro.models import efficientnet as effnet, mobilenet_v2 as mnv2
+
+
+def test_mobilenet_v2_cu_mapping_matches_paper_fig15():
+    """Head, Tail, Classifier once; Body scheduled 16 times."""
+    plan = CC.compile_net(mnv2.build(alpha=0.75, input_hw=224))
+    roles = [a.cu for a in plan.schedule]
+    assert roles.count(CC.HEAD) == 2  # stem conv + first (t=1) IRB
+    assert plan.body_invocations == 16
+    assert roles.count(CC.TAIL) == 1
+    assert roles.count(CC.CLASSIFIER) == 1
+
+
+def test_efficientnet_compact_body_invoked_9_times():
+    """Paper Sec. 5.2: 'invoking the Body CU only nine times'."""
+    plan = CC.compile_net(effnet.build_compact(input_hw=128))
+    assert plan.body_invocations == 9
+
+
+def test_body_invocation_ratio():
+    """Paper Table 6 note: MobileNet-V2 body count is 1.78x EfficientNet's."""
+    m = CC.compile_net(mnv2.build(alpha=0.75, input_hw=224)).body_invocations
+    e = CC.compile_net(effnet.build_compact(128)).body_invocations
+    assert m / e == pytest.approx(16 / 9, rel=1e-6)
+
+
+def test_parallel_ops_eq8_eq9_eq10():
+    net = mnv2.build(alpha=1.0, input_hw=224)
+    po = CC.compile_net(net).parallel_ops()
+    # Eq. 8: K_max^2 * N_max over depthwise convs (3x3, widest dw = 960)
+    assert po["dw"] == 9 * 960
+    # Eq. 9: first conv is the only normal conv: 3x3 x 3 input channels
+    assert po["conv"] == 9 * 3
+    # Eq. 10: per pointwise type
+    assert po["pw_expansion"] == 320  # widest expand input
+    assert po["pw_projection"] == 960  # widest project input
+
+
+def test_buffer_sizing_scales_with_alpha():
+    big = CC.compile_net(mnv2.build(alpha=1.0, input_hw=224)).buffer_bytes()
+    small = CC.compile_net(mnv2.build(alpha=0.35, input_hw=224)).buffer_bytes()
+    assert big["body"] > small["body"]

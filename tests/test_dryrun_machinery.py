@@ -1,0 +1,84 @@
+"""Dry-run machinery unit tests.
+
+Run in a SUBPROCESS because importing repro.launch.dryrun sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512, which must never leak
+into the main test process (smoke tests expect 1 device).
+"""
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str) -> str:
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return out.stdout
+
+
+def test_depth_points_per_family():
+    out = _run("""
+from repro.launch.dryrun import build_cfg, depth_points, shape_by_name
+from repro.launch.plans import plan_for
+shape = shape_by_name("train_4k")
+for arch, expect in [
+    ("llama3.2-1b", (1, 2, 16)),
+    ("qwen3-32b", (1, 2, 64)),
+    ("mamba2-1.3b", (1, 2, 48)),
+    ("recurrentgemma-2b", (5, 8, 8)),   # pattern 3 + tail 2
+    ("seamless-m4t-large-v2", (1, 2, 24)),
+]:
+    cfg = build_cfg(arch, shape, plan_for(arch), scan_unroll=False)
+    got = depth_points(cfg)
+    assert got == expect, (arch, got, expect)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_extrapolation_linear():
+    out = _run("""
+from repro.launch.dryrun import _extrapolate
+from repro.launch.roofline import Roofline
+r1 = Roofline(10.0, 100.0, 5.0, {"all-reduce": 4}, 256)
+r2 = Roofline(14.0, 130.0, 7.0, {"all-reduce": 6}, 256)
+full = _extrapolate(r1, r2, 16)
+assert full.flops == 10 + 15 * 4
+assert full.hbm_bytes == 100 + 15 * 30
+assert full.coll_bytes == 5 + 15 * 2
+assert full.coll_detail["all-reduce"] == 4 + 15 * 2
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_production_mesh_shapes():
+    out = _run("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.mesh import make_production_mesh
+m1 = make_production_mesh()
+assert m1.axis_names == ("data", "model") and m1.devices.size == 256
+m2 = make_production_mesh(multi_pod=True)
+assert m2.axis_names == ("pod", "data", "model") and m2.devices.size == 512
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_single_cell_lower_compile_multipod():
+    """End-to-end: one multi-pod cell lowers AND compiles in-process."""
+    out = _run("""
+import json, tempfile
+from repro.launch.dryrun import run_cell, shape_by_name
+rep = run_cell("llama3.2-1b", shape_by_name("decode_32k"), multi_pod=True,
+               out_dir=tempfile.mkdtemp())
+assert rep["status"] == "ok", rep
+assert rep["mesh"] == "2x16x16"
+assert rep["roofline"]["flops_per_device"] > 0
+print("OK")
+""")
+    assert "OK" in out

@@ -1,0 +1,72 @@
+"""Pallas depthwise kernel vs pure-jnp oracle: shape/dtype/stride sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.depthwise_conv import depthwise_conv_q
+
+
+def _mk(h, w, c, K, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 16, (2, h, w, c)), jnp.int32)
+    wq = jnp.asarray(rng.integers(-7, 8, (K, K, c)), jnp.int32)
+    mult = jnp.asarray(rng.uniform(0.001, 0.01, c), jnp.float32)
+    zc = jnp.asarray(rng.uniform(0, 0.5, c), jnp.float32)
+    b = jnp.asarray(rng.integers(-3, 3, c), jnp.int32)
+    return x, wq, mult, zc, b
+
+
+@pytest.mark.parametrize("h,w,c,K,s,bc", [
+    (8, 8, 16, 3, 1, 8),
+    (8, 8, 16, 3, 2, 16),
+    (9, 9, 8, 3, 1, 8),       # odd spatial
+    (11, 13, 8, 3, 2, 8),     # odd + rectangular + stride 2
+    (12, 12, 32, 5, 1, 8),    # 5x5 kernel (EfficientNet)
+    (10, 10, 24, 5, 2, 8),
+    (16, 16, 128, 3, 1, 128), # full-channel block
+])
+def test_depthwise_matches_ref(h, w, c, K, s, bc):
+    x, wq, mult, zc, b = _mk(h, w, c, K)
+    y = depthwise_conv_q(x, wq, mult, zc, b, kernel=K, stride=s,
+                         block_c=bc, interpret=True)
+    yr = ref.depthwise_conv_q_ref(x, wq, mult, zc, b, kernel=K, stride=s)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+@pytest.mark.parametrize("qmax", [7, 15, 63, 255])
+def test_depthwise_bitwidth_sweep(qmax):
+    """BW in {3,4,6,8}: clip bound == fused ReLU6 at that BW."""
+    x, wq, mult, zc, b = _mk(8, 8, 16, 3)
+    y = depthwise_conv_q(x, wq, mult, zc, b, qmax=qmax, block_c=8,
+                         interpret=True)
+    yr = ref.depthwise_conv_q_ref(x, wq, mult, zc, b, qmax=qmax)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    assert int(y.max()) <= qmax and int(y.min()) >= 0
+
+
+def test_depthwise_no_clip_linear_output():
+    x, wq, mult, zc, b = _mk(8, 8, 8, 3)
+    y = depthwise_conv_q(x, wq, mult, zc, b, clip=False, block_c=8,
+                         interpret=True)
+    yr = ref.depthwise_conv_q_ref(x, wq, mult, zc, b, clip=False)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    assert int(y.min()) < 0  # linear path keeps negatives
+
+
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(6, 14), w=st.integers(6, 14),
+    c=st.sampled_from([8, 16]), k=st.sampled_from([3, 5]),
+    s=st.sampled_from([1, 2]), seed=st.integers(0, 10_000),
+)
+def test_property_depthwise_random_geometry(h, w, c, k, s, seed):
+    """Hypothesis sweep: any (H, W, C, K, stride) agrees with the oracle."""
+    x, wq, mult, zc, b = _mk(h, w, c, k, seed=seed)
+    y = depthwise_conv_q(x, wq, mult, zc, b, kernel=k, stride=s,
+                         block_c=8, interpret=True)
+    yr = ref.depthwise_conv_q_ref(x, wq, mult, zc, b, kernel=k, stride=s)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))

@@ -1,0 +1,81 @@
+"""Quantized matmul Pallas kernel vs oracle: bits/group/shape/dtype sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.ops import quantize_weight_for_matmul, quantized_linear
+from repro.kernels.quant_matmul import quant_matmul, unpack_int4
+
+
+@pytest.mark.parametrize("m,k,n,bits,gs,bm,bn,bk", [
+    (64, 256, 128, 8, None, 32, 64, 128),
+    (64, 256, 128, 4, None, 32, 64, 128),
+    (32, 512, 256, 4, 128, 32, 128, 128),
+    (128, 384, 128, 8, 128, 64, 128, 128),
+    (16, 128, 64, 8, 64, 16, 64, 64),
+    (256, 1024, 512, 4, 256, 128, 128, 256),
+])
+def test_quant_matmul_matches_ref(m, k, n, bits, gs, bm, bn, bk):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    wfp = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    wq, sc = quantize_weight_for_matmul(wfp, bits=bits, group_size=gs)
+    y = quant_matmul(x, wq, sc, bits=bits, block_m=bm, block_n=bn,
+                     block_k=bk, interpret=True)
+    wq_un = unpack_int4(wq, signed=True) if bits == 4 else wq
+    yr = ref.quant_matmul_ref(x, wq_un, sc, group_size=gs if gs else k)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantized_linear_dtypes(dtype):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(3, 5, 128)), dtype)
+    wfp = jnp.asarray(rng.normal(size=(128, 64)), jnp.float32)
+    wq, sc = quantize_weight_for_matmul(wfp, bits=8)
+    y = quantized_linear(x, wq, sc, bits=8)
+    assert y.shape == (3, 5, 64) and y.dtype == dtype
+    yr = ref.quant_matmul_ref(x.reshape(-1, 128).astype(jnp.float32), wq, sc,
+                              group_size=128)
+    np.testing.assert_allclose(
+        np.asarray(y.reshape(-1, 64), np.float32), np.asarray(yr),
+        rtol=2e-2, atol=2e-1)
+
+
+def test_quantization_error_scales_with_bits():
+    """4-bit weight error > 8-bit weight error (sanity on the BW knob)."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(32, 256)), jnp.float32)
+    wfp = jnp.asarray(rng.normal(size=(256, 64)), jnp.float32)
+    exact = x @ wfp
+    errs = {}
+    for bits in (4, 8):
+        wq, sc = quantize_weight_for_matmul(wfp, bits=bits, group_size=64)
+        y = quant_matmul(x, wq, sc, bits=bits, block_m=32, block_n=64,
+                         block_k=64, interpret=True)
+        errs[bits] = float(jnp.abs(y - exact).mean())
+    assert errs[4] > errs[8] > 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([16, 64]),
+    k=st.sampled_from([128, 256]),
+    n=st.sampled_from([64, 128]),
+    bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 1000),
+)
+def test_property_quant_matmul(m, k, n, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    wfp = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    wq, sc = quantize_weight_for_matmul(wfp, bits=bits)
+    y = quant_matmul(x, wq, sc, bits=bits, block_m=16, block_n=64,
+                     block_k=128, interpret=True)
+    wq_un = unpack_int4(wq, signed=True) if bits == 4 else wq
+    yr = ref.quant_matmul_ref(x, wq_un, sc, group_size=k)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-5, atol=1e-3)

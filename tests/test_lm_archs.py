@@ -1,0 +1,134 @@
+"""Per-architecture smoke tests (deliverable f): reduced configs on CPU.
+
+One forward + one train step asserting output shapes and no NaNs, plus the
+prefill/decode == teacher-forced-forward equivalence for every family.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced_config
+from repro.models.lm import model as M
+from repro.train import optimizer as O
+from repro.train.train_loop import make_train_step
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch(cfg, key, b=2, s=16):
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    batch = {"tokens": tokens}
+    if cfg.family == "vlm":
+        batch["embeds"] = jax.random.normal(
+            key, (b, cfg.frontend_len, cfg.d_model))
+    if cfg.family in ("encdec", "audio"):
+        batch["enc_inputs"] = jax.random.normal(
+            key, (b, cfg.frontend_len, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL config must carry the exact published hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+        "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+        "seamless-m4t-large-v2": (48, 1024, 16, 16, 8192, 256206),
+        "mamba2-1.3b": (48, 2048, 32, 32, 0, 50280),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff if cfg.family != "moe" or arch == "arctic-480b" else cfg.moe_d_ff,
+           cfg.vocab)
+    if arch == "qwen2-moe-a2.7b":
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.moe_d_ff, cfg.vocab)
+    assert got == expected
+    if cfg.family == "moe":
+        n_e = {"arctic-480b": (128, 2), "qwen2-moe-a2.7b": (60, 4)}[arch]
+        assert (cfg.n_experts, cfg.top_k) == n_e
+    if arch == "mamba2-1.3b":
+        assert cfg.ssm_state == 128
+    if arch == "recurrentgemma-2b":
+        assert cfg.block_pattern == ("rec", "rec", "attn")
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = reduced_config(arch)
+    key = jax.random.PRNGKey(0)
+    params, _ = M.init_params(cfg, key)
+    batch = _batch(cfg, key)
+    logits, aux = M.forward_train(
+        params, cfg, batch["tokens"], embeds=batch.get("embeds"),
+        enc_inputs=batch.get("enc_inputs"))
+    s_expect = batch["tokens"].shape[1] + (
+        cfg.frontend_len if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, s_expect, M.padded_vocab(cfg))
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    step = make_train_step(cfg, O.AdamWConfig(lr=1e-3, total_steps=10))
+    opt = O.init_state(params)
+    params2, opt2, metrics = step(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # parameters actually moved
+    moved = jax.tree.reduce(
+        lambda a, b: a or b,
+        jax.tree.map(lambda a, b: bool(jnp.any(a != b)), params, params2))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = reduced_config(arch)
+    key = jax.random.PRNGKey(0)
+    params, _ = M.init_params(cfg, key)
+    b, s, t0 = 2, 16, 8
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    kw = {}
+    offset = 0
+    if cfg.family == "vlm":
+        kw["embeds"] = jax.random.normal(key, (b, cfg.frontend_len, cfg.d_model))
+        offset = cfg.frontend_len
+    if cfg.family in ("encdec", "audio"):
+        kw["enc_inputs"] = jax.random.normal(
+            key, (b, cfg.frontend_len, cfg.d_model))
+    full, _ = M.forward_train(params, cfg, tokens, embeds=kw.get("embeds"),
+                              enc_inputs=kw.get("enc_inputs"))
+    logits, cache = M.prefill(params, cfg, tokens[:, :t0],
+                              max_len=offset + s, embeds=kw.get("embeds"),
+                              enc_inputs=kw.get("enc_inputs"))
+    errs = [float(jnp.abs(logits[:, 0] - full[:, offset + t0 - 1]).max())]
+    for t in range(t0, s):
+        logits, cache = M.decode_step(
+            params, cfg, tokens[:, t:t + 1], cache, jnp.int32(offset + t))
+        errs.append(float(jnp.abs(logits[:, 0] - full[:, offset + t]).max()))
+    assert max(errs) < 2e-2, f"decode drift {max(errs)}"
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-1.3b"])
+def test_quantized_serving_params(arch):
+    """quant_bits=8: int8 weights load and decode produces finite logits."""
+    cfg = dataclasses.replace(reduced_config(arch), quant_bits=8)
+    params, _ = M.init_params(cfg, jax.random.PRNGKey(0))
+    int8_leaves = [x for x in jax.tree.leaves(params) if x.dtype == jnp.int8]
+    assert int8_leaves, "no quantized weights found"
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    logits, cache = M.prefill(params, cfg, tokens, max_len=16)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+def test_long_context_skip_rule():
+    """long_500k runs only for sub-quadratic families (DESIGN.md §4)."""
+    sub = {a for a in ALL_ARCHS if get_config(a).subquadratic}
+    assert sub == {"recurrentgemma-2b", "mamba2-1.3b"}

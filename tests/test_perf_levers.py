@@ -1,0 +1,80 @@
+"""§Perf hillclimb levers must preserve semantics (see EXPERIMENTS.md §Perf)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models.lm import model as M
+from repro.models.lm import rglru as RG
+
+
+def _decode_drift(cfg, key, s=16, t0=8):
+    params, _ = M.init_params(cfg, key)
+    tokens = jax.random.randint(key, (2, s), 0, cfg.vocab)
+    full, _ = M.forward_train(params, cfg, tokens)
+    logits, cache = M.prefill(params, cfg, tokens[:, :t0], max_len=s)
+    errs = [float(jnp.abs(logits[:, 0] - full[:, t0 - 1]).max())]
+    for t in range(t0, s):
+        logits, cache = M.decode_step(
+            params, cfg, tokens[:, t:t + 1], cache, jnp.int32(t))
+        errs.append(float(jnp.abs(logits[:, 0] - full[:, t]).max()))
+    return max(errs)
+
+
+def test_kv_cache_int8_decode_within_quant_tolerance():
+    cfg = dataclasses.replace(reduced_config("llama3.2-1b"), kv_bits=8)
+    assert _decode_drift(cfg, jax.random.PRNGKey(0)) < 0.35
+
+
+def test_rglru_diagonal_gates_exact_decode():
+    cfg = dataclasses.replace(reduced_config("recurrentgemma-2b"),
+                              rglru_diagonal_gates=True)
+    assert _decode_drift(cfg, jax.random.PRNGKey(0)) < 2e-2
+
+
+def test_rglru_chunked_scan_matches_full_scan():
+    """chunk > 0 must be numerically equivalent to the full associative scan."""
+    cfg = reduced_config("recurrentgemma-2b")
+    p, _ = RG.init_rglru_block(jax.random.PRNGKey(0), cfg)
+    xc = jax.random.normal(jax.random.PRNGKey(1), (2, 19, cfg.lru_width))
+    h_full, last_full = RG.rglru_scan(p, xc, chunk=0)
+    for chunk in (4, 8, 16):
+        h_c, last_c = RG.rglru_scan(p, xc, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(h_full, np.float32),
+                                   np.asarray(h_c, np.float32),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(last_full), np.asarray(last_c),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_kv_quant_roundtrip_error_bound():
+    from repro.models.lm.common import kv_dequant, kv_quant
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 16)) * 3
+    q, s = kv_quant(x)
+    xr = kv_dequant(q, s, jnp.float32)
+    rel = float(jnp.abs(xr - x).max() / jnp.abs(x).max())
+    assert rel < 1e-2
+    assert q.dtype == jnp.int8
+
+
+def test_grouped_gqa_matches_repeat_reference():
+    """Grouped GQA (no materialized K/V repeat — §Perf cell A iter 1) must be
+    numerically identical to the explicit-repeat formulation."""
+    from repro.models.lm import common as C
+    key = jax.random.PRNGKey(0)
+    for (h, kv, sq, sk) in [(8, 2, 6, 6), (4, 1, 3, 9), (8, 4, 5, 5)]:
+        q = jax.random.normal(key, (2, sq, h, 16))
+        k = jax.random.normal(jax.random.PRNGKey(1), (2, sk, kv, 16))
+        v = jax.random.normal(jax.random.PRNGKey(2), (2, sk, kv, 16))
+        out = C.full_attention(q, k, v, causal=True)
+        kr, vr = C._repeat_kv(k, h), C._repeat_kv(v, h)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", q, kr) * 16**-0.5
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        sc = jnp.where(mask[None, None], sc, -1e30)
+        ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(sc, -1), vr)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=1e-4, atol=1e-5)

@@ -1,0 +1,82 @@
+"""E2E front-end flow (paper Fig. 1/4): QAT -> calibrate -> QNet -> integer
+inference preserves accuracy (Fig. 13a: UInt4 ~= FP32 after QAT)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cu, qnet as Q
+from repro.core.calibrate import calibrate
+from repro.core.quant import QuantConfig
+from repro.data.pipeline import image_batch
+from repro.models import layers, mobilenet_v2 as mnv2
+from repro.train import optimizer as O
+
+HW, CLASSES = 16, 4
+
+
+def _net():
+    return mnv2.build(alpha=0.35, input_hw=HW, num_classes=CLASSES)
+
+
+def _train(net, params, steps, qat, lr=2e-3, seed=0):
+    ocfg = O.AdamWConfig(lr=lr, warmup_steps=5, total_steps=steps,
+                         weight_decay=0.0)
+    opt = O.init_state(params)
+
+    @jax.jit
+    def step(params, opt, images, labels):
+        def loss_fn(p):
+            logits, _ = layers.forward(p, images, net, qat=qat)
+            lp = jax.nn.log_softmax(logits)
+            return -jnp.take_along_axis(lp, labels[:, None], 1).mean()
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = O.apply_updates(params, g, opt, ocfg)
+        return params, opt, loss
+
+    for s in range(steps):
+        b = image_batch(seed, s, 32, HW, CLASSES)
+        params, opt, loss = step(params, opt, jnp.asarray(b["images"]),
+                                 jnp.asarray(b["labels"]))
+    return params
+
+
+def _accuracy(fn, seed=99, n=4):
+    correct = total = 0
+    for s in range(n):
+        b = image_batch(seed, s, 32, HW, CLASSES)
+        pred = fn(jnp.asarray(b["images"]))
+        correct += int((np.asarray(pred) == b["labels"]).sum())
+        total += len(b["labels"])
+    return correct / total
+
+
+@pytest.mark.slow
+def test_qat_to_integer_qnet_preserves_accuracy():
+    net = _net()
+    params = layers.init_params(jax.random.PRNGKey(0), net)
+    # stage 1: float pre-training, stage 2: online quantization (QAT)
+    params = _train(net, params, steps=120, qat=False)
+    params = _train(net, params, steps=60, qat=True, lr=5e-4)
+
+    acc_float = _accuracy(
+        lambda x: jnp.argmax(layers.forward(params, x, net)[0], -1))
+    assert acc_float > 0.6, f"float model failed to learn: {acc_float}"
+
+    # calibration + post-training quantization -> QNet
+    def apply_fn(p, b):
+        return layers.forward(p, b, net, capture=True)[1]
+
+    batches = [jnp.asarray(image_batch(1, s, 32, HW, CLASSES)["images"])
+               for s in range(4)]
+    obs = calibrate(apply_fn, params, batches, QuantConfig(4, False, None))
+    qn = Q.quantize_net(params, net, obs)
+
+    acc_int = _accuracy(lambda x: jnp.argmax(cu.run_qnet(qn, x), -1))
+    # Fig. 13a: 4-bit QAT tracks float accuracy closely
+    assert acc_int >= acc_float - 0.15, (acc_float, acc_int)
+
+    # Fig. 13b: and the deployed model is ~8x smaller
+    fp32_bytes = net.n_params(with_bias=False) * 4
+    assert fp32_bytes / qn.model_bytes() > 4.0

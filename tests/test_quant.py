@@ -1,0 +1,110 @@
+"""Unit + property tests for core/quant.py (range-based linear quantization)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (
+    QuantConfig, compute_scale_zp, dequantize, fake_quant, fake_quant_minmax,
+    observe_range, pack_int4, packed_nbytes, quantize, unpack_int4,
+)
+
+
+@pytest.mark.parametrize("bits", [3, 4, 5, 6, 8])
+@pytest.mark.parametrize("symmetric", [False, True])
+def test_roundtrip_error_bound(bits, symmetric):
+    """|dequant(quant(x)) - x| <= S/2 for x inside the observed range."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(-3, 5, (64, 32)), jnp.float32)
+    cfg = QuantConfig(bits, symmetric=symmetric, channel_axis=None)
+    mn, mx = observe_range(x, cfg)
+    s, z = compute_scale_zp(mn, mx, cfg)
+    q = quantize(x, s, z, cfg)
+    xr = dequantize(q, s, z, cfg)
+    assert float(jnp.abs(xr - x).max()) <= float(s) * 0.5 + 1e-6
+
+
+def test_asymmetric_maps_min_to_zero_max_to_qmax():
+    """The paper's asymmetric mode: min -> 0, max -> 2^BW - 1."""
+    cfg = QuantConfig(4, symmetric=False)
+    x = jnp.asarray([0.0, 1.5, 6.0])
+    mn, mx = observe_range(x, cfg)
+    s, z = compute_scale_zp(mn, mx, cfg)
+    q = quantize(x, s, z, cfg)
+    assert int(q[0]) == 0 and int(q[-1]) == cfg.qmax == 15
+
+
+def test_zero_is_exact():
+    """x == 0.0 must be exactly representable (zero-point requirement)."""
+    cfg = QuantConfig(4, symmetric=False)
+    x = jnp.asarray([-0.7, 0.0, 2.3])
+    mn, mx = observe_range(x, cfg)
+    s, z = compute_scale_zp(mn, mx, cfg)
+    q = quantize(x, s, z, cfg)
+    xr = dequantize(q, s, z, cfg)
+    assert float(jnp.abs(xr[1])) == 0.0
+
+
+def test_per_channel_independent_scales():
+    cfg = QuantConfig(4, symmetric=True, channel_axis=-1)
+    x = jnp.stack([jnp.linspace(-1, 1, 32), jnp.linspace(-100, 100, 32)], -1)
+    mn, mx = observe_range(x, cfg)
+    s, _ = compute_scale_zp(mn, mx, cfg)
+    assert s.shape == (2,)
+    assert float(s[1]) > 50 * float(s[0])
+
+
+def test_ste_gradient_clips_out_of_range():
+    cfg = QuantConfig(4, symmetric=False)
+    s, z = jnp.asarray(0.1), jnp.asarray(0.0)
+
+    def f(x):
+        return fake_quant(x, s, z, cfg).sum()
+
+    g = jax.grad(f)(jnp.asarray([0.5, 100.0, -5.0]))
+    assert float(g[0]) == 1.0  # in range: pass-through
+    assert float(g[1]) == 0.0  # above range: clipped
+    assert float(g[2]) == 0.0  # below range: clipped
+
+
+def test_pack_unpack_int4_roundtrip():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.integers(0, 16, (8, 6)), jnp.int32)
+    assert (unpack_int4(pack_int4(q)) == q).all()
+    qs = jnp.asarray(rng.integers(-8, 8, (4, 10)), jnp.int32)
+    packed = pack_int4(jnp.where(qs < 0, qs + 16, qs))
+    assert (unpack_int4(packed, signed=True) == qs).all()
+
+
+def test_packed_nbytes_model_size():
+    """Fig 13b: BW=4 -> 8x smaller than FP32."""
+    shape = (1000, 32)
+    assert packed_nbytes(shape, 4) * 8 == packed_nbytes(shape, 32)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    bits=st.sampled_from([3, 4, 5, 6, 8]),
+    lo=st.floats(-100, 0, allow_nan=False),
+    span=st.floats(0.01, 200, allow_nan=False),
+)
+def test_property_quantized_values_in_range(bits, lo, span):
+    cfg = QuantConfig(bits, symmetric=False)
+    x = jnp.linspace(lo, lo + span, 128, dtype=jnp.float32)
+    mn, mx = observe_range(x, cfg)
+    s, z = compute_scale_zp(mn, mx, cfg)
+    q = quantize(x, s, z, cfg)
+    assert int(q.min()) >= cfg.qmin and int(q.max()) <= cfg.qmax
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.sampled_from([4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_property_fake_quant_idempotent(bits, seed):
+    """fake_quant(fake_quant(x)) == fake_quant(x)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(32,)), jnp.float32)
+    cfg = QuantConfig(bits, symmetric=True)
+    y1 = fake_quant_minmax(x, cfg)
+    y2 = fake_quant_minmax(y1, cfg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=0, atol=1e-6)

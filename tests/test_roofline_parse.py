@@ -1,0 +1,61 @@
+"""Roofline HLO parsing: shape bytes, collective operand accounting."""
+import pytest
+
+from repro.launch import roofline as RL
+
+
+def test_shape_bytes():
+    assert RL.shape_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+    assert RL.shape_bytes("bf16[8]") == 16
+    assert RL.shape_bytes("(f32[2,2], s8[4])") == 16 + 4
+    assert RL.shape_bytes("pred[]") == 1
+    assert RL.shape_bytes("token[]") == 0
+
+
+def test_collective_bytes_sums_operands():
+    hlo = """
+HloModule test
+ENTRY main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %p1 = bf16[64]{0} parameter(1)
+  %ar = f32[128,256]{1,0} all-reduce(%p0), replica_groups={}, to_apply=%add
+  %ag = bf16[128]{0} all-gather(%p1), dimensions={0}
+  %cp = f32[128,256]{1,0} collective-permute(%ar), source_target_pairs={{0,1}}
+  ROOT %t = (f32[128,256]{1,0}) tuple(%cp)
+}
+"""
+    out = RL.collective_bytes(hlo)
+    assert out["all-reduce"] == 128 * 256 * 4
+    assert out["all-gather"] == 64 * 2
+    assert out["collective-permute"] == 128 * 256 * 4
+    assert out["n_ops"] == 3
+
+
+def test_roofline_terms_and_bottleneck():
+    r = RL.Roofline(flops=197e12, hbm_bytes=819e9 * 2, coll_bytes=50e9 * 0.5,
+                    coll_detail={}, n_devices=256)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.t_collective == pytest.approx(0.5)
+    assert r.bottleneck == "memory"
+    assert r.t_bound == pytest.approx(2.0)
+
+
+def test_model_flops_modes():
+    from repro.configs import get_config
+    from repro.models.lm.config import SHAPES
+
+    cfg = get_config("llama3.2-1b")
+    n = cfg.param_count()
+    train = next(s for s in SHAPES if s.name == "train_4k")
+    dec = next(s for s in SHAPES if s.name == "decode_32k")
+    assert RL.model_flops(cfg, train, n) == 6.0 * n * 256 * 4096
+    assert RL.model_flops(cfg, dec, n) == 2.0 * n * 128
+
+
+def test_moe_active_params_much_smaller_than_total():
+    from repro.configs import get_config
+    cfg = get_config("arctic-480b")
+    total, active = cfg.param_count(), cfg.active_param_count()
+    assert total > 400e9, total  # it really is a ~480B config
+    assert active < 30e9, active  # top-2 of 128 experts + dense residual

@@ -1,0 +1,67 @@
+"""Logical-axis sharding rules + shape fitting + mesh plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as SH
+from repro.launch.mesh import make_host_mesh
+
+
+def test_logical_rules_single_pod():
+    mesh = make_host_mesh()
+    spec = SH.logical_to_spec(("batch", None, "heads"), mesh)
+    assert spec == P(("data",), None, "model")
+    spec = SH.logical_to_spec(("vocab", "embed"), mesh, fsdp=True)
+    assert spec == P("model", "data")
+    spec = SH.logical_to_spec(("vocab", "embed"), mesh, fsdp=False)
+    assert spec == P("model", None)
+
+
+def test_fit_spec_drops_nondividing_axes():
+    mesh = make_host_mesh()  # (1, 1) on this container: everything divides
+    # fabricate a mesh-shape check via the helper directly
+    spec = SH._fit_spec_to_shape(P("data", "model"), (7, 8), mesh)
+    # axis sizes are 1 here, so nothing is dropped
+    assert spec == P("data", "model")
+
+
+def test_shard_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    y = SH.shard(x, "batch", None)
+    assert (np.asarray(x) == np.asarray(y)).all()
+
+
+def test_tree_shardings_with_shapes():
+    mesh = make_host_mesh()
+    logical = {"w": ("vocab", "embed"), "b": (None,)}
+    shapes = {"w": jax.ShapeDtypeStruct((100, 8), jnp.float32),
+              "b": jax.ShapeDtypeStruct((8,), jnp.float32)}
+    sh = SH.tree_shardings(logical, mesh, shapes=shapes)
+    assert sh["w"].spec == P("model", None)
+    assert sh["b"].spec == P(None)
+
+
+def test_use_mesh_context_restores():
+    mesh = make_host_mesh()
+    assert SH.current_mesh() is None
+    with SH.use_mesh(mesh):
+        assert SH.current_mesh() is mesh
+        assert SH.axis_size("data") == mesh.shape["data"]
+    assert SH.current_mesh() is None
+    assert SH.axis_size("data") == 1
+
+
+def test_sharded_forward_under_host_mesh():
+    """Model forward runs unchanged under an active (degenerate) mesh."""
+    from repro.configs import reduced_config
+    from repro.models.lm import model as M
+
+    cfg = reduced_config("llama3.2-1b")
+    mesh = make_host_mesh()
+    with SH.use_mesh(mesh):
+        params, logical = M.init_params(cfg, jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+        logits, _ = M.forward_train(params, cfg, tokens)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())

