@@ -1,0 +1,155 @@
+"""Vision serving throughput: pipelined CU-stage engine vs naive `run_qnet`.
+
+Three ways to serve the same calibrated integer MobileNet-V2:
+
+  * naive      — one batch at a time through the monolithic `cu.run_qnet`
+                 (op-by-op dispatch, block between batches): what a
+                 straight-line port of the reference runner does.
+  * monolith   — `jax.jit(run_qnet)` as one XLA program, still one batch at
+                 a time: removes dispatch overhead but keeps the device
+                 idle between batches.
+  * pipelined  — the serve.vision engine: per-CU jitted stage executors,
+                 micro-batches streamed so all CU stages stay in flight
+                 (the paper's double-buffered CU invocation schedule).
+
+Reports images/sec (the paper's Table 3/6 FPS view) and the engine's
+energy-proxy FPS/W. Writes a JSON report (default
+experiments/vision_serving.json) and prints the usual CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import cu, qnet as Q
+from repro.core.calibrate import calibrate
+from repro.core.quant import QuantConfig
+from repro.models import layers, mobilenet_v2 as mnv2
+from repro.serve.vision import VisionEngine
+
+
+def _make_qnet(net, hw: int):
+    params = layers.init_params(jax.random.PRNGKey(0), net)
+
+    def apply_fn(p, b):
+        return layers.forward(p, b, net, capture=True)[1]
+
+    cal = [jax.random.uniform(jax.random.PRNGKey(i), (2, hw, hw, 3),
+                              minval=-1, maxval=1) for i in range(2)]
+    obs = calibrate(apply_fn, params, cal, QuantConfig(4, False, None))
+    return Q.quantize_net(params, net, obs)
+
+
+def run(alpha: float = 0.35, hw: int = 48, batch: int = 8, n_images: int = 64,
+        repeats: int = 2, out: str = "experiments/vision_serving.json"):
+    net = mnv2.build(alpha=alpha, input_hw=hw, num_classes=1000)
+    qnet = _make_qnet(net, hw)
+    imgs = np.asarray(jax.random.uniform(
+        jax.random.PRNGKey(7), (n_images, hw, hw, 3), minval=-1, maxval=1),
+        np.float32)
+    batches = [jnp.asarray(imgs[i:i + batch])
+               for i in range(0, n_images, batch)]
+
+    # best-of-N for each serving mode: the box this runs on is shared, so a
+    # single pass is hostage to scheduler noise
+    # --- naive: monolithic runner, one batch at a time -------------------
+    ref0 = jax.block_until_ready(cu.run_qnet(qnet, batches[0]))  # warm caches
+    if batches[-1].shape != batches[0].shape:  # ragged tail: warm it too
+        jax.block_until_ready(cu.run_qnet(qnet, batches[-1]))
+    t_naive = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for x in batches:
+            jax.block_until_ready(cu.run_qnet(qnet, x))
+        t_naive = min(t_naive, time.perf_counter() - t0)
+    fps_naive = n_images / t_naive
+
+    # --- monolith jit: one XLA program, one batch at a time --------------
+    mono = jax.jit(lambda x: cu.run_qnet(qnet, x))
+    jax.block_until_ready(mono(batches[0]))
+    if batches[-1].shape != batches[0].shape:
+        jax.block_until_ready(mono(batches[-1]))
+    t_mono = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for x in batches:
+            jax.block_until_ready(mono(x))
+        t_mono = min(t_mono, time.perf_counter() - t0)
+    fps_mono = n_images / t_mono
+
+    # --- pipelined CU-stage engine ---------------------------------------
+    stats = None
+    results = None
+    for _ in range(repeats):
+        eng = VisionEngine(qnet, buckets=(batch,))
+        eng.warmup()
+        for img in imgs:
+            eng.submit(img)
+        res = eng.run()
+        st = eng.stats()
+        if stats is None or st.fps > stats.fps:
+            stats, results = st, res
+
+    # sanity: serving path is bit-exact with the reference
+    got0 = np.stack([results[r].logits for r in sorted(results)[:batch]])
+    exact = bool(np.array_equal(got0, np.asarray(ref0)))
+
+    report = {
+        "net": qnet.spec.name,
+        "alpha": alpha,
+        "input_hw": hw,
+        "batch": batch,
+        "n_images": n_images,
+        "repeats": repeats,
+        "fps_naive": fps_naive,
+        "fps_monolith_jit": fps_mono,
+        "fps_pipelined": stats.fps,
+        "speedup_vs_naive": stats.fps / fps_naive,
+        "speedup_vs_monolith_jit": stats.fps / fps_mono,
+        "bit_exact_with_run_qnet": exact,
+        "latency_p50_s": stats.latency_p50_s,
+        "latency_p95_s": stats.latency_p95_s,
+        "micro_batches": stats.micro_batches,
+        "pad_fraction": stats.pad_fraction,
+        "harvest_wait_s": stats.harvest_wait_s,
+        "macs_per_image": stats.macs_per_image,
+        "energy_j_per_image_proxy": stats.energy_j_per_image_proxy,
+        "fps_per_watt_proxy": stats.fps_per_watt_proxy,
+        "backend": jax.default_backend(),
+    }
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+
+    row("vision_serve_naive", t_naive / len(batches) * 1e6,
+        f"fps={fps_naive:.1f}")
+    row("vision_serve_monolith_jit", t_mono / len(batches) * 1e6,
+        f"fps={fps_mono:.1f}")
+    row("vision_serve_pipelined", stats.wall_s / stats.micro_batches * 1e6,
+        f"fps={stats.fps:.1f} speedup_vs_naive={report['speedup_vs_naive']:.2f}x "
+        f"exact={exact}")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--alpha", type=float, default=0.35)
+    ap.add_argument("--hw", type=int, default=48)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--n-images", type=int, default=64)
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--out", default="experiments/vision_serving.json")
+    args = ap.parse_args()
+    run(alpha=args.alpha, hw=args.hw, batch=args.batch,
+        n_images=args.n_images, repeats=args.repeats, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

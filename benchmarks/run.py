@@ -7,6 +7,7 @@
   bench_fusion              Sec 5.1.2 (fused Body CU traffic reduction)
   bench_table6_efficientnet Table 6/7 (compact EfficientNet + CU mapping)
   bench_quant_serving       beyond-paper: LM weight-quantized serving
+  bench_vision_serving      beyond-paper: pipelined CU-stage vision serving
   bench_kernels             kernel-level microbenchmarks
 """
 from __future__ import annotations
@@ -23,12 +24,14 @@ def main() -> None:
         bench_table2,
         bench_table3,
         bench_table6_efficientnet,
+        bench_vision_serving,
     )
 
     print("name,us_per_call,derived")
     mods = [
         bench_table2, bench_bw_sweep, bench_table3, bench_fusion,
-        bench_table6_efficientnet, bench_quant_serving, bench_kernels,
+        bench_table6_efficientnet, bench_quant_serving,
+        bench_vision_serving, bench_kernels,
     ]
     failures = 0
     for m in mods:

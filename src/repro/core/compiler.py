@@ -34,6 +34,25 @@ class CUAssignment:
     invocation: int  # order in the host schedule
 
 
+@dataclasses.dataclass(frozen=True)
+class StageSignature:
+    """Shape contract of one CU stage (the 'AXI job descriptor' analogue).
+
+    `in_hw`/`out_hw` are None once the tensor is spatially collapsed (after
+    the Tail CU's global pool / in the Classifier CU)."""
+
+    cu: str
+    blocks: Tuple[G.BlockSpec, ...]
+    in_hw: Optional[int]
+    in_ch: int
+    out_hw: Optional[int]
+    out_ch: int
+
+    @property
+    def invocations(self) -> int:
+        return len(self.blocks)
+
+
 @dataclasses.dataclass
 class CUPlan:
     net: G.NetSpec
@@ -45,6 +64,44 @@ class CUPlan:
 
     def blocks_for(self, cu: str) -> List[G.BlockSpec]:
         return [a.block for a in self.schedule if a.cu == cu]
+
+    def stage_groups(self) -> Tuple[Tuple[str, Tuple[G.BlockSpec, ...]], ...]:
+        """Contiguous same-CU runs of the schedule, in invocation order.
+
+        This is the pipeline a serving engine executes: each group becomes
+        one stage executor, invoked once per micro-batch. Raises if a CU
+        role recurs non-contiguously (no such network exists under the
+        recurrence partitioning rule, but a hand-built schedule could)."""
+        groups: List[Tuple[str, List[G.BlockSpec]]] = []
+        for a in self.schedule:
+            if groups and groups[-1][0] == a.cu:
+                groups[-1][1].append(a.block)
+            else:
+                groups.append((a.cu, [a.block]))
+        seen = [cu for cu, _ in groups]
+        if len(set(seen)) != len(seen):
+            raise ValueError(f"non-contiguous CU schedule: {seen}")
+        return tuple((cu, tuple(blocks)) for cu, blocks in groups)
+
+    def stage_signatures(self) -> Tuple[StageSignature, ...]:
+        """Lower the schedule into per-stage shape signatures (what each
+        jitted stage executor consumes/produces for batch size 1)."""
+        sigs: List[StageSignature] = []
+        hw: Optional[int] = self.net.input_hw
+        ch = self.net.input_ch
+        for cu, blocks in self.stage_groups():
+            in_hw, in_ch = hw, ch
+            for b in blocks:
+                for op in b.ops:
+                    if op.kind == G.DENSE:
+                        hw = None
+                    elif hw is not None:
+                        hw = -(-hw // op.stride)
+                    ch = op.out_ch
+                if b.avgpool:
+                    hw = None
+            sigs.append(StageSignature(cu, blocks, in_hw, in_ch, hw, ch))
+        return tuple(sigs)
 
     # ---- architecture knobs (paper Sec. 4.1) ----
 

@@ -123,6 +123,41 @@ def run_block(
     return y, cur_s, cur_z
 
 
+def run_blocks(
+    x_q: jnp.ndarray,
+    blocks,
+    qnet: QNet,
+    in_s: float,
+    in_z: float,
+    fixed_point: bool = False,
+) -> Tuple[jnp.ndarray, float, float]:
+    """Execute a contiguous block sequence (e.g. one CU stage's blocks)."""
+    y, cur_s, cur_z = x_q, in_s, in_z
+    for block in blocks:
+        y, cur_s, cur_z = run_block(y, block, qnet, cur_s, cur_z, fixed_point)
+    return y, cur_s, cur_z
+
+
+def propagate_qparams(blocks, qnet: QNet, in_s: float, in_z: float):
+    """(scale, zp) of the tensor leaving `blocks`, computed from QNet
+    metadata only — no data needed. Matches `run_blocks` exactly, which is
+    what lets the stage compiler bake per-stage quantizers in as statics."""
+    cur_s, cur_z = in_s, in_z
+    for block in blocks:
+        for op in block.ops:
+            qop = qnet.ops[op.name]
+            cur_s, cur_z = qop.out_scale, qop.out_zp
+        if block.residual:
+            cur_s, cur_z = qnet.res_q[block.name]
+    return cur_s, cur_z
+
+
+def input_qparams(qnet: QNet) -> Tuple[float, float]:
+    """The network input quantizer (the first op's input activation)."""
+    first = qnet.ops[qnet.spec.blocks[0].ops[0].name]
+    return first.in_scale, first.in_zp
+
+
 def run_qnet(
     qnet: QNet,
     x: jnp.ndarray,
@@ -131,13 +166,18 @@ def run_qnet(
 ) -> jnp.ndarray:
     """Full integer inference. Returns float logits (dequantized at the end,
     where the FPGA hands confidence computation back to the PS/softmax)."""
-    net = qnet.spec
-    first = qnet.ops[net.blocks[0].ops[0].name]
-    y = quantize_input(x, first.in_scale, first.in_zp, input_bits)
-    cur_s, cur_z = first.in_scale, first.in_zp
-    for block in net.blocks:
-        y, cur_s, cur_z = run_block(y, block, qnet, cur_s, cur_z, fixed_point)
+    in_s, in_z = input_qparams(qnet)
+    y = quantize_input(x, in_s, in_z, input_bits)
+    y, cur_s, cur_z = run_blocks(y, qnet.spec.blocks, qnet, in_s, in_z,
+                                 fixed_point)
     return (y.astype(jnp.float32) + cur_z) * cur_s
 
 
-__all__ = ["quantize_input", "run_block", "run_qnet"]
+__all__ = [
+    "quantize_input",
+    "run_block",
+    "run_blocks",
+    "propagate_qparams",
+    "input_qparams",
+    "run_qnet",
+]

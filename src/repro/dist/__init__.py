@@ -1,0 +1,3 @@
+"""Distribution utilities: logical-axis sharding rules and pipeline
+parallelism. Everything degrades gracefully to a single-device no-op so the
+same model code runs on a laptop CPU and a multi-pod mesh."""

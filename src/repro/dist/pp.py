@@ -1,0 +1,103 @@
+"""Pipeline parallelism over the 'pod' mesh axis (GPipe-style, minimal).
+
+The repeated-layer stack is split into `n_stages` contiguous stages; each pod
+holds one stage's layer parameters (leading stage axis, sharded P('pod')
+under `shard_map`). The loss streams `n_micro` microbatches through the
+stages: at tick t, stage s runs microbatch t-s while stage s+1 runs t-s-1 —
+the same double-buffered invocation schedule the DeepDive host uses for its
+Body CU, applied across devices. Stage-to-stage activation handoff is
+`jax.lax.ppermute` (a collective-permute in the compiled HLO), which is
+differentiable, so one `jax.grad` trains all stages.
+
+Only uniform-layer families (a single repeating block kind, no unrolled
+tail) are supported — that covers every dense/moe/ssm/rec config here.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import model as M
+from repro.models.lm.config import LMConfig
+
+F32 = jnp.float32
+
+
+def split_stage_params(layers, n_stages: int):
+    """[L, ...]-stacked layer params -> [S, L/S, ...] (stage-major)."""
+
+    def split(x):
+        n_layers = x.shape[0]
+        if n_layers % n_stages:
+            raise ValueError(
+                f"{n_layers} layers not divisible into {n_stages} stages")
+        return x.reshape(n_stages, n_layers // n_stages, *x.shape[1:])
+
+    return jax.tree.map(split, layers)
+
+
+def make_pp_loss(cfg: LMConfig, n_stages: int, n_micro: int,
+                 axis_name: str = "pod"):
+    """Build loss(params, tokens) for use inside shard_map.
+
+    Expects params["layers"] stage-split (see `split_stage_params`) and
+    sharded P(axis_name); every other param replicated. tokens: [B, S] with
+    B divisible by n_micro. Returns the scalar next-token loss (no aux)."""
+    kinds = M.layer_kinds(cfg)
+    pat, _, tail = M._kind_groups(kinds)
+    if len(pat) != 1 or tail:
+        raise NotImplementedError(
+            "pipeline parallelism requires a uniform layer stack")
+    kind = pat[0]
+
+    def stage_apply(layers_p, x, positions):
+        def body(xx, layer_p):
+            xx, _, _ = M._apply_layer(layer_p, xx, cfg, kind, positions)
+            return xx, None
+
+        x, _ = jax.lax.scan(body, x, layers_p, unroll=cfg.scan_unroll)
+        return x
+
+    def loss(params: Dict[str, Any], tokens: jax.Array):
+        stage = jax.lax.axis_index(axis_name)
+        # this device's stage chunk: [1, L/S, ...] -> [L/S, ...]
+        layers_p = jax.tree.map(lambda x: x[0], params["layers"])
+
+        x = M.embed_tokens(params, cfg, tokens)
+        b = x.shape[0]
+        if b % n_micro:
+            raise ValueError(f"batch {b} not divisible by n_micro={n_micro}")
+        micro = x.reshape(n_micro, b // n_micro, *x.shape[1:])
+        positions = jnp.arange(tokens.shape[1])
+
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+        buf = jnp.zeros_like(micro[0])
+        outs = jnp.zeros_like(micro)
+        n_ticks = n_micro + n_stages - 1
+        for t in range(n_ticks):
+            if t < n_micro:  # stage 0 injects microbatch t
+                buf = jnp.where(stage == 0, micro[t], buf)
+            buf = stage_apply(layers_p, buf, positions)
+            m = t - (n_stages - 1)  # microbatch leaving the last stage
+            if m >= 0:
+                outs = outs.at[m].set(
+                    jnp.where(stage == n_stages - 1, buf, outs[m]))
+            if t < n_ticks - 1:  # hand activations to the next stage
+                buf = jax.lax.ppermute(buf, axis_name, perm)
+
+        # next-token cross-entropy on the last stage's outputs; other stages
+        # contribute zero and receive the value via the psum.
+        hidden = outs.reshape(b, *x.shape[1:])
+        logits = M.logits_from_hidden(params, cfg, hidden)
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(F32), axis=-1)
+        onehot = jax.nn.one_hot(tokens[:, 1:], lp.shape[-1], dtype=lp.dtype)
+        local = -(lp * onehot).sum(-1).mean()
+        return jax.lax.psum(
+            jnp.where(stage == n_stages - 1, local, 0.0), axis_name)
+
+    return loss
+
+
+__all__ = ["split_stage_params", "make_pp_loss"]

@@ -1,0 +1,152 @@
+"""Logical-axis sharding: model code names axes ('batch', 'heads', 'ffn',
+'vocab', 'embed', ...); this module maps them onto whatever mesh is active.
+
+Design rules (single pod (data, model); multi-pod adds a leading 'pod' axis):
+  * 'batch'   -> every data-parallel mesh axis present (('pod', 'data') on the
+                 multi-pod mesh, ('data',) on a single pod)
+  * 'heads' / 'ffn' / 'vocab' / 'experts' -> 'model' (tensor parallelism)
+  * 'embed'   -> 'data' under FSDP (ZeRO-3-style param sharding), else None
+  * 'seq'     -> None (no sequence parallelism by default)
+  * a name that IS a mesh axis passes through verbatim
+
+With no active mesh every helper is a no-op (`shard` returns its input,
+`axis_size` is 1), so model code never branches on distribution.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# mesh axes that carry data parallelism, outermost first
+_DATA_AXES = ("pod", "data")
+# logical axes that map onto the tensor-parallel mesh axis
+_MODEL_AXES = frozenset({"heads", "ffn", "vocab", "experts"})
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.fsdp: bool = False
+
+
+_STATE = _State()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _STATE.mesh
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, fsdp: bool = False):
+    """Activate `mesh` for `shard` / `axis_size` within the context."""
+    prev = (_STATE.mesh, _STATE.fsdp)
+    _STATE.mesh, _STATE.fsdp = mesh, fsdp
+    try:
+        yield mesh
+    finally:
+        _STATE.mesh, _STATE.fsdp = prev
+
+
+def axis_size(name: str) -> int:
+    """Size of a mesh axis under the active mesh (1 when absent / no mesh)."""
+    mesh = _STATE.mesh
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get(name, 1))
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], mesh: Mesh,
+                    fsdp: bool = False) -> P:
+    """Logical axis names -> PartitionSpec for `mesh` (see module rules)."""
+    present = set(mesh.axis_names)
+    out = []
+    for ax in axes:
+        if ax is None:
+            out.append(None)
+        elif ax == "batch":
+            out.append(tuple(a for a in _DATA_AXES if a in present))
+        elif ax == "embed":
+            out.append("data" if (fsdp and "data" in present) else None)
+        elif ax in _MODEL_AXES:
+            out.append("model" if "model" in present else None)
+        elif ax in present:
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _fit_spec_to_shape(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop sharded axes whose mesh extent does not divide the dim size.
+
+    Keeps `jax.jit(in_shardings=...)` legal for ragged dims (e.g. a vocab
+    that is not a multiple of the TP degree) instead of erroring."""
+    sizes = dict(mesh.shape)
+    out = []
+    for i, dim in enumerate(shape):
+        entry = spec[i] if i < len(spec) else None
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        extent = 1
+        for name in names:
+            extent *= int(sizes[name])
+        out.append(entry if extent > 0 and dim % extent == 0 else None)
+    return P(*out)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain `x` to its logical sharding under the active mesh (no-op
+    without one). Safe inside and outside jit."""
+    mesh = _STATE.mesh
+    if mesh is None:
+        return x
+    spec = logical_to_spec(axes, mesh, _STATE.fsdp)
+    spec = _fit_spec_to_shape(spec, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, axes: Sequence[Optional[str]],
+                   fsdp: bool = False) -> NamedSharding:
+    """NamedSharding from logical axes (`()` -> fully replicated)."""
+    return NamedSharding(mesh, logical_to_spec(axes, mesh, fsdp))
+
+
+def _is_axes(x: Any) -> bool:
+    """A logical-axes leaf: a (possibly empty) tuple of names / Nones."""
+    return isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+
+def tree_shardings(logical, mesh: Mesh, fsdp: bool = False, shapes=None):
+    """Map a pytree of logical-axes tuples to NamedShardings.
+
+    `shapes` (an aligned pytree of ShapeDtypeStructs/arrays) enables
+    shape-fitting: any axis that does not divide its dim is dropped."""
+
+    def one(axes, leaf):
+        spec = logical_to_spec(axes, mesh, fsdp)
+        if leaf is not None:
+            spec = _fit_spec_to_shape(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    if shapes is None:
+        return jax.tree_util.tree_map(
+            lambda a: one(a, None), logical, is_leaf=_is_axes)
+    return jax.tree_util.tree_map(one, logical, shapes, is_leaf=_is_axes)
+
+
+__all__ = [
+    "shard",
+    "axis_size",
+    "use_mesh",
+    "current_mesh",
+    "logical_to_spec",
+    "named_sharding",
+    "tree_shardings",
+]

@@ -57,6 +57,22 @@ def run_dw_qop(x_q: jnp.ndarray, qop: QOp, interpret: Optional[bool] = None):
     )
 
 
+def fusable_irb(block: G.BlockSpec) -> bool:
+    """True when `block` fits the fused Body-CU kernel: the canonical
+    expand -> dw -> project shape with no squeeze-excitation branch and one
+    activation bit-width (the kernel clips all three stages with a single
+    qmax, so mixed act_bits would requantize wrongly)."""
+    return (
+        len(block.ops) == 3
+        and block.se is None
+        and block.ops[0].kind == G.PW
+        and block.ops[1].kind == G.DW
+        and block.ops[2].kind == G.PW
+        and not block.avgpool
+        and len({op.act_bits for op in block.ops}) == 1
+    )
+
+
 def run_irb_block(
     x_q: jnp.ndarray,
     block: G.BlockSpec,
@@ -183,6 +199,7 @@ def decode_attend(q, kv_cache, kv_len, interpret: Optional[bool] = None):
 
 __all__ = [
     "run_dw_qop",
+    "fusable_irb",
     "run_irb_block",
     "quantize_weight_for_matmul",
     "quantized_linear",

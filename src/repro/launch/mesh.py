@@ -12,19 +12,29 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """`jax.make_mesh` with Auto axis types where this jax supports them.
+
+    `jax.sharding.AxisType` (and the `axis_types=` kwarg) only exist in
+    newer jax; older versions treat every axis as Auto already, so the
+    plain call is equivalent there."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Degenerate mesh over however many devices exist (tests / examples)."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n // model_parallel, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // model_parallel, model_parallel), ("data", "model"))
 
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_mesh", "make_production_mesh", "make_host_mesh"]

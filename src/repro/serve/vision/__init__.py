@@ -1,0 +1,37 @@
+"""Vision serving subsystem: continuous-batching integer DSCNN inference
+over pipelined CU stages (paper Sec. 4's CU invocation schedule, serving
+form).
+
+Layers, bottom-up:
+
+  * `stages`   — the stage compiler: lowers a `CUPlan` schedule into one
+                 jitted, bucket-batched executor per CU role
+                 (Head / Body / Tail / Classifier).
+  * `pipeline` — the software-pipelined scheduler: streams micro-batches
+                 through the CU stages with every stage in flight at once
+                 (the paper's double-buffered CU invocation schedule).
+  * `engine`   — the continuous-batching front end: request queue, dynamic
+                 batch former with shape/bucket admission, per-request
+                 deadlines, and throughput/latency/energy-proxy stats
+                 (the Table 6 FPS / FPS-per-Watt view).
+"""
+from repro.serve.vision.engine import (
+    AdmissionError,
+    EngineStats,
+    RequestResult,
+    VisionEngine,
+    VisionRequest,
+)
+from repro.serve.vision.pipeline import PipelinedExecutor
+from repro.serve.vision.stages import CompiledStage, compile_stages
+
+__all__ = [
+    "AdmissionError",
+    "CompiledStage",
+    "EngineStats",
+    "PipelinedExecutor",
+    "RequestResult",
+    "VisionEngine",
+    "VisionRequest",
+    "compile_stages",
+]

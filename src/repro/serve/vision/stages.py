@@ -1,0 +1,142 @@
+"""Stage compiler: `CUPlan` schedule -> one jitted executor per CU role.
+
+The FPGA runs each CU as fixed silicon reconfigured per invocation over
+AXI-Lite; the XLA analogue is one jitted function per CU *stage* (the
+contiguous run of same-role invocations in the schedule), traced once per
+batch bucket. All intra-stage intermediates stay on-chip, exactly like the
+FPGA's FIFO-streamed operator pipeline — the Body stage can additionally
+route canonical expand->dw->project blocks through the `kernels/fused_irb`
+Pallas kernel, which pins the t*C-expanded intermediate into VMEM.
+
+Quantizer handoff between stages is static: `cu.propagate_qparams` derives
+each stage's (scale, zp) contract from QNet metadata alone, so a stage
+function is a pure array -> array map and the executor chain is bit-exact
+with the monolithic `cu.run_qnet` reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compiler as CC
+from repro.core import cu
+from repro.core import graph as G
+from repro.core.qnet import QNet
+from repro.kernels import ops as K
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """Everything needed to (re)trace one CU stage executor."""
+
+    cu: str
+    blocks: Tuple[G.BlockSpec, ...]
+    in_scale: float
+    in_zp: float
+    out_scale: float
+    out_zp: float
+    quantizes_input: bool  # Head: float image -> int activations
+    dequantizes_output: bool  # Classifier: int logits -> float logits
+    signature: CC.StageSignature
+
+
+class CompiledStage:
+    """One CU stage as a jitted callable.
+
+    Batch-polymorphic by bucketing: jax retraces per input shape, and the
+    engine only ever presents bucket-padded batches, so the trace cache
+    stays one entry per (stage, bucket)."""
+
+    def __init__(self, spec: StageSpec, qnet: QNet, *, fixed_point: bool,
+                 input_bits: int, fast_path: bool,
+                 interpret: Optional[bool]):
+        self.spec = spec
+        self._qnet = qnet
+        self._fixed_point = fixed_point
+        self._input_bits = input_bits
+        self._fast_path = fast_path and spec.cu == CC.BODY
+        self._interpret = interpret
+        self.invocations = 0  # CU invocations dispatched (micro-batches)
+        self._fn = jax.jit(self._trace)
+
+    def _trace(self, x: jax.Array) -> jax.Array:
+        spec = self.spec
+        y = x
+        if spec.quantizes_input:
+            y = cu.quantize_input(
+                y, spec.in_scale, spec.in_zp, self._input_bits)
+        s, z = spec.in_scale, spec.in_zp
+        for block in spec.blocks:
+            if self._fast_path and K.fusable_irb(block):
+                y, s, z = K.run_irb_block(
+                    y, block, self._qnet, s, z, interpret=self._interpret)
+            else:
+                y, s, z = cu.run_block(
+                    y, block, self._qnet, s, z, self._fixed_point)
+        if spec.dequantizes_output:
+            y = (y.astype(jnp.float32) + z) * s
+        return y
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        self.invocations += 1
+        return self._fn(x)
+
+
+def compile_stages(
+    qnet: QNet,
+    plan: Optional[CC.CUPlan] = None,
+    *,
+    fixed_point: bool = False,
+    input_bits: int = 8,
+    body_fast_path: str = "auto",  # "auto" | "on" | "off"
+    interpret: Optional[bool] = None,
+) -> List[CompiledStage]:
+    """Lower a CUPlan into the ordered list of jitted stage executors.
+
+    `body_fast_path`: route fusable Body blocks through the Pallas fused-IRB
+    kernel. "auto" enables it only on a real TPU (in interpret mode the
+    kernel is emulated and slower than the plain XLA path, though still
+    bit-exact); "on"/"off" force it either way.
+    """
+    if plan is None:
+        plan = CC.compile_net(qnet.spec)
+    if body_fast_path not in ("auto", "on", "off"):
+        raise ValueError(f"body_fast_path={body_fast_path!r}")
+    fast = K.on_tpu() if body_fast_path == "auto" else body_fast_path == "on"
+    if fixed_point and fast:
+        # the fused kernel's requant epilogue is float-multiplier only; a
+        # silent fallback would break bit-exactness with
+        # run_qnet(fixed_point=True)
+        if body_fast_path == "on":
+            raise ValueError(
+                "body_fast_path='on' is incompatible with fixed_point=True "
+                "(the fused IRB kernel has no fixed-point requant mode)")
+        fast = False
+
+    sigs = plan.stage_signatures()
+    stages: List[CompiledStage] = []
+    s, z = cu.input_qparams(qnet)
+    for i, sig in enumerate(sigs):
+        out_s, out_z = cu.propagate_qparams(sig.blocks, qnet, s, z)
+        spec = StageSpec(
+            cu=sig.cu,
+            blocks=sig.blocks,
+            in_scale=s,
+            in_zp=z,
+            out_scale=out_s,
+            out_zp=out_z,
+            quantizes_input=(i == 0),
+            dequantizes_output=(i == len(sigs) - 1),
+            signature=sig,
+        )
+        stages.append(CompiledStage(
+            spec, qnet, fixed_point=fixed_point, input_bits=input_bits,
+            fast_path=fast, interpret=interpret))
+        s, z = out_s, out_z
+    return stages
+
+
+__all__ = ["StageSpec", "CompiledStage", "compile_stages"]

@@ -1,0 +1,69 @@
+"""Deterministic stand-in for `hypothesis` on machines without it.
+
+Implements only the surface the property tests here use — `given`,
+`settings`, `st.integers`, `st.floats`, `st.sampled_from`. Each @given test
+runs `max_examples` examples drawn from a fixed-seed PRNG: the properties
+still execute (without shrinking or adversarial search), so the suite stays
+meaningful in the dependency-free container. Install the real `hypothesis`
+(see pyproject.toml [test] extra) to get full example search back.
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_: object) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+
+st = strategies
+
+
+def settings(max_examples: int = 20, **_: object):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats: _Strategy):
+    def deco(fn):
+        # No functools.wraps: pytest must see a zero-arg function, not the
+        # strategy parameters (it would treat them as fixtures).
+        def run():
+            # @settings sits above @given, so it annotates `run` — read the
+            # attribute at call time, not decoration time.
+            n = getattr(run, "_max_examples", 20)
+            rng = random.Random(0)
+            for _ in range(n):
+                fn(**{k: s.draw(rng) for k, s in strats.items()})
+
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        run.__module__ = fn.__module__
+        return run
+
+    return deco
+
+
+__all__ = ["given", "settings", "st", "strategies"]

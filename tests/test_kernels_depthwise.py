@@ -54,7 +54,10 @@ def test_depthwise_no_clip_linear_output():
     assert int(y.min()) < 0  # linear path keeps negatives
 
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 
 @settings(max_examples=15, deadline=None)

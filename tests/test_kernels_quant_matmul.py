@@ -2,7 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.ops import quantize_weight_for_matmul, quantized_linear

@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 from repro.configs import reduced_config
 from repro.dist import pp
+from repro.launch.mesh import make_mesh
 from repro.models.lm import model as M
 
 cfg = dataclasses.replace(reduced_config("llama3.2-1b"), n_layers=4)
@@ -44,8 +45,7 @@ lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
 oh = jax.nn.one_hot(tokens[:, 1:], lp.shape[-1], dtype=lp.dtype)
 ref_loss = float(-(lp * oh).sum(-1).mean())
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 sp = dict(params)
 sp["layers"] = pp.split_stage_params(params["layers"], 2)
 loss_fn = pp.make_pp_loss(cfg, n_stages=2, n_micro=2)
@@ -69,13 +69,13 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 from repro.configs import reduced_config
 from repro.dist import pp
+from repro.launch.mesh import make_mesh
 from repro.models.lm import model as M
 
 cfg = dataclasses.replace(reduced_config("llama3.2-1b"), n_layers=4)
 params, _ = M.init_params(cfg, jax.random.PRNGKey(0))
 tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab)
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 sp = dict(params)
 sp["layers"] = pp.split_stage_params(params["layers"], 2)
 loss_fn = pp.make_pp_loss(cfg, n_stages=2, n_micro=2)

@@ -1,0 +1,281 @@
+"""Vision serving subsystem: stage compiler correctness, pipelined
+bit-exactness vs the monolithic integer runner, bucket admission edge cases,
+deadline handling, and a queue-drain throughput smoke test."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compiler as CC, cu, qnet as Q
+from repro.core.calibrate import calibrate
+from repro.core.quant import QuantConfig
+from repro.models import efficientnet as effn, layers, mobilenet_v2 as mnv2
+from repro.serve.vision import (
+    AdmissionError,
+    PipelinedExecutor,
+    VisionEngine,
+    compile_stages,
+)
+
+HW = 32
+
+
+def _make_qnet(net, seed=0):
+    params = layers.init_params(jax.random.PRNGKey(seed), net)
+
+    def apply_fn(p, b):
+        return layers.forward(p, b, net, capture=True)[1]
+
+    cal = [jax.random.uniform(jax.random.PRNGKey(i), (2, HW, HW, 3),
+                              minval=-1, maxval=1) for i in range(2)]
+    obs = calibrate(apply_fn, params, cal, QuantConfig(4, False, None))
+    return Q.quantize_net(params, net, obs)
+
+
+@pytest.fixture(scope="module")
+def mnv2_qnet():
+    return _make_qnet(mnv2.build(alpha=0.35, input_hw=HW, num_classes=10))
+
+
+@pytest.fixture(scope="module")
+def effnet_qnet():
+    return _make_qnet(effn.build_compact(input_hw=HW, num_classes=10))
+
+
+def _images(n, seed=7):
+    return np.asarray(jax.random.uniform(
+        jax.random.PRNGKey(seed), (n, HW, HW, 3), minval=-1, maxval=1))
+
+
+# ---------------------------------------------------------------------------
+# stage compiler
+# ---------------------------------------------------------------------------
+
+
+def test_stage_signatures_mobilenet(mnv2_qnet):
+    plan = CC.compile_net(mnv2_qnet.spec)
+    sigs = plan.stage_signatures()
+    assert [s.cu for s in sigs] == [CC.HEAD, CC.BODY, CC.TAIL, CC.CLASSIFIER]
+    head, body, tail, clf = sigs
+    assert head.in_hw == HW and head.in_ch == 3
+    # stage boundaries chain: out of one == in of the next
+    assert (head.out_hw, head.out_ch) == (body.in_hw, body.in_ch)
+    assert (body.out_hw, body.out_ch) == (tail.in_hw, tail.in_ch)
+    assert tail.out_hw is None  # spatially collapsed by the global pool
+    assert clf.out_ch == 10
+    assert body.invocations == 16  # the paper's 16 Body CU invocations
+
+
+def test_stage_quantizer_handoff_is_static(mnv2_qnet):
+    stages = compile_stages(mnv2_qnet)
+    # (scale, zp) contract chains across stages and matches the data-free
+    # propagation from QNet metadata
+    s, z = cu.input_qparams(mnv2_qnet)
+    for st in stages:
+        assert (st.spec.in_scale, st.spec.in_zp) == (s, z)
+        s, z = cu.propagate_qparams(st.spec.blocks, mnv2_qnet, s, z)
+        assert (st.spec.out_scale, st.spec.out_zp) == (s, z)
+
+
+def test_run_blocks_matches_run_qnet(mnv2_qnet):
+    x = jnp.asarray(_images(2))
+    in_s, in_z = cu.input_qparams(mnv2_qnet)
+    y = cu.quantize_input(x, in_s, in_z, 8)
+    y, s, z = cu.run_blocks(y, mnv2_qnet.spec.blocks, mnv2_qnet, in_s, in_z)
+    got = (y.astype(jnp.float32) + z) * s
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(cu.run_qnet(mnv2_qnet, x)))
+
+
+def test_fusable_irb_gate():
+    from repro.core.graph import DW, PW, RELU6, NONE, BlockSpec, OpSpec
+    from repro.kernels.ops import fusable_irb
+
+    def blk(act_bits3=4):
+        return BlockSpec("b", (
+            OpSpec("b/expand", PW, 8, 48, 1, 1, RELU6, 4, 4),
+            OpSpec("b/dw", DW, 48, 48, 3, 1, RELU6, 4, 4),
+            OpSpec("b/project", PW, 48, 16, 1, 1, NONE, 4, act_bits3),
+        ))
+
+    assert fusable_irb(blk())
+    # mixed act_bits: the kernel's single-qmax clip would be wrong
+    assert not fusable_irb(blk(act_bits3=8))
+
+
+def test_noncontiguous_schedule_rejected(mnv2_qnet):
+    plan = CC.compile_net(mnv2_qnet.spec)
+    # interleave: head, body, head, body... breaks role contiguity
+    sched = list(plan.schedule)
+    sched[1], sched[2] = sched[2], sched[1]  # head, body, head, ...
+    bad = CC.CUPlan(plan.net, tuple(sched))
+    with pytest.raises(ValueError, match="non-contiguous"):
+        bad.stage_groups()
+
+
+# ---------------------------------------------------------------------------
+# pipelined execution: bit-exactness vs the monolithic runner
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("qnet_fixture", ["mnv2_qnet", "effnet_qnet"])
+def test_pipelined_bit_exact_with_run_qnet(qnet_fixture, request):
+    qnet = request.getfixturevalue(qnet_fixture)
+    imgs = _images(5)
+    eng = VisionEngine(qnet, buckets=(1, 2, 4))
+    rids = [eng.submit(img) for img in imgs]
+    results = eng.run()
+    got = np.stack([results[r].logits for r in rids])
+    ref = np.asarray(cu.run_qnet(qnet, jnp.asarray(imgs)))
+    np.testing.assert_array_equal(got, ref)
+    assert all(results[r].status == "ok" for r in rids)
+
+
+def test_fixed_point_refuses_fused_fast_path(mnv2_qnet):
+    """The fused IRB kernel has no fixed-point requant mode: forcing it on
+    together with fixed_point must fail loudly, and 'auto' must fall back
+    to the exact unfused path."""
+    with pytest.raises(ValueError, match="fixed_point"):
+        compile_stages(mnv2_qnet, fixed_point=True, body_fast_path="on")
+    stages = compile_stages(mnv2_qnet, fixed_point=True,
+                            body_fast_path="auto")
+    assert all(not s._fast_path for s in stages)
+
+
+def test_pipelined_bit_exact_fixed_point(mnv2_qnet):
+    """The FPGA-faithful fixed-point requant path through the stages."""
+    imgs = _images(3)
+    eng = VisionEngine(mnv2_qnet, buckets=(4,), fixed_point=True)
+    rids = [eng.submit(img) for img in imgs]
+    results = eng.run()
+    got = np.stack([results[r].logits for r in rids])
+    ref = np.asarray(cu.run_qnet(mnv2_qnet, jnp.asarray(imgs),
+                                 fixed_point=True))
+    np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.slow
+def test_pipelined_bit_exact_fused_body(mnv2_qnet):
+    """Body CU through the fused Pallas IRB kernel (interpret mode on CPU)
+    is still bit-exact with the monolithic reference."""
+    imgs = _images(2)
+    eng = VisionEngine(mnv2_qnet, buckets=(2,), body_fast_path="on",
+                       interpret=not jax.default_backend() == "tpu")
+    rids = [eng.submit(img) for img in imgs]
+    results = eng.run()
+    got = np.stack([results[r].logits for r in rids])
+    ref = np.asarray(cu.run_qnet(mnv2_qnet, jnp.asarray(imgs)))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_pipeline_executor_ordering(mnv2_qnet):
+    stages = compile_stages(mnv2_qnet)
+    pipe = PipelinedExecutor(stages)
+    batches = [jnp.asarray(_images(2, seed=i)) for i in range(5)]
+    outs = pipe.run(batches)
+    assert len(outs) == 5
+    for x, y in zip(batches, outs):
+        np.testing.assert_array_equal(
+            np.asarray(y), np.asarray(cu.run_qnet(mnv2_qnet, x)))
+
+
+# ---------------------------------------------------------------------------
+# bucket admission edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_odd_tail_is_bucket_padded(mnv2_qnet):
+    eng = VisionEngine(mnv2_qnet, buckets=(2, 4))
+    imgs = _images(7)  # -> 4 + 4(pad 1) under EDF draining
+    rids = [eng.submit(img) for img in imgs]
+    results = eng.run()
+    stats = eng.stats()
+    assert stats.n_ok == 7
+    assert stats.micro_batches == 2
+    assert stats.pad_fraction == pytest.approx(1 / 8)
+    ref = np.asarray(cu.run_qnet(mnv2_qnet, jnp.asarray(imgs)))
+    got = np.stack([results[r].logits for r in rids])
+    np.testing.assert_array_equal(got, ref)  # pad rows never leak
+
+
+def test_single_request_uses_smallest_bucket(mnv2_qnet):
+    eng = VisionEngine(mnv2_qnet, buckets=(1, 2, 4))
+    eng.submit(_images(1)[0])
+    eng.run()
+    assert eng.stats().pad_fraction == 0.0
+
+
+def test_mixed_shapes_rejected(mnv2_qnet):
+    eng = VisionEngine(mnv2_qnet, buckets=(2,))
+    eng.submit(_images(1)[0])
+    with pytest.raises(AdmissionError, match="shape"):
+        eng.submit(np.zeros((HW // 2, HW // 2, 3), np.float32))
+    with pytest.raises(AdmissionError, match="shape"):
+        eng.submit(np.zeros((HW, HW, 4), np.float32))
+    with pytest.raises(AdmissionError, match="dtype"):
+        eng.submit(np.zeros((HW, HW, 3), np.uint8))
+    assert eng.pending() == 1  # rejected work never queued
+
+
+def test_queue_bound(mnv2_qnet):
+    eng = VisionEngine(mnv2_qnet, buckets=(2,), max_queue=2)
+    img = _images(1)[0]
+    eng.submit(img)
+    eng.submit(img)
+    with pytest.raises(AdmissionError, match="queue full"):
+        eng.submit(img)
+
+
+def test_expired_deadline_dropped(mnv2_qnet):
+    eng = VisionEngine(mnv2_qnet, buckets=(2,))
+    img = _images(1)[0]
+    past = time.perf_counter() - 10.0
+    dead = eng.submit(img, deadline_s=past)
+    live = eng.submit(img)
+    results = eng.run()
+    assert results[dead].status == "expired"
+    assert results[dead].logits is None
+    assert results[live].status == "ok"
+    stats = eng.stats()
+    assert stats.n_expired == 1 and stats.n_ok == 1
+
+
+def test_edf_orders_batches(mnv2_qnet):
+    """Tighter deadlines are served in earlier micro-batches."""
+    eng = VisionEngine(mnv2_qnet, buckets=(2,))
+    img = _images(1)[0]
+    now = time.perf_counter()
+    loose = eng.submit(img, deadline_s=now + 1000)
+    tight = eng.submit(img, deadline_s=now + 100)
+    nodeadline = eng.submit(img)
+    results = eng.run()
+    # tight + loose share the first bucket-2 batch; no-deadline rides last
+    assert results[tight].latency_s <= results[nodeadline].latency_s
+    assert all(r.status == "ok" for r in results.values())
+
+
+# ---------------------------------------------------------------------------
+# queue-drain throughput smoke test
+# ---------------------------------------------------------------------------
+
+
+def test_queue_drain_throughput_smoke(mnv2_qnet):
+    eng = VisionEngine(mnv2_qnet, buckets=(4,))
+    eng.warmup()
+    imgs = _images(16)
+    rids = [eng.submit(img) for img in imgs]
+    results = eng.run()
+    stats = eng.stats()
+    assert sorted(results) == sorted(rids)
+    assert stats.n_ok == 16
+    assert stats.fps > 0
+    assert stats.micro_batches == 4
+    # every CU stage invoked exactly once per micro-batch (warmup excluded)
+    assert all(v == stats.micro_batches
+               for v in stats.stage_invocations.values())
+    assert stats.macs_per_image == mnv2_qnet.spec.count_macs()
+    assert stats.energy_j_per_image_proxy > 0
+    d = stats.as_dict()
+    assert {"fps", "latency_p50_s", "fps_per_watt_proxy"} <= set(d)
