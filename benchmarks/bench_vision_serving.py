@@ -1,6 +1,6 @@
 """Vision serving throughput: pipelined CU-stage engine vs naive `run_qnet`.
 
-Three ways to serve the same calibrated integer MobileNet-V2:
+Four ways to serve the same calibrated integer MobileNet-V2:
 
   * naive      — one batch at a time through the monolithic `cu.run_qnet`
                  (op-by-op dispatch, block between batches): what a
@@ -8,13 +8,19 @@ Three ways to serve the same calibrated integer MobileNet-V2:
   * monolith   — `jax.jit(run_qnet)` as one XLA program, still one batch at
                  a time: removes dispatch overhead but keeps the device
                  idle between batches.
-  * pipelined  — the serve.vision engine: per-CU jitted stage executors,
-                 micro-batches streamed so all CU stages stay in flight
-                 (the paper's double-buffered CU invocation schedule).
+  * pipelined  — the PR-1 serve.vision engine (per-CU jitted stage
+                 executors, micro-batches streamed) with reference op
+                 bodies and per-trace host constants (prepare=False).
+  * fast       — the PR-2 engine defaults: `PreparedQNet` device-cached
+                 constants + the compiled integer fast path (shifted-slice
+                 depthwise, exactness-gated f32 matmuls; per-op Pallas
+                 kernels when on TPU).
 
 Reports images/sec (the paper's Table 3/6 FPS view) and the engine's
 energy-proxy FPS/W. Writes a JSON report (default
-experiments/vision_serving.json) and prints the usual CSV rows.
+experiments/vision_serving.json) and prints the usual CSV rows. The
+previously saved report (the PR-1 baseline) is read *before* overwriting so
+`speedup_vs_saved_baseline` tracks the perf trajectory across PRs.
 """
 from __future__ import annotations
 
@@ -47,6 +53,21 @@ def _make_qnet(net, hw: int):
     return Q.quantize_net(params, net, obs)
 
 
+def _run_engine(qnet, imgs, batch, repeats, **engine_kwargs):
+    """Best-of-N serving drains; returns (stats, results)."""
+    stats = results = None
+    for _ in range(repeats):
+        eng = VisionEngine(qnet, buckets=(batch,), **engine_kwargs)
+        eng.warmup()
+        for img in imgs:
+            eng.submit(img)
+        res = eng.run()
+        st = eng.stats()
+        if stats is None or st.fps > stats.fps:
+            stats, results = st, res
+    return stats, results
+
+
 def run(alpha: float = 0.35, hw: int = 48, batch: int = 8, n_images: int = 64,
         repeats: int = 2, out: str = "experiments/vision_serving.json"):
     net = mnv2.build(alpha=alpha, input_hw=hw, num_classes=1000)
@@ -56,6 +77,18 @@ def run(alpha: float = 0.35, hw: int = 48, batch: int = 8, n_images: int = 64,
         np.float32)
     batches = [jnp.asarray(imgs[i:i + batch])
                for i in range(0, n_images, batch)]
+
+    # perf trajectory: what did the last PR's engine do on this config?
+    saved_baseline = None
+    if os.path.exists(out):
+        try:
+            with open(out) as f:
+                saved = json.load(f)
+            if (saved.get("input_hw"), saved.get("batch")) == (hw, batch):
+                saved_baseline = saved.get(
+                    "fps_pipelined_fast", saved.get("fps_pipelined"))
+        except (json.JSONDecodeError, OSError):
+            pass
 
     # best-of-N for each serving mode: the box this runs on is shared, so a
     # single pass is hostage to scheduler noise
@@ -84,18 +117,13 @@ def run(alpha: float = 0.35, hw: int = 48, batch: int = 8, n_images: int = 64,
         t_mono = min(t_mono, time.perf_counter() - t0)
     fps_mono = n_images / t_mono
 
-    # --- pipelined CU-stage engine ---------------------------------------
-    stats = None
-    results = None
-    for _ in range(repeats):
-        eng = VisionEngine(qnet, buckets=(batch,))
-        eng.warmup()
-        for img in imgs:
-            eng.submit(img)
-        res = eng.run()
-        st = eng.stats()
-        if stats is None or st.fps > stats.fps:
-            stats, results = st, res
+    # --- PR-1 pipelined CU-stage engine (reference op bodies) ------------
+    stats_pr1, _ = _run_engine(
+        qnet, imgs, batch, repeats,
+        prepare=False, op_kernels="off", body_fast_path="off")
+
+    # --- PR-2 fast path: PreparedQNet + compiled integer formulations ----
+    stats, results = _run_engine(qnet, imgs, batch, repeats)
 
     # sanity: serving path is bit-exact with the reference
     got0 = np.stack([results[r].logits for r in sorted(results)[:batch]])
@@ -110,12 +138,18 @@ def run(alpha: float = 0.35, hw: int = 48, batch: int = 8, n_images: int = 64,
         "repeats": repeats,
         "fps_naive": fps_naive,
         "fps_monolith_jit": fps_mono,
-        "fps_pipelined": stats.fps,
+        "fps_pipelined": stats_pr1.fps,
+        "fps_pipelined_fast": stats.fps,
         "speedup_vs_naive": stats.fps / fps_naive,
         "speedup_vs_monolith_jit": stats.fps / fps_mono,
+        "speedup_fast_vs_pipelined": stats.fps / stats_pr1.fps,
+        "speedup_vs_saved_baseline": (
+            stats.fps / saved_baseline if saved_baseline else None),
+        "saved_baseline_fps": saved_baseline,
         "bit_exact_with_run_qnet": exact,
         "latency_p50_s": stats.latency_p50_s,
         "latency_p95_s": stats.latency_p95_s,
+        "latency_p50_s_pipelined_pr1": stats_pr1.latency_p50_s,
         "micro_batches": stats.micro_batches,
         "pad_fraction": stats.pad_fraction,
         "harvest_wait_s": stats.harvest_wait_s,
@@ -132,8 +166,13 @@ def run(alpha: float = 0.35, hw: int = 48, batch: int = 8, n_images: int = 64,
         f"fps={fps_naive:.1f}")
     row("vision_serve_monolith_jit", t_mono / len(batches) * 1e6,
         f"fps={fps_mono:.1f}")
-    row("vision_serve_pipelined", stats.wall_s / stats.micro_batches * 1e6,
-        f"fps={stats.fps:.1f} speedup_vs_naive={report['speedup_vs_naive']:.2f}x "
+    row("vision_serve_pipelined_pr1",
+        stats_pr1.wall_s / stats_pr1.micro_batches * 1e6,
+        f"fps={stats_pr1.fps:.1f}")
+    row("vision_serve_pipelined_fast",
+        stats.wall_s / stats.micro_batches * 1e6,
+        f"fps={stats.fps:.1f} "
+        f"speedup_vs_pr1_pipelined={report['speedup_fast_vs_pipelined']:.2f}x "
         f"exact={exact}")
     return report
 

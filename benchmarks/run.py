@@ -9,13 +9,103 @@
   bench_quant_serving       beyond-paper: LM weight-quantized serving
   bench_vision_serving      beyond-paper: pipelined CU-stage vision serving
   bench_kernels             kernel-level microbenchmarks
+
+`--smoke` runs the fast subset (kernels + a reduced vision-serving pass) and
+asserts the JSON reports still parse — the CI gate. A full (or smoke) run
+aggregates the per-benchmark results into a perf-trajectory report at the
+repo root, BENCH_PR2.json: throughput / latency / analytic bytes-moved, plus
+deltas against the PR-1 `experiments/vision_serving.json` baseline captured
+before this run overwrote it.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 
+BENCH_REPORT = "BENCH_PR2.json"
+VISION_REPORT = "experiments/vision_serving.json"
 
-def main() -> None:
+
+def _load_baseline(path: str):
+    """The previous PR's vision-serving numbers (read before overwriting)."""
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (json.JSONDecodeError, OSError):
+        return None
+
+
+def _write_trajectory(vision, kernels, baseline, smoke: bool) -> None:
+    # deltas are only meaningful against a same-config baseline (smoke runs
+    # a reduced geometry, so its trajectory carries absolute numbers only)
+    if baseline and vision and (
+            (baseline.get("input_hw"), baseline.get("batch"))
+            != (vision["input_hw"], vision["batch"])):
+        baseline = None
+    pr1_fps = None
+    if baseline:
+        pr1_fps = baseline.get("fps_pipelined_fast",
+                               baseline.get("fps_pipelined"))
+    report = {
+        "pr": 2,
+        "smoke": smoke,
+        "baseline_source": VISION_REPORT if baseline else None,
+        "serving": None,
+        "kernels": kernels,
+    }
+    if vision:
+        fast = vision["fps_pipelined_fast"]
+        report["serving"] = {
+            "net": vision["net"],
+            "input_hw": vision["input_hw"],
+            "batch": vision["batch"],
+            "backend": vision["backend"],
+            "fps_naive": vision["fps_naive"],
+            "fps_monolith_jit": vision["fps_monolith_jit"],
+            "fps_pipelined_pr1": vision["fps_pipelined"],
+            "fps_pipelined_fast": fast,
+            "latency_p50_s": vision["latency_p50_s"],
+            "latency_p95_s": vision["latency_p95_s"],
+            "bit_exact_with_run_qnet": vision["bit_exact_with_run_qnet"],
+            "speedup_fast_vs_pr1_pipelined":
+                vision["speedup_fast_vs_pipelined"],
+            "pr1_baseline_fps": pr1_fps,
+            "speedup_vs_pr1_baseline_file": (
+                fast / pr1_fps if pr1_fps else None),
+            "latency_p50_delta_vs_pr1_s": (
+                vision["latency_p50_s"] - baseline["latency_p50_s"]
+                if baseline and "latency_p50_s" in baseline else None),
+        }
+    if kernels:
+        report["bytes_moved"] = {
+            "dw_hbm_bytes": kernels.get("dw_hbm_bytes"),
+            "dw_hbm_bytes_saved_vs_padded_copy":
+                kernels.get("dw_hbm_bytes_saved_vs_padded"),
+            "irb_fused_traffic_saved_frac":
+                kernels.get("irb_bytes_saved_frac"),
+            "pw_hbm_bytes": kernels.get("pw_hbm_bytes"),
+        }
+    with open(BENCH_REPORT, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"# wrote {BENCH_REPORT}", file=sys.stderr)
+
+
+def _assert_reports_parse(vision_path: str) -> None:
+    for path in (BENCH_REPORT, vision_path):
+        with open(path) as f:
+            json.load(f)  # raises on corruption — the CI smoke assertion
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast subset + JSON-report parse assertion (CI)")
+    args = ap.parse_args(argv)
+
     from benchmarks import (
         bench_bw_sweep,
         bench_fusion,
@@ -27,20 +117,47 @@ def main() -> None:
         bench_vision_serving,
     )
 
+    baseline = _load_baseline(VISION_REPORT)
     print("name,us_per_call,derived")
-    mods = [
-        bench_table2, bench_bw_sweep, bench_table3, bench_fusion,
-        bench_table6_efficientnet, bench_quant_serving,
-        bench_vision_serving, bench_kernels,
-    ]
     failures = 0
-    for m in mods:
+    vision = kernels = None
+
+    # smoke must not clobber the committed perf-trajectory baseline with
+    # reduced-size numbers
+    vision_out = ("experiments/vision_serving_smoke.json" if args.smoke
+                  else VISION_REPORT)
+    if args.smoke:
+        plan = [
+            (bench_kernels, lambda: bench_kernels.run()),
+            (bench_vision_serving,
+             lambda: bench_vision_serving.run(hw=32, n_images=16, repeats=1,
+                                              out=vision_out)),
+        ]
+    else:
+        plan = [
+            (m, m.run) for m in (
+                bench_table2, bench_bw_sweep, bench_table3, bench_fusion,
+                bench_table6_efficientnet, bench_quant_serving)
+        ] + [
+            (bench_kernels, lambda: bench_kernels.run()),
+            (bench_vision_serving, lambda: bench_vision_serving.run()),
+        ]
+
+    for mod, fn in plan:
         try:
-            m.run()
+            out = fn()
+            if mod is bench_kernels:
+                kernels = out
+            elif mod is bench_vision_serving:
+                vision = out
         except Exception as e:  # noqa: BLE001
             failures += 1
-            print(f"{m.__name__},0.0,ERROR:{type(e).__name__}:{e}",
+            print(f"{mod.__name__},0.0,ERROR:{type(e).__name__}:{e}",
                   file=sys.stderr)
+
+    _write_trajectory(vision, kernels, baseline, args.smoke)
+    if args.smoke:
+        _assert_reports_parse(vision_out)
     if failures:
         sys.exit(1)
 

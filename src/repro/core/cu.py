@@ -10,13 +10,26 @@ into VMEM explicitly.
 All arithmetic inside a CU is integer: int MACs -> int32 accum -> requantize
 -> clip (the Approximator & Clip unit == fused ReLU6), following
 `core/integer_ops`. Zero floating point remains in the datapath except the
-requant multiplier (which also has a faithful fixed-point mode).
+requant multiplier (which also has a faithful fixed-point mode; in that mode
+the residual skip-add is integer too, via `int_residual_add`).
+
+Two execution tiers share this module:
+
+  * `QNet` (host numpy metadata) — the semantic reference. Every invocation
+    re-uploads weights/requant constants, exactly what a cold host would do.
+  * `PreparedQNet` (`prepare_qnet`) — the serving artifact: every constant a
+    CU invocation needs is converted to a device-resident jnp array ONCE at
+    plan-build time, and the operator bodies switch to the compiled integer
+    fast-path formulations of `core/integer_ops` (shifted-slice depthwise,
+    exactness-gated f32 matmul/conv). The accumulators are bit-identical to
+    the reference, so `run_qnet(prepare_qnet(q), x) == run_qnet(q, x)`
+    element-for-element — verified by tests/test_prepared_fastpath.py.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -25,9 +38,15 @@ import numpy as np
 from repro.core import graph as G
 from repro.core.integer_ops import (
     clip_act,
+    f32_accum_exact,
     int_conv2d,
+    int_conv2d_f32,
+    int_depthwise_shifts,
     int_pointwise,
+    int_pointwise_f32,
+    int_residual_add,
     quantized_op_epilogue,
+    residual_fixed_consts,
 )
 from repro.core.qnet import QNet, QOp
 
@@ -37,19 +56,164 @@ def quantize_input(x: jnp.ndarray, scale: float, zp: float, bits: int = 8):
     return jnp.clip(q, 0, 2**bits - 1).astype(jnp.int32)
 
 
-def _run_qop(x_q: jnp.ndarray, qop: QOp, fixed_point: bool) -> jnp.ndarray:
+# ---------------------------------------------------------------------------
+# PreparedQNet: device-resident constants + compiled fast-path dispatch
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PreparedQOp:
+    """One QOp with every kernel/epilogue constant already on device.
+
+    Field names mirror `QOp` so the two are interchangeable wherever the
+    runners only read metadata; the arrays are jnp (committed to the default
+    device), so jitted stage traces close over device constants instead of
+    re-uploading host numpy each invocation.
+    """
+
+    spec: G.OpSpec
+    w_q: jnp.ndarray  # int32, original weight layout (conv HWIO / dw HW1C)
+    w_kern: jnp.ndarray  # kernel layout: dw [K,K,C]; pw/dense [Cin,Cout]
+    w_scale: jnp.ndarray  # [M] f32
+    wsum: jnp.ndarray  # [M] i32
+    bias_q: jnp.ndarray  # [M] i32
+    mult: jnp.ndarray  # [M] f32
+    zcorr: jnp.ndarray  # [M] f32 — in_zp * mult * wsum (float epilogue form)
+    zpc: jnp.ndarray  # [M] i32 — int32(in_zp) * wsum (integer epilogue form)
+    z_x: jnp.ndarray  # scalar i32 — int32(in_zp)
+    mantissa: jnp.ndarray  # [M] i64/i32 fixed-point mantissa
+    shift: jnp.ndarray  # [M] i32
+    in_scale: float
+    in_zp: float
+    out_scale: float
+    out_zp: float
+    clip: bool
+    in_qmax: int  # upper bound of the incoming activation tensor
+    f32_exact: bool  # f32 accumulation provably bit-exact for this op
+
+    @property
+    def qmax(self) -> int:
+        return 2**self.spec.act_bits - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PreparedQNet:
+    """A QNet lowered for serving: per-op `PreparedQOp`s + per-residual
+    integer skip-add constants. Drop-in for `QNet` in every runner here and
+    in `kernels/ops.py` / `serve/vision/stages.py`."""
+
+    qnet: QNet
+    ops: Dict[str, PreparedQOp]
+    res_q: Dict[str, Tuple[float, float]]
+    res_fixed: Dict[str, Tuple[int, int, int, int, int]]
+
+    @property
+    def spec(self) -> G.NetSpec:
+        return self.qnet.spec
+
+
+def _prepare_qop(qop: QOp, in_qmax: int) -> PreparedQOp:
+    w_np = np.asarray(qop.w_q)
+    if qop.spec.kind == G.DW:
+        w_kern = w_np.reshape(w_np.shape[0], w_np.shape[1], w_np.shape[-1])
+    elif qop.spec.kind in (G.PW, G.DENSE):
+        w_kern = w_np[0, 0] if w_np.ndim == 4 else w_np
+    else:
+        w_kern = w_np
+    zpc = np.int32(qop.in_zp) * np.asarray(qop.wsum, np.int32)
+    return PreparedQOp(
+        spec=qop.spec,
+        w_q=jnp.asarray(w_np, jnp.int32),
+        w_kern=jnp.asarray(w_kern, jnp.int32),
+        w_scale=jnp.asarray(qop.w_scale, jnp.float32),
+        wsum=jnp.asarray(qop.wsum, jnp.int32),
+        bias_q=jnp.asarray(qop.bias_q, jnp.int32),
+        mult=jnp.asarray(qop.mult, jnp.float32),
+        zcorr=jnp.asarray(qop.in_zp * qop.mult * qop.wsum, jnp.float32),
+        zpc=jnp.asarray(zpc, jnp.int32),
+        z_x=jnp.asarray(qop.in_zp, jnp.int32),
+        mantissa=jnp.asarray(qop.mantissa),
+        shift=jnp.asarray(qop.shift, jnp.int32),
+        in_scale=qop.in_scale,
+        in_zp=qop.in_zp,
+        out_scale=qop.out_scale,
+        out_zp=qop.out_zp,
+        clip=qop.clip,
+        in_qmax=in_qmax,
+        f32_exact=f32_accum_exact(w_np, in_qmax),
+    )
+
+
+def prepare_qnet(qnet: QNet, input_bits: int = 8) -> PreparedQNet:
+    """Lower a QNet to its device-resident serving form (one-time cost).
+
+    Walks the graph to bound each op's input activations (needed for the
+    f32-exactness gate) and uploads every constant once. Idempotent on an
+    already-prepared net.
+    """
+    if isinstance(qnet, PreparedQNet):
+        return qnet
+    ops: Dict[str, PreparedQOp] = {}
+    res_fixed: Dict[str, Tuple[int, int, int, int, int]] = {}
+    cur_bits = input_bits
+    for block in qnet.spec.blocks:
+        for op in block.ops:
+            qop = qnet.ops[op.name]
+            ops[op.name] = _prepare_qop(qop, 2**cur_bits - 1)
+            cur_bits = op.act_bits
+            if block.se is not None and block.se_after == op.name:
+                sq, ex = block.se.squeeze, block.se.excite
+                # squeeze reads the (pooled) dw output; excite reads squeeze
+                ops[sq.name] = _prepare_qop(qnet.ops[sq.name], 2**cur_bits - 1)
+                ops[ex.name] = _prepare_qop(
+                    qnet.ops[ex.name], 2**sq.act_bits - 1)
+        if block.residual:
+            last = qnet.ops[block.ops[-1].name]
+            first = qnet.ops[block.ops[0].name]
+            y_s, y_z = qnet.res_q[block.name]
+            res_fixed[block.name] = residual_fixed_consts(
+                first.in_scale, first.in_zp,
+                last.out_scale, last.out_zp, y_s, y_z)
+    return PreparedQNet(qnet=qnet, ops=ops, res_q=dict(qnet.res_q),
+                        res_fixed=res_fixed)
+
+
+def _accumulate(x_q: jnp.ndarray, qop) -> jnp.ndarray:
+    """Int32 accumulator for one op.
+
+    `QOp` (host metadata) takes the reference XLA integer ops; `PreparedQOp`
+    takes the compiled fast-path formulations — shifted-slice depthwise and,
+    when the per-op exactness bound holds, f32-unit matmul/conv — which
+    produce the *same* int32 accumulator (see core/integer_ops docstrings).
+    """
     op = qop.spec
+    if isinstance(qop, PreparedQOp):
+        if op.kind == G.DW:
+            return int_depthwise_shifts(x_q, qop.w_kern, stride=op.stride)
+        if op.kind in (G.PW, G.DENSE):
+            if qop.f32_exact:
+                return int_pointwise_f32(x_q, qop.w_kern)
+            return int_pointwise(x_q, qop.w_kern)
+        if op.kind == G.CONV:
+            if qop.f32_exact:
+                return int_conv2d_f32(x_q, qop.w_q, stride=op.stride)
+            return int_conv2d(x_q, qop.w_q, stride=op.stride)
+        raise ValueError(op.kind)
     w_q = jnp.asarray(qop.w_q, jnp.int32)
     if op.kind == G.CONV:
-        acc = int_conv2d(x_q, w_q, stride=op.stride)
-    elif op.kind == G.DW:
-        acc = int_conv2d(x_q, w_q, stride=op.stride, groups=op.in_ch)
-    elif op.kind == G.PW:
-        acc = int_pointwise(x_q, w_q[0, 0] if w_q.ndim == 4 else w_q)
-    elif op.kind == G.DENSE:
-        acc = int_pointwise(x_q, w_q)
-    else:
-        raise ValueError(op.kind)
+        return int_conv2d(x_q, w_q, stride=op.stride)
+    if op.kind == G.DW:
+        return int_conv2d(x_q, w_q, stride=op.stride, groups=op.in_ch)
+    if op.kind == G.PW:
+        return int_pointwise(x_q, w_q[0, 0] if w_q.ndim == 4 else w_q)
+    if op.kind == G.DENSE:
+        return int_pointwise(x_q, w_q)
+    raise ValueError(op.kind)
+
+
+def _run_qop(x_q: jnp.ndarray, qop, fixed_point: bool) -> jnp.ndarray:
+    op = qop.spec
+    acc = _accumulate(x_q, qop)
 
     if op.act == G.HSIGMOID:
         # gate: y = relu6(x + 3)/6 quantized to [0, qmax] with S=1/qmax.
@@ -62,34 +226,63 @@ def _run_qop(x_q: jnp.ndarray, qop: QOp, fixed_point: bool) -> jnp.ndarray:
         gate = jnp.clip(y_fp + 3.0, 0.0, 6.0) / 6.0
         return jnp.round(gate / qop.out_scale).astype(jnp.int32)
 
+    if isinstance(qop, PreparedQOp):
+        z_x, wsum = qop.z_x, qop.wsum
+        bias, mult = qop.bias_q, qop.mult
+        mantissa = qop.mantissa if fixed_point else None
+        shift = qop.shift if fixed_point else None
+    else:
+        z_x = jnp.asarray(qop.in_zp, jnp.int32)
+        wsum = jnp.asarray(qop.wsum, jnp.int32)
+        bias = jnp.asarray(qop.bias_q, jnp.int32)
+        mult = jnp.asarray(qop.mult, jnp.float32)
+        mantissa = jnp.asarray(qop.mantissa, jnp.int64) if fixed_point else None
+        shift = jnp.asarray(qop.shift, jnp.int32) if fixed_point else None
     return quantized_op_epilogue(
         acc,
-        z_x=jnp.asarray(qop.in_zp, jnp.int32),
-        wsum=jnp.asarray(qop.wsum, jnp.int32),
-        bias_q=jnp.asarray(qop.bias_q, jnp.int32),
-        mult=jnp.asarray(qop.mult, jnp.float32),
+        z_x=z_x,
+        wsum=wsum,
+        bias_q=bias,
+        mult=mult,
         qmax=qop.qmax,
         z_y=jnp.asarray(0, jnp.int32),  # z_y folded into bias_q (qnet.py)
         fixed_point=fixed_point,
-        mantissa=jnp.asarray(qop.mantissa, jnp.int64) if fixed_point else None,
-        shift=jnp.asarray(qop.shift, jnp.int32) if fixed_point else None,
+        mantissa=mantissa,
+        shift=shift,
         clip_output=True,
     )
 
 
 def _residual_add(
-    a_q, a_s, a_z, b_q, b_s, b_z, y_s, y_z, qmax: int
+    a_q, a_s, a_z, b_q, b_s, b_z, y_s, y_z, qmax: int,
+    fixed_consts=None,
 ) -> jnp.ndarray:
-    """Integer skip-line add: rescale both operands into the output domain."""
+    """Skip-line add: rescale both operands into the output domain.
+
+    Float-multiplier mode rescales in f32 (matching the requant multiplier's
+    float mode). When `fixed_consts` is given (fixed_point mode), the add is
+    pure integer: mantissa multiplies + one shared round-shift, the same
+    'Approximator' arithmetic as the per-op fixed-point requant — no float
+    remains anywhere in the fixed-point datapath.
+    """
+    if fixed_consts is not None:
+        return int_residual_add(a_q, b_q, fixed_consts, qmax)
     a = (a_q.astype(jnp.float32) + a_z) * (a_s / y_s)
     b = (b_q.astype(jnp.float32) + b_z) * (b_s / y_s)
     return jnp.clip(jnp.round(a + b) - round(y_z), 0, qmax).astype(jnp.int32)
 
 
+def _residual_consts_for(block, qnet, a_s, a_z, b_s, b_z, y_s, y_z):
+    """Integer skip-add constants: cached on a PreparedQNet, else derived."""
+    if isinstance(qnet, PreparedQNet):
+        return qnet.res_fixed[block.name]
+    return residual_fixed_consts(a_s, a_z, b_s, b_z, y_s, y_z)
+
+
 def run_block(
     x_q: jnp.ndarray,
     block: G.BlockSpec,
-    qnet: QNet,
+    qnet: Union[QNet, PreparedQNet],
     in_s: float,
     in_z: float,
     fixed_point: bool = False,
@@ -116,7 +309,12 @@ def run_block(
     if block.residual:
         y_s, y_z = qnet.res_q[block.name]
         qmax = 2 ** block.ops[-1].act_bits - 1
-        y = _residual_add(x_q, in_s, in_z, y, cur_s, cur_z, y_s, y_z, qmax)
+        fixed_consts = None
+        if fixed_point:
+            fixed_consts = _residual_consts_for(
+                block, qnet, in_s, in_z, cur_s, cur_z, y_s, y_z)
+        y = _residual_add(x_q, in_s, in_z, y, cur_s, cur_z, y_s, y_z, qmax,
+                          fixed_consts=fixed_consts)
         cur_s, cur_z = y_s, y_z
     if block.avgpool:
         y = jnp.round(jnp.mean(y.astype(jnp.float32), axis=(1, 2))).astype(jnp.int32)
@@ -126,7 +324,7 @@ def run_block(
 def run_blocks(
     x_q: jnp.ndarray,
     blocks,
-    qnet: QNet,
+    qnet: Union[QNet, PreparedQNet],
     in_s: float,
     in_z: float,
     fixed_point: bool = False,
@@ -159,13 +357,17 @@ def input_qparams(qnet: QNet) -> Tuple[float, float]:
 
 
 def run_qnet(
-    qnet: QNet,
+    qnet: Union[QNet, PreparedQNet],
     x: jnp.ndarray,
     fixed_point: bool = False,
     input_bits: int = 8,
 ) -> jnp.ndarray:
     """Full integer inference. Returns float logits (dequantized at the end,
-    where the FPGA hands confidence computation back to the PS/softmax)."""
+    where the FPGA hands confidence computation back to the PS/softmax).
+
+    Pass a `PreparedQNet` (see `prepare_qnet`) to run the compiled integer
+    fast path with zero per-call host->device constant uploads; the logits
+    are bit-identical either way."""
     in_s, in_z = input_qparams(qnet)
     y = quantize_input(x, in_s, in_z, input_bits)
     y, cur_s, cur_z = run_blocks(y, qnet.spec.blocks, qnet, in_s, in_z,
@@ -175,6 +377,9 @@ def run_qnet(
 
 __all__ = [
     "quantize_input",
+    "PreparedQOp",
+    "PreparedQNet",
+    "prepare_qnet",
     "run_block",
     "run_blocks",
     "propagate_qparams",

@@ -105,6 +105,152 @@ def int_pointwise(x_q: jnp.ndarray, w_q: jnp.ndarray) -> jnp.ndarray:
     )
 
 
+# ---------------------------------------------------------------------------
+# Compiled integer fast-path formulations (bit-identical accumulators).
+#
+# XLA's CPU backend lowers integer convolutions to a naive scalar loop (no
+# Eigen/oneDNN path exists for s32 convs), which makes `int_conv2d` the
+# serving hot-spot off-TPU. The formulations below compute the *same int32
+# accumulator* through operations XLA does vectorize:
+#   * depthwise  -> K x K shifted elementwise multiply-adds (always exact),
+#   * matmul/conv-> f32 arithmetic, which is exact as long as every partial
+#     sum stays below 2^24 (f32 integers are exact up to 2^24); the bound is
+#     checked per-op against the actual quantized weights by
+#     `f32_accum_exact`.
+# ---------------------------------------------------------------------------
+
+
+def int_depthwise_shifts(
+    x_q: jnp.ndarray, w_q: jnp.ndarray, stride: int = 1
+) -> jnp.ndarray:
+    """Depthwise conv as unrolled shifted multiplies (SAME padding).
+
+    x_q: [B, H, W, C]; w_q: [K, K, C]. Bit-identical to `int_conv2d(...,
+    groups=C)` — integer adds/multiplies in a different order — but lowers to
+    vectorized elementwise ops instead of XLA-CPU's naive int conv loop.
+    """
+    from repro.kernels.common import same_pad_amount
+
+    b, h, w, c = x_q.shape
+    kernel = w_q.shape[0]
+    ph_lo, ph_hi, h_out = same_pad_amount(h, kernel, stride)
+    pw_lo, pw_hi, w_out = same_pad_amount(w, kernel, stride)
+    xp = jnp.pad(
+        x_q.astype(jnp.int32), ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0))
+    )
+    w3 = w_q.astype(jnp.int32)
+    acc = jnp.zeros((b, h_out, w_out, c), jnp.int32)
+    for ki in range(kernel):
+        for kj in range(kernel):
+            patch = jax.lax.slice(
+                xp,
+                (0, ki, kj, 0),
+                (b, ki + (h_out - 1) * stride + 1,
+                 kj + (w_out - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            acc = acc + patch * w3[ki, kj][None, None, None, :]
+    return acc
+
+
+def f32_accum_exact(w_q: np.ndarray, in_qmax: int) -> bool:
+    """True when an f32 accumulation over `w_q`'s reduction axes is exact.
+
+    Bound: activations lie in [0, in_qmax], so |acc| and every partial sum
+    are at most in_qmax * max_n(sum_k |w_q[..., n]|). Integers below 2^24 are
+    exactly representable in f32 (and any summation order stays below the
+    bound), so the f32 result equals the int32 accumulator bit-for-bit.
+    """
+    w = np.abs(np.asarray(w_q, np.int64))
+    red = tuple(range(w.ndim - 1))
+    colsum = w.sum(axis=red).max() if w.size else 0
+    return int(in_qmax) * int(colsum) < 2**24
+
+
+def int_pointwise_f32(x_q: jnp.ndarray, w_q: jnp.ndarray) -> jnp.ndarray:
+    """`int_pointwise` computed through the f32 units (use only when
+    `f32_accum_exact` holds for the operands). Precision HIGHEST forbids
+    bf16/tf32 shortcuts on accelerators — the exactness proof needs true
+    f32 multiplies."""
+    acc = jax.lax.dot_general(
+        x_q.astype(jnp.float32),
+        w_q.astype(jnp.float32),
+        (((x_q.ndim - 1,), (0,)), ((), ())),
+        precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32,
+    )
+    return acc.astype(jnp.int32)
+
+
+def int_conv2d_f32(
+    x_q: jnp.ndarray, w_q: jnp.ndarray, stride: int = 1, padding: str = "SAME"
+) -> jnp.ndarray:
+    """`int_conv2d` computed through the f32 conv path (use only when
+    `f32_accum_exact` holds for the operands). Precision HIGHEST as above."""
+    acc = jax.lax.conv_general_dilated(
+        x_q.astype(jnp.float32),
+        w_q.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        precision=jax.lax.Precision.HIGHEST,
+    )
+    return acc.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Integer residual skip-add (the fixed-point 'Approximator' applied to the
+# skip-line, Sec. 4.1): both operands are rescaled into the output domain
+# with integer mantissa multiplies + one shared round-shift.
+# ---------------------------------------------------------------------------
+
+# 14-bit mantissas keep every term below 2^24, so the path is exact in int32
+# even without jax x64 (255 * 2^14 * 2 + |c| < 2^31 with huge margin).
+RESIDUAL_MANT_BITS = 14
+
+
+def residual_fixed_consts(
+    a_s: float, a_z: float, b_s: float, b_z: float, y_s: float, y_z: float
+):
+    """Fold the skip-add rescale into integer constants (host-side, once).
+
+    Returns (m_a, m_b, c, shift, zy): y_q = round_shift(a_q*m_a + b_q*m_b
+    + c, shift) - zy, matching `_residual_add`'s float math to within the
+    14-bit mantissa quantization.
+    """
+    r_a, r_b = a_s / y_s, b_s / y_s
+    _, shift = quantize_multiplier(max(r_a, r_b), bits=RESIDUAL_MANT_BITS)
+    shift = int(shift)
+    m_a = int(round(r_a * 2.0**shift))
+    m_b = int(round(r_b * 2.0**shift))
+    c = int(round((a_z * r_a + b_z * r_b) * 2.0**shift))
+    return m_a, m_b, c, shift, int(round(y_z))
+
+
+def int_residual_add(
+    a_q: jnp.ndarray,
+    b_q: jnp.ndarray,
+    consts,
+    qmax: int,
+) -> jnp.ndarray:
+    """Integer skip-line add: y = clip(round_shift(a*m_a + b*m_b + c) - zy).
+
+    Round-half-away-from-zero, like `requantize_fixedpoint` (the FPGA
+    'Approximator' rounding mode). Pure int32 arithmetic.
+    """
+    m_a, m_b, c, shift, zy = consts
+    wide = (
+        a_q.astype(jnp.int32) * jnp.int32(m_a)
+        + b_q.astype(jnp.int32) * jnp.int32(m_b)
+        + jnp.int32(c)
+    )
+    if shift > 0:
+        half = jnp.where(wide >= 0, jnp.int32(1), jnp.int32(-1)) << (shift - 1)
+        wide = wide + half
+    y = (wide >> shift) - jnp.int32(zy)
+    return jnp.clip(y, 0, qmax).astype(jnp.int32)
+
+
 def quantized_op_epilogue(
     acc: jnp.ndarray,
     z_x: jnp.ndarray,
@@ -141,5 +287,12 @@ __all__ = [
     "clip_act",
     "int_conv2d",
     "int_pointwise",
+    "int_depthwise_shifts",
+    "int_pointwise_f32",
+    "int_conv2d_f32",
+    "f32_accum_exact",
+    "residual_fixed_consts",
+    "int_residual_add",
+    "RESIDUAL_MANT_BITS",
     "quantized_op_epilogue",
 ]

@@ -1,6 +1,9 @@
-# Pallas TPU kernels for the paper's compute hot-spots (see README.md):
-#   depthwise_conv  - the depthwise CU (Eq. 8 parallelism)
+# Pallas TPU kernels for the paper's compute hot-spots (see README.md
+# 'Performance' for the CU-role -> kernel fast-path matrix):
+#   pointwise_conv  - the pointwise/matmul CU (PW + DENSE ops, fused epilogue)
+#   depthwise_conv  - the depthwise CU (Eq. 8 parallelism, row-tiled grid)
 #   fused_irb       - the fused Body CU (expanded intermediates stay in VMEM)
 #   quant_matmul    - W4/W8 pointwise/linear GEMM with in-register dequant
 #   decode_attention- flash-decode w/ grouped GQA + int8-KV (beyond paper)
-# Each has ops.py wrappers and ref.py oracles; tests assert allclose.
+# Each has ops.py wrappers and ref.py oracles; tests assert bit-exactness
+# (integer kernels) or allclose (float GEMM/attention).

@@ -5,15 +5,30 @@ with parallel read ports feeds K*K*N parallel MACs (Eq. 8); results pass the
 Approximator & Clip unit.
 
 TPU adaptation: depthwise conv has *no channel reduction*, so the natural TPU
-mapping is channel-tiled VMEM blocks with the K x K accumulation fully
-unrolled as shifted vector multiplies over the (rows, cols) plane — the VPU
-analogue of K*K*N parallel MACs; there is nothing for the MXU to do (that is
-the paper's point: systolic arrays waste FMAs on depthwise).
+mapping is (row-strip, channel)-tiled VMEM blocks with the K x K accumulation
+fully unrolled as shifted vector multiplies over the (rows, cols) plane — the
+VPU analogue of K*K*N parallel MACs; there is nothing for the MXU to do (that
+is the paper's point: systolic arrays waste FMAs on depthwise).
 
-Grid: (batch, channel_tiles). Each grid step holds one zero-padded image
-slab [Hp, Wp, bc] in VMEM, computes all H_out rows (the 'line buffer' is the
-VMEM slab; Pallas double-buffers the HBM->VMEM stream across grid steps),
-applies the per-channel requant epilogue and writes [H_out, W_out, bc].
+Grid: (batch, channel_tiles, row_tiles), row tiles innermost — the input
+block's index map does not depend on the row-tile coordinate, so the
+[H, W, block_c] slab is fetched HBM->VMEM once per (batch, channel tile) and
+stays resident while every row strip of it is processed. HBM holds only the
+RAW activations — SAME padding happens in-kernel (VMEM-local zero pad + halo
+slice per row strip), so no jnp.pad-ed copy of the feature map is ever
+materialized in HBM; this mirrors the line buffer, which also pads at the
+window, not in DDR. Each grid step slices its strip (with K-1 halo rows) out
+of the slab, runs the unrolled K x K accumulation for `block_h` output rows,
+applies the per-channel requant epilogue and writes
+[block_h, W_out, block_c].
+
+Depthwise inputs are ReLU6-fused quantized (zero-point 0), so the in-kernel
+zero padding is exact.
+
+CU mapping (see README 'Performance'): this kernel is the DW op's compiled
+path on TPU, and the Body CU's dw stage when the fused-IRB kernel does not
+apply; off-TPU the same math runs as `integer_ops.int_depthwise_shifts`
+(identical shifted-multiply accumulation, XLA-compiled).
 """
 from __future__ import annotations
 
@@ -27,28 +42,44 @@ from repro.kernels.common import requant_clip
 
 
 def _dw_kernel(x_ref, w_ref, mult_ref, zcorr_ref, bias_ref, o_ref,
-               *, kernel: int, stride: int, h_out: int, w_out: int, qmax: int,
+               *, kernel: int, stride: int, th: int, w_out: int,
+               pad_top: int, pad_left: int, hp: int, wp: int, qmax: int,
                clip: bool):
-    x = x_ref[0].astype(jnp.int32)  # [Hp, Wp, bc]
+    x = x_ref[0].astype(jnp.int32)  # [H, W, bc] — raw, unpadded
+    bc = x.shape[-1]
+    # VMEM-local SAME padding (zp == 0 for ReLU6-fused dw inputs)
+    xp = jnp.pad(
+        x,
+        ((pad_top, hp - pad_top - x.shape[0]),
+         (pad_left, wp - pad_left - x.shape[1]),
+         (0, 0)),
+    )
+    # this strip's rows (including the K-1 halo); grid dim 2 is the row tile
+    nrows = (th - 1) * stride + kernel
+    row0 = pl.program_id(2) * th * stride
+    strip = jax.lax.dynamic_slice(xp, (row0, 0, 0), (nrows, wp, bc))
     w = w_ref[...].astype(jnp.int32)  # [K, K, bc]
-    acc = jnp.zeros((h_out, w_out, x.shape[-1]), jnp.int32)
+    acc = jnp.zeros((th, w_out, bc), jnp.int32)
     # K x K unrolled shifted multiply-accumulate == the sliding window
     for ki in range(kernel):
         for kj in range(kernel):
             patch = jax.lax.slice(
-                x,
+                strip,
                 (ki, kj, 0),
-                (ki + (h_out - 1) * stride + 1, kj + (w_out - 1) * stride + 1, x.shape[-1]),
+                (ki + (th - 1) * stride + 1,
+                 kj + (w_out - 1) * stride + 1, bc),
                 (stride, stride, 1),
             )
             acc = acc + patch * w[ki, kj][None, None, :]
-    y = requant_clip(acc, mult_ref[...], zcorr_ref[...], bias_ref[...], qmax, clip)
+    y = requant_clip(acc, mult_ref[...], zcorr_ref[...], bias_ref[...], qmax,
+                     clip)
     o_ref[0] = y.astype(o_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kernel", "stride", "qmax", "clip", "block_c", "interpret"),
+    static_argnames=("kernel", "stride", "qmax", "clip", "block_c", "block_h",
+                     "interpret"),
 )
 def depthwise_conv_q(
     x_q: jnp.ndarray,  # [B, H, W, C] int8/int32 quantized activations (zp folded)
@@ -62,45 +93,62 @@ def depthwise_conv_q(
     qmax: int = 15,
     clip: bool = True,
     block_c: int = 128,
+    block_h: int = 8,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Pallas depthwise conv with SAME padding. Returns int32 in [0, qmax]."""
+    """Pallas depthwise conv, SAME padding, grid (B, C_tiles, row_tiles).
+
+    `block_h` output rows per grid step (shrunk to the largest divisor of
+    H_out); padding is applied in-kernel and the input slab is re-used
+    across the innermost row-tile steps, so HBM traffic is the raw input +
+    output + weights. Returns int32 in [0, qmax].
+    """
     b, h, w, c = x_q.shape
     from repro.kernels.common import same_pad_amount
 
     ph_lo, ph_hi, h_out = same_pad_amount(h, kernel, stride)
     pw_lo, pw_hi, w_out = same_pad_amount(w, kernel, stride)
-    xp = jnp.pad(
-        x_q, ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0))
-    )  # dw input is ReLU6-fused quantized: zp == 0, so zero padding is exact
-    hp, wp = xp.shape[1], xp.shape[2]
     bc = min(block_c, c)
     if c % bc:
         raise ValueError(f"channels {c} must be divisible by block_c {bc}")
+    th = min(block_h, h_out)
+    while h_out % th:
+        th -= 1
+    # in-kernel pad must cover the last strip's halo rows
+    nrows = (th - 1) * stride + kernel
+    max_row = (h_out // th - 1) * th * stride + nrows
+    hp = max(ph_lo + h + ph_hi, max_row)
+    wp = pw_lo + w + pw_hi
 
-    grid = (b, c // bc)
+    # row tiles innermost: the x/w/const block indices ignore the row-tile
+    # coordinate, so those blocks stay VMEM-resident across consecutive steps
+    grid = (b, c // bc, h_out // th)
     out = pl.pallas_call(
         functools.partial(
             _dw_kernel,
             kernel=kernel,
             stride=stride,
-            h_out=h_out,
+            th=th,
             w_out=w_out,
+            pad_top=ph_lo,
+            pad_left=pw_lo,
+            hp=hp,
+            wp=wp,
             qmax=qmax,
             clip=clip,
         ),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, hp, wp, bc), lambda i, j: (i, 0, 0, j)),
-            pl.BlockSpec((kernel, kernel, bc), lambda i, j: (0, 0, j)),
-            pl.BlockSpec((bc,), lambda i, j: (j,)),
-            pl.BlockSpec((bc,), lambda i, j: (j,)),
-            pl.BlockSpec((bc,), lambda i, j: (j,)),
+            pl.BlockSpec((1, h, w, bc), lambda i, k, j: (i, 0, 0, k)),
+            pl.BlockSpec((kernel, kernel, bc), lambda i, k, j: (0, 0, k)),
+            pl.BlockSpec((bc,), lambda i, k, j: (k,)),
+            pl.BlockSpec((bc,), lambda i, k, j: (k,)),
+            pl.BlockSpec((bc,), lambda i, k, j: (k,)),
         ],
-        out_specs=pl.BlockSpec((1, h_out, w_out, bc), lambda i, j: (i, 0, 0, j)),
+        out_specs=pl.BlockSpec((1, th, w_out, bc), lambda i, k, j: (i, j, 0, k)),
         out_shape=jax.ShapeDtypeStruct((b, h_out, w_out, c), jnp.int32),
         interpret=interpret,
-    )(xp, w_q, mult, zcorr, bias_q)
+    )(x_q, w_q, mult, zcorr, bias_q)
     return out
 
 

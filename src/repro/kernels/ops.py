@@ -4,21 +4,38 @@ These adapt QNet metadata (per-channel scales, zero-point corrections) into
 the raw kernel signatures, pick interpret mode automatically (CPU container
 -> interpret=True; real TPU -> compiled), and expose a float `quantized_linear`
 for the LM architectures (weight-only quantization, the paper's Sec. 3.2 math).
+
+Every wrapper accepts either a host `QOp` or a device-resident
+`cu.PreparedQOp` — prepared ops reuse their cached jnp constants, so a jitted
+stage trace built over a `PreparedQNet` closes over device arrays and never
+re-uploads per invocation (the PR-2 'device-cached epilogue constants' path).
+
+Fast-path matrix (which CU op hits which kernel — see README 'Performance'):
+
+    op kind   on TPU (compiled Pallas)         off TPU (compiled XLA)
+    -------   ------------------------------   ---------------------------
+    PW/DENSE  pointwise_conv.pointwise_conv_q  int_pointwise(_f32) + epilogue
+    DW        depthwise_conv.depthwise_conv_q  int_depthwise_shifts + epilogue
+    IRB       fused_irb.fused_irb_q (Body CU)  per-op path above
+    CONV      (stem only) XLA conv             int_conv2d(_f32) + epilogue
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+import math
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.qnet import QOp, QNet
+from repro.core import cu as _cu
 from repro.core import graph as G
 from repro.core.quant import QuantConfig, compute_scale_zp, observe_range, quantize
 from repro.kernels import depthwise_conv as _dw
 from repro.kernels import fused_irb as _irb
+from repro.kernels import pointwise_conv as _pw
 from repro.kernels import quant_matmul as _qmm
 
 
@@ -26,34 +43,77 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _epilogue_consts(qop: QOp) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+def _epilogue_consts(qop) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """(mult, zcorr, bias') for the kernel epilogue.
 
     kernel computes round(acc * mult + zcorr) + bias; z_y is already folded
-    into bias_q at QNet build time (see qnet._quantize_op).
+    into bias_q at QNet build time (see qnet._quantize_op). PreparedQOps
+    return their device-cached constants directly.
     """
+    if isinstance(qop, _cu.PreparedQOp):
+        return qop.mult, qop.zcorr, qop.bias_q
     mult = jnp.asarray(qop.mult, jnp.float32)
     zcorr = jnp.asarray(qop.in_zp * qop.mult * qop.wsum, jnp.float32)
     bias = jnp.asarray(qop.bias_q, jnp.int32)
     return mult, zcorr, bias
 
 
-def run_dw_qop(x_q: jnp.ndarray, qop: QOp, interpret: Optional[bool] = None):
-    """Depthwise QNet op via the Pallas kernel."""
-    interp = (not on_tpu()) if interpret is None else interpret
-    mult, zcorr, bias = _epilogue_consts(qop)
+def _dw_weight(qop) -> jnp.ndarray:
+    if isinstance(qop, _cu.PreparedQOp):
+        return qop.w_kern
     w = jnp.asarray(qop.w_q)  # [K, K, 1, C] -> [K, K, C]
-    w = w.reshape(w.shape[0], w.shape[1], w.shape[-1])
-    c = x_q.shape[-1]
-    bc = c
+    return w.reshape(w.shape[0], w.shape[1], w.shape[-1])
+
+
+def _mat_weight(qop) -> jnp.ndarray:
+    if isinstance(qop, _cu.PreparedQOp):
+        return qop.w_kern
+    w = jnp.asarray(qop.w_q)
+    return w[0, 0] if w.ndim == 4 else w
+
+
+def _pick_block_c(c: int) -> int:
     for cand in (128, 64, 32, 16, 8):
         if c % cand == 0 and c >= cand:
-            bc = cand
-            break
+            return cand
+    return c
+
+
+def run_dw_qop(x_q: jnp.ndarray, qop, interpret: Optional[bool] = None,
+               block_h: int = 8):
+    """Depthwise QNet op via the row-tiled Pallas kernel."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    mult, zcorr, bias = _epilogue_consts(qop)
     return _dw.depthwise_conv_q(
-        x_q, w, mult, zcorr, bias,
+        x_q, _dw_weight(qop), mult, zcorr, bias,
         kernel=qop.spec.kernel, stride=qop.spec.stride, qmax=qop.qmax,
-        clip=qop.clip, block_c=bc, interpret=interp,
+        clip=qop.clip, block_c=_pick_block_c(x_q.shape[-1]),
+        block_h=block_h, interpret=interp,
+    )
+
+
+def _pw_zpc(qop) -> jnp.ndarray:
+    if isinstance(qop, _cu.PreparedQOp):
+        return qop.zpc
+    return jnp.int32(qop.in_zp) * jnp.asarray(qop.wsum, jnp.int32)
+
+
+def run_pw_qop(x_q: jnp.ndarray, qop, interpret: Optional[bool] = None):
+    """Pointwise / dense QNet op via the Pallas matmul-CU kernel.
+
+    Bit-exact with `int_pointwise` + `quantized_op_epilogue` (the kernel
+    applies the identical integer zero-point correction and f32 requant
+    sequence). Clips to [0, qmax] like the reference epilogue — linear ops
+    included, since the output quantizer's codomain is [0, qmax] either way.
+    """
+    interp = (not on_tpu()) if interpret is None else interpret
+    mult = qop.mult if isinstance(qop, _cu.PreparedQOp) else jnp.asarray(
+        qop.mult, jnp.float32)
+    bias = qop.bias_q if isinstance(qop, _cu.PreparedQOp) else jnp.asarray(
+        qop.bias_q, jnp.int32)
+    return _pw.pointwise_conv_q(
+        x_q, _mat_weight(qop), mult, _pw_zpc(qop), bias,
+        qmax=qop.qmax, clip=True, interpret=interp,
     )
 
 
@@ -102,14 +162,12 @@ def run_irb_block(
             q3.out_scale / y_s * q3.out_zp,
         )
         out_s, out_z = y_s, y_z
-    w2 = jnp.asarray(q2.w_q)
-    w2 = w2.reshape(w2.shape[0], w2.shape[1], w2.shape[-1])
     y = _irb.fused_irb_q(
         x_q,
-        jnp.asarray(q1.w_q)[0, 0] if q1.w_q.ndim == 4 else jnp.asarray(q1.w_q),
+        _mat_weight(q1),
         m1, c1, b1,
-        w2, m2, c2, b2,
-        jnp.asarray(q3.w_q)[0, 0] if q3.w_q.ndim == 4 else jnp.asarray(q3.w_q),
+        _dw_weight(q2), m2, c2, b2,
+        _mat_weight(q3),
         m3, c3, b3,
         kernel=q2.spec.kernel,
         stride=q2.spec.stride,
@@ -119,6 +177,56 @@ def run_irb_block(
         interpret=interp,
     )
     return y, out_s, out_z
+
+
+def run_block_kernels(
+    x_q: jnp.ndarray,
+    block: G.BlockSpec,
+    qnet,
+    in_s: float,
+    in_z: float,
+    interpret: Optional[bool] = None,
+):
+    """One block through the per-op Pallas kernels (no IRB fusion).
+
+    Mirrors `cu.run_block` exactly, but routes DW ops through the row-tiled
+    depthwise kernel and PW/DENSE ops through the pointwise-CU kernel — the
+    compiled path for Head/Tail/Classifier stages and for Body blocks the
+    fused-IRB kernel cannot take (SE branches, mixed act_bits). CONV (the
+    stem) and the SE gate stay on the XLA path inside `cu.run_block`'s
+    reference op body. Returns (y_q, out_s, out_z).
+    """
+    y = x_q
+    cur_s, cur_z = in_s, in_z
+    for op in block.ops:
+        qop = qnet.ops[op.name]
+        if op.kind == G.DW:
+            y = run_dw_qop(y, qop, interpret=interpret)
+        elif op.kind in (G.PW, G.DENSE) and op.act != G.HSIGMOID:
+            y = run_pw_qop(y, qop, interpret=interpret)
+        else:
+            y = _cu._run_qop(y, qop, fixed_point=False)
+        cur_s, cur_z = qop.out_scale, qop.out_zp
+        if block.se is not None and block.se_after == op.name:
+            sq = qnet.ops[block.se.squeeze.name]
+            ex = qnet.ops[block.se.excite.name]
+            pooled = jnp.round(
+                jnp.mean(y.astype(jnp.float32), axis=(1, 2))).astype(jnp.int32)
+            s = run_pw_qop(pooled, sq, interpret=interpret)
+            gate_q = _cu._run_qop(s, ex, fixed_point=False)  # hsigmoid gate
+            y = jnp.round(
+                y.astype(jnp.float32)
+                * gate_q[:, None, None, :].astype(jnp.float32)
+                * ex.out_scale
+            ).astype(jnp.int32)
+    if block.residual:
+        y_s, y_z = qnet.res_q[block.name]
+        qmax = 2 ** block.ops[-1].act_bits - 1
+        y = _cu._residual_add(x_q, in_s, in_z, y, cur_s, cur_z, y_s, y_z, qmax)
+        cur_s, cur_z = y_s, y_z
+    if block.avgpool:
+        y = jnp.round(jnp.mean(y.astype(jnp.float32), axis=(1, 2))).astype(jnp.int32)
+    return y, cur_s, cur_z
 
 
 # ---------------------------------------------------------------------------
@@ -165,11 +273,18 @@ def quantized_linear(
     if pad:
         x2 = jnp.pad(x2, ((0, pad), (0, 0)))
     n = w_q.shape[1] * (2 if bits == 4 else 1)
-    bn = 128 if n % 128 == 0 else n
+    # largest divisor of N at most 128 (one giant N block would blow VMEM
+    # for non-multiple-of-128 N; any divisor tiles exactly)
+    bn = _pw._largest_divisor(n, 128)
     group = k // w_scale.shape[0]
     bk = min(512, group) if group < 512 or group % 512 else 512
-    while k % bk or (group % bk and bk % group):
+    # bk must divide K and align with the scale-group size; halving can
+    # bottom out (e.g. group == 0 when there are more scale rows than K, or
+    # no shared power-of-two factor) — fall back to gcd(k, group), floor 1
+    while bk > 1 and (k % bk or (group % bk and bk % group)):
         bk //= 2
+    if bk < 1 or k % bk or (group % bk and bk % group):
+        bk = max(math.gcd(k, group), 1)
     y = _qmm.quant_matmul(
         x2, w_q, w_scale, bits=bits, block_m=bm, block_n=bn, block_k=bk,
         interpret=interp,
@@ -199,6 +314,8 @@ def decode_attend(q, kv_cache, kv_len, interpret: Optional[bool] = None):
 
 __all__ = [
     "run_dw_qop",
+    "run_pw_qop",
+    "run_block_kernels",
     "fusable_irb",
     "run_irb_block",
     "quantize_weight_for_matmul",

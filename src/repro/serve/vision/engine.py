@@ -111,6 +111,9 @@ class VisionEngine:
         fixed_point: bool = False,
         input_bits: int = 8,
         body_fast_path: str = "auto",
+        op_kernels: str = "auto",
+        prepare: bool = True,
+        donate: str = "auto",
         interpret: Optional[bool] = None,
         max_queue: int = 4096,
     ):
@@ -122,7 +125,8 @@ class VisionEngine:
         self.max_queue = max_queue
         self.stages: List[CompiledStage] = compile_stages(
             qnet, self.plan, fixed_point=fixed_point, input_bits=input_bits,
-            body_fast_path=body_fast_path, interpret=interpret)
+            body_fast_path=body_fast_path, op_kernels=op_kernels,
+            prepare=prepare, donate=donate, interpret=interpret)
         self.pipe = PipelinedExecutor(self.stages)
         net = qnet.spec
         self.input_shape = (net.input_hw, net.input_hw, net.input_ch)

@@ -4,19 +4,33 @@ The FPGA runs each CU as fixed silicon reconfigured per invocation over
 AXI-Lite; the XLA analogue is one jitted function per CU *stage* (the
 contiguous run of same-role invocations in the schedule), traced once per
 batch bucket. All intra-stage intermediates stay on-chip, exactly like the
-FPGA's FIFO-streamed operator pipeline — the Body stage can additionally
-route canonical expand->dw->project blocks through the `kernels/fused_irb`
-Pallas kernel, which pins the t*C-expanded intermediate into VMEM.
+FPGA's FIFO-streamed operator pipeline.
+
+The integer datapath runs on one of three op implementations per stage:
+
+  * prepared XLA fast path (default) — `cu.prepare_qnet` lowers the QNet to
+    device-resident constants once at plan-build time, and the CU runners
+    switch to the compiled integer formulations (shifted-slice depthwise,
+    exactness-gated f32 matmul/conv). Bit-exact with the reference; this is
+    what makes the hot loop fast off-TPU.
+  * per-op Pallas kernels (`op_kernels`) — DW through the row-tiled
+    depthwise kernel, PW/DENSE (Head/Body/Tail/Classifier) through the
+    pointwise-CU kernel. "auto" enables them on a real TPU.
+  * fused-IRB Pallas kernel (`body_fast_path`) — canonical Body blocks as
+    one kernel that pins the t*C-expanded intermediate into VMEM.
 
 Quantizer handoff between stages is static: `cu.propagate_qparams` derives
 each stage's (scale, zp) contract from QNet metadata alone, so a stage
 function is a pure array -> array map and the executor chain is bit-exact
-with the monolithic `cu.run_qnet` reference.
+with the monolithic `cu.run_qnet` reference. On accelerators, stage inputs
+are donated at the stage boundary (`donate="auto"`): an intermediate
+activation buffer is dead the moment the next stage consumes it, so XLA can
+reuse it for the stage's own output instead of allocating fresh HBM.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -50,19 +64,24 @@ class CompiledStage:
     engine only ever presents bucket-padded batches, so the trace cache
     stays one entry per (stage, bucket)."""
 
-    def __init__(self, spec: StageSpec, qnet: QNet, *, fixed_point: bool,
-                 input_bits: int, fast_path: bool,
-                 interpret: Optional[bool]):
+    def __init__(self, spec: StageSpec, qnet: Union[QNet, cu.PreparedQNet],
+                 *, fixed_point: bool, input_bits: int, fast_path: bool,
+                 op_kernels: bool, interpret: Optional[bool],
+                 donate: bool = False):
         self.spec = spec
         self._qnet = qnet
         self._fixed_point = fixed_point
         self._input_bits = input_bits
         self._fast_path = fast_path and spec.cu == CC.BODY
+        self._op_kernels = op_kernels
         self._interpret = interpret
         self.invocations = 0  # CU invocations dispatched (micro-batches)
-        self._fn = jax.jit(self._trace)
+        self.traces = 0  # jit cache misses (should stay == #buckets)
+        self._fn = jax.jit(
+            self._trace, donate_argnums=(0,) if donate else ())
 
     def _trace(self, x: jax.Array) -> jax.Array:
+        self.traces += 1
         spec = self.spec
         y = x
         if spec.quantizes_input:
@@ -72,6 +91,9 @@ class CompiledStage:
         for block in spec.blocks:
             if self._fast_path and K.fusable_irb(block):
                 y, s, z = K.run_irb_block(
+                    y, block, self._qnet, s, z, interpret=self._interpret)
+            elif self._op_kernels:
+                y, s, z = K.run_block_kernels(
                     y, block, self._qnet, s, z, interpret=self._interpret)
             else:
                 y, s, z = cu.run_block(
@@ -85,36 +107,60 @@ class CompiledStage:
         return self._fn(x)
 
 
+def _resolve(flag: str, name: str) -> bool:
+    if flag not in ("auto", "on", "off"):
+        raise ValueError(f"{name}={flag!r}")
+    return K.on_tpu() if flag == "auto" else flag == "on"
+
+
 def compile_stages(
-    qnet: QNet,
+    qnet: Union[QNet, cu.PreparedQNet],
     plan: Optional[CC.CUPlan] = None,
     *,
     fixed_point: bool = False,
     input_bits: int = 8,
     body_fast_path: str = "auto",  # "auto" | "on" | "off"
+    op_kernels: str = "auto",  # "auto" | "on" | "off"
+    prepare: bool = True,
+    donate: str = "auto",  # "auto" | "on" | "off"
     interpret: Optional[bool] = None,
 ) -> List[CompiledStage]:
     """Lower a CUPlan into the ordered list of jitted stage executors.
 
     `body_fast_path`: route fusable Body blocks through the Pallas fused-IRB
-    kernel. "auto" enables it only on a real TPU (in interpret mode the
-    kernel is emulated and slower than the plain XLA path, though still
-    bit-exact); "on"/"off" force it either way.
+    kernel. `op_kernels`: route DW/PW/DENSE ops through the per-op Pallas
+    kernels in every stage. Both are "auto" == only on a real TPU (in
+    interpret mode the kernels are emulated and slower than the compiled XLA
+    path, though still bit-exact); "on"/"off" force either way.
+
+    `prepare`: lower the QNet with `cu.prepare_qnet` first (device-resident
+    constants + compiled integer formulations). Default on — this is the
+    serving configuration; "off" reproduces the PR-1 reference stages.
+
+    `donate`: donate each non-Head stage's input buffer to XLA ("auto" ==
+    only on accelerator backends; the CPU runtime cannot reuse donations
+    and would warn).
     """
     if plan is None:
         plan = CC.compile_net(qnet.spec)
-    if body_fast_path not in ("auto", "on", "off"):
-        raise ValueError(f"body_fast_path={body_fast_path!r}")
-    fast = K.on_tpu() if body_fast_path == "auto" else body_fast_path == "on"
-    if fixed_point and fast:
-        # the fused kernel's requant epilogue is float-multiplier only; a
+    fast = _resolve(body_fast_path, "body_fast_path")
+    kerns = _resolve(op_kernels, "op_kernels")
+    if fixed_point and (fast or kerns):
+        # the Pallas kernels' requant epilogue is float-multiplier only; a
         # silent fallback would break bit-exactness with
         # run_qnet(fixed_point=True)
-        if body_fast_path == "on":
+        if body_fast_path == "on" or op_kernels == "on":
             raise ValueError(
-                "body_fast_path='on' is incompatible with fixed_point=True "
-                "(the fused IRB kernel has no fixed-point requant mode)")
-        fast = False
+                "body_fast_path/op_kernels='on' is incompatible with "
+                "fixed_point=True (the Pallas kernels have no fixed-point "
+                "requant mode)")
+        fast = kerns = False
+    if donate not in ("auto", "on", "off"):
+        raise ValueError(f"donate={donate!r}")
+    donate_ok = (jax.default_backend() != "cpu") if donate == "auto" \
+        else donate == "on"
+    if prepare:
+        qnet = cu.prepare_qnet(qnet, input_bits=input_bits)
 
     sigs = plan.stage_signatures()
     stages: List[CompiledStage] = []
@@ -134,7 +180,8 @@ def compile_stages(
         )
         stages.append(CompiledStage(
             spec, qnet, fixed_point=fixed_point, input_bits=input_bits,
-            fast_path=fast, interpret=interpret))
+            fast_path=fast, op_kernels=kerns, interpret=interpret,
+            donate=donate_ok and i > 0))
         s, z = out_s, out_z
     return stages
 

@@ -60,16 +60,38 @@ except ImportError:  # container without hypothesis: deterministic fallback
     from _hypothesis_fallback import given, settings, st
 
 
+@pytest.mark.parametrize("h,w,c,K,s,bh", [
+    (16, 16, 8, 3, 1, 4),     # 4 row tiles
+    (16, 16, 8, 3, 2, 2),     # stride 2: strip start walks 2x per tile
+    (14, 14, 8, 5, 1, 3),     # 5x5 halo spans two neighbouring tiles
+    (13, 11, 8, 5, 2, 2),     # 5x5 stride 2, odd rectangular
+    (12, 12, 8, 3, 1, 1),     # one output row per tile (max grid)
+    (9, 9, 8, 3, 2, 8),       # block_h > H_out: single tile fallback
+    (10, 10, 16, 5, 2, 7),    # block_h not dividing H_out: shrinks to 5
+])
+def test_depthwise_row_tiling(h, w, c, K, s, bh):
+    """Row-tiled grid (batch, row_tiles, channel_tiles): every tiling of the
+    output rows — including strips whose K-1 halo crosses the in-kernel
+    zero padding — agrees with the oracle bit-for-bit."""
+    x, wq, mult, zc, b = _mk(h, w, c, K, seed=1)
+    y = depthwise_conv_q(x, wq, mult, zc, b, kernel=K, stride=s,
+                         block_c=8, block_h=bh, interpret=True)
+    yr = ref.depthwise_conv_q_ref(x, wq, mult, zc, b, kernel=K, stride=s)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
 @settings(max_examples=15, deadline=None)
 @given(
     h=st.integers(6, 14), w=st.integers(6, 14),
     c=st.sampled_from([8, 16]), k=st.sampled_from([3, 5]),
-    s=st.sampled_from([1, 2]), seed=st.integers(0, 10_000),
+    s=st.sampled_from([1, 2]), bh=st.sampled_from([1, 2, 3, 8]),
+    seed=st.integers(0, 10_000),
 )
-def test_property_depthwise_random_geometry(h, w, c, k, s, seed):
-    """Hypothesis sweep: any (H, W, C, K, stride) agrees with the oracle."""
+def test_property_depthwise_random_geometry(h, w, c, k, s, bh, seed):
+    """Hypothesis sweep: any (H, W, C, K, stride, row tile) agrees with the
+    oracle — covers stride-2 and 5x5 (EfficientNet) geometries."""
     x, wq, mult, zc, b = _mk(h, w, c, k, seed=seed)
     y = depthwise_conv_q(x, wq, mult, zc, b, kernel=k, stride=s,
-                         block_c=8, interpret=True)
+                         block_c=8, block_h=bh, interpret=True)
     yr = ref.depthwise_conv_q_ref(x, wq, mult, zc, b, kernel=k, stride=s)
     np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))

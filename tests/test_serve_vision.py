@@ -170,6 +170,23 @@ def test_pipelined_bit_exact_fused_body(mnv2_qnet):
     np.testing.assert_array_equal(got, ref)
 
 
+@pytest.mark.slow
+@pytest.mark.parametrize("qnet_fixture", ["mnv2_qnet", "effnet_qnet"])
+def test_pipelined_bit_exact_op_kernels(qnet_fixture, request):
+    """Every PW/DENSE op through the Pallas pointwise-CU kernel and every DW
+    op through the row-tiled depthwise kernel (interpret mode on CPU):
+    full-net logits stay identical to the monolithic reference."""
+    qnet = request.getfixturevalue(qnet_fixture)
+    imgs = _images(2)
+    eng = VisionEngine(qnet, buckets=(2,), op_kernels="on",
+                       interpret=not jax.default_backend() == "tpu")
+    rids = [eng.submit(img) for img in imgs]
+    results = eng.run()
+    got = np.stack([results[r].logits for r in rids])
+    ref = np.asarray(cu.run_qnet(qnet, jnp.asarray(imgs)))
+    np.testing.assert_array_equal(got, ref)
+
+
 def test_pipeline_executor_ordering(mnv2_qnet):
     stages = compile_stages(mnv2_qnet)
     pipe = PipelinedExecutor(stages)
