@@ -8,14 +8,19 @@
   bench_table6_efficientnet Table 6/7 (compact EfficientNet + CU mapping)
   bench_quant_serving       beyond-paper: LM weight-quantized serving
   bench_vision_serving      beyond-paper: pipelined CU-stage vision serving
+                            (+ the multi-replica sharded scaling curve)
   bench_kernels             kernel-level microbenchmarks
 
-`--smoke` runs the fast subset (kernels + a reduced vision-serving pass) and
-asserts the JSON reports still parse — the CI gate. A full (or smoke) run
-aggregates the per-benchmark results into a perf-trajectory report at the
-repo root, BENCH_PR2.json: throughput / latency / analytic bytes-moved, plus
-deltas against the PR-1 `experiments/vision_serving.json` baseline captured
-before this run overwrote it.
+`--smoke` runs the fast subset (kernels + a reduced vision-serving pass +
+the replica-scaling sweep) and asserts the JSON reports still parse — the
+CI gate. A full (or smoke) run aggregates the per-benchmark results into a
+perf-trajectory report at the repo root, BENCH_PR3.json: throughput /
+latency / analytic bytes-moved, the per-replica-count scaling curve (each
+point conformance-checked against the frozen golden fixtures), plus deltas
+against the previous PR's `experiments/vision_serving.json` baseline
+captured before this run overwrote it. Force N CPU devices with
+`XLA_FLAGS=--xla_force_host_platform_device_count=N` to exercise the
+sharded points.
 """
 from __future__ import annotations
 
@@ -24,8 +29,9 @@ import json
 import os
 import sys
 
-BENCH_REPORT = "BENCH_PR2.json"
+BENCH_REPORT = "BENCH_PR3.json"
 VISION_REPORT = "experiments/vision_serving.json"
+SCALING_REPORT = "experiments/vision_serving_scaling.json"
 
 
 def _load_baseline(path: str):
@@ -39,7 +45,8 @@ def _load_baseline(path: str):
         return None
 
 
-def _write_trajectory(vision, kernels, baseline, smoke: bool) -> None:
+def _write_trajectory(vision, kernels, baseline, smoke: bool,
+                      scaling=None) -> None:
     # deltas are only meaningful against a same-config baseline (smoke runs
     # a reduced geometry, so its trajectory carries absolute numbers only)
     if baseline and vision and (
@@ -51,10 +58,11 @@ def _write_trajectory(vision, kernels, baseline, smoke: bool) -> None:
         pr1_fps = baseline.get("fps_pipelined_fast",
                                baseline.get("fps_pipelined"))
     report = {
-        "pr": 2,
+        "pr": 3,
         "smoke": smoke,
         "baseline_source": VISION_REPORT if baseline else None,
         "serving": None,
+        "scaling": None,
         "kernels": kernels,
     }
     if vision:
@@ -80,6 +88,19 @@ def _write_trajectory(vision, kernels, baseline, smoke: bool) -> None:
                 vision["latency_p50_s"] - baseline["latency_p50_s"]
                 if baseline and "latency_p50_s" in baseline else None),
         }
+    if scaling:
+        report["scaling"] = {
+            "device_count": scaling["device_count"],
+            "input_hw": scaling["input_hw"],
+            "batch": scaling["batch"],
+            "replica_counts": scaling["replica_counts"],
+            "fps_per_replica_count": {
+                r: p["fps"] for r, p in scaling["curve"].items()},
+            "speedup_max_replicas_vs_1":
+                scaling["speedup_max_replicas_vs_1"],
+            "all_bit_exact_incl_golden": scaling["all_bit_exact"],
+            "golden_checked": scaling.get("golden_checked"),
+        }
     if kernels:
         report["bytes_moved"] = {
             "dw_hbm_bytes": kernels.get("dw_hbm_bytes"),
@@ -94,8 +115,8 @@ def _write_trajectory(vision, kernels, baseline, smoke: bool) -> None:
     print(f"# wrote {BENCH_REPORT}", file=sys.stderr)
 
 
-def _assert_reports_parse(vision_path: str) -> None:
-    for path in (BENCH_REPORT, vision_path):
+def _assert_reports_parse(*paths: str) -> None:
+    for path in (BENCH_REPORT, *paths):
         with open(path) as f:
             json.load(f)  # raises on corruption — the CI smoke assertion
 
@@ -120,46 +141,59 @@ def main(argv=None) -> None:
     baseline = _load_baseline(VISION_REPORT)
     print("name,us_per_call,derived")
     failures = 0
-    vision = kernels = None
+    vision = kernels = scaling = None
 
     # smoke must not clobber the committed perf-trajectory baseline with
     # reduced-size numbers
     vision_out = ("experiments/vision_serving_smoke.json" if args.smoke
                   else VISION_REPORT)
+    scaling_out = ("experiments/vision_serving_scaling_smoke.json"
+                   if args.smoke else SCALING_REPORT)
     if args.smoke:
         plan = [
-            (bench_kernels, lambda: bench_kernels.run()),
-            (bench_vision_serving,
+            (bench_kernels, "kernels", lambda: bench_kernels.run()),
+            (bench_vision_serving, "vision",
              lambda: bench_vision_serving.run(hw=32, n_images=16, repeats=1,
                                               out=vision_out)),
+            (bench_vision_serving, "scaling",
+             lambda: bench_vision_serving.run_scaling(
+                 hw=32, n_images=16, repeats=1, out=scaling_out)),
         ]
     else:
         plan = [
-            (m, m.run) for m in (
+            (m, None, m.run) for m in (
                 bench_table2, bench_bw_sweep, bench_table3, bench_fusion,
                 bench_table6_efficientnet, bench_quant_serving)
         ] + [
-            (bench_kernels, lambda: bench_kernels.run()),
-            (bench_vision_serving, lambda: bench_vision_serving.run()),
+            (bench_kernels, "kernels", lambda: bench_kernels.run()),
+            (bench_vision_serving, "vision",
+             lambda: bench_vision_serving.run()),
+            (bench_vision_serving, "scaling",
+             lambda: bench_vision_serving.run_scaling(out=scaling_out)),
         ]
 
-    for mod, fn in plan:
+    for mod, slot, fn in plan:
         try:
             out = fn()
-            if mod is bench_kernels:
+            if slot == "kernels":
                 kernels = out
-            elif mod is bench_vision_serving:
+            elif slot == "vision":
                 vision = out
+            elif slot == "scaling":
+                scaling = out
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{mod.__name__},0.0,ERROR:{type(e).__name__}:{e}",
                   file=sys.stderr)
 
-    _write_trajectory(vision, kernels, baseline, args.smoke)
-    if args.smoke:
-        _assert_reports_parse(vision_out)
+    _write_trajectory(vision, kernels, baseline, args.smoke, scaling)
     if failures:
+        # exit on the recorded benchmark errors before asserting report
+        # files that a failed benchmark never wrote (a FileNotFoundError
+        # here would bury the real cause)
         sys.exit(1)
+    if args.smoke:
+        _assert_reports_parse(vision_out, scaling_out)
 
 
 if __name__ == "__main__":

@@ -3,10 +3,19 @@ CU-stage vision engine.
 
     PYTHONPATH=src python examples/serve_vision.py
 
+Multi-replica sharded serving (split micro-batches across N CPU devices):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python examples/serve_vision.py
+
 Walks the full deployment path from the paper: build the NetSpec, calibrate
 activations, quantize to an integer QNet, compile the CU schedule into
 stage executors, then serve a stream of requests with continuous batching —
 and shows the engine output is bit-exact with the reference integer runner.
+When more than one device is visible, the engine shards every micro-batch
+data-parallel across a `dist.sharding.data_mesh`; the logits stay
+bit-identical to the single-device run. A second model (the compact
+EfficientNet) is served concurrently through the EDF `MultiModelEngine`.
 """
 import time
 
@@ -14,32 +23,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compiler as CC, cu, qnet as Q
-from repro.core.calibrate import calibrate
-from repro.core.quant import QuantConfig
-from repro.models import layers, mobilenet_v2 as mnv2
-from repro.serve.vision import VisionEngine
+from repro.core import compiler as CC, cu
+from repro.dist.sharding import data_mesh
+from repro.models import efficientnet as effn, mobilenet_v2 as mnv2
+from repro.models.layers import make_calibrated_qnet
+from repro.serve.vision import MultiModelEngine, VisionEngine
 
 
 def main():
-    # 1. front-end: float model -> calibrated integer QNet (BW=4)
     hw = 64
     net = mnv2.build(alpha=0.35, input_hw=hw, num_classes=1000)
-    params = layers.init_params(jax.random.PRNGKey(0), net)
+    # front-end: float model -> calibrated integer QNet (BW=4)
+    qnet = make_calibrated_qnet(net, n_cal=4)
 
-    def apply_fn(p, b):
-        return layers.forward(p, b, net, capture=True)[1]
-
-    cal = [jax.random.uniform(jax.random.PRNGKey(i), (2, hw, hw, 3),
-                              minval=-1, maxval=1) for i in range(4)]
-    obs = calibrate(apply_fn, params, cal, QuantConfig(4, False, None))
-    qnet = Q.quantize_net(params, net, obs)
-
-    # 2. back-end: CU schedule -> pipelined serving engine
+    # back-end: CU schedule -> pipelined serving engine, replicated over
+    # every visible device (a single device degenerates to the plain engine)
     plan = CC.compile_net(net)
     print("CU schedule:", [(s.cu, s.invocations)
                            for s in plan.stage_signatures()])
-    engine = VisionEngine(qnet, plan, buckets=(1, 2, 4, 8))
+    n_dev = len(jax.devices())
+    mesh = data_mesh(n_dev) if n_dev > 1 else None
+    print(f"serving over {n_dev} device(s)"
+          + (f" (mesh {dict(mesh.shape)})" if mesh else ""))
+    engine = VisionEngine(qnet, plan, buckets=(1, 2, 4, 8), mesh=mesh)
     engine.warmup()
 
     # 3. serve a request stream (some with deadlines)
@@ -64,6 +70,24 @@ def main():
           f"stage invocations: {stats.stage_invocations}")
     print(f"energy proxy: {stats.energy_j_per_image_proxy*1e6:.2f} uJ/image "
           f"-> {stats.fps_per_watt_proxy:.0f} FPS/W-proxy")
+
+    # 5. multi-model routing: MobileNetV2 + compact EfficientNet share the
+    # device(s); the router dispatches micro-batches EDF across models
+    effq = make_calibrated_qnet(
+        effn.build_compact(input_hw=hw, num_classes=1000), n_cal=4)
+    router = MultiModelEngine({
+        "mobilenet_v2": VisionEngine(qnet, buckets=(2, 4), mesh=mesh),
+        "efficientnet_compact": VisionEngine(effq, buckets=(2, 4), mesh=mesh),
+    })
+    router.warmup()
+    now = time.perf_counter()
+    handles = [router.submit("mobilenet_v2" if i % 2 == 0
+                             else "efficientnet_compact", img,
+                             deadline_s=now + (1.0 if i % 4 == 1 else 10.0))
+               for i, img in enumerate(images[:8])]
+    res = router.run()
+    print(f"multi-model: {sum(res[h].status == 'ok' for h in handles)}/8 ok, "
+          f"dispatch order {[m for m, _ in router.dispatch_log]}")
 
 
 if __name__ == "__main__":

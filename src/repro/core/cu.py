@@ -112,7 +112,7 @@ class PreparedQNet:
         return self.qnet.spec
 
 
-def _prepare_qop(qop: QOp, in_qmax: int) -> PreparedQOp:
+def _prepare_qop(qop: QOp, in_qmax: int, put=jnp.asarray) -> PreparedQOp:
     w_np = np.asarray(qop.w_q)
     if qop.spec.kind == G.DW:
         w_kern = w_np.reshape(w_np.shape[0], w_np.shape[1], w_np.shape[-1])
@@ -123,17 +123,17 @@ def _prepare_qop(qop: QOp, in_qmax: int) -> PreparedQOp:
     zpc = np.int32(qop.in_zp) * np.asarray(qop.wsum, np.int32)
     return PreparedQOp(
         spec=qop.spec,
-        w_q=jnp.asarray(w_np, jnp.int32),
-        w_kern=jnp.asarray(w_kern, jnp.int32),
-        w_scale=jnp.asarray(qop.w_scale, jnp.float32),
-        wsum=jnp.asarray(qop.wsum, jnp.int32),
-        bias_q=jnp.asarray(qop.bias_q, jnp.int32),
-        mult=jnp.asarray(qop.mult, jnp.float32),
-        zcorr=jnp.asarray(qop.in_zp * qop.mult * qop.wsum, jnp.float32),
-        zpc=jnp.asarray(zpc, jnp.int32),
-        z_x=jnp.asarray(qop.in_zp, jnp.int32),
-        mantissa=jnp.asarray(qop.mantissa),
-        shift=jnp.asarray(qop.shift, jnp.int32),
+        w_q=put(jnp.asarray(w_np, jnp.int32)),
+        w_kern=put(jnp.asarray(w_kern, jnp.int32)),
+        w_scale=put(jnp.asarray(qop.w_scale, jnp.float32)),
+        wsum=put(jnp.asarray(qop.wsum, jnp.int32)),
+        bias_q=put(jnp.asarray(qop.bias_q, jnp.int32)),
+        mult=put(jnp.asarray(qop.mult, jnp.float32)),
+        zcorr=put(jnp.asarray(qop.in_zp * qop.mult * qop.wsum, jnp.float32)),
+        zpc=put(jnp.asarray(zpc, jnp.int32)),
+        z_x=put(jnp.asarray(qop.in_zp, jnp.int32)),
+        mantissa=put(jnp.asarray(qop.mantissa)),
+        shift=put(jnp.asarray(qop.shift, jnp.int32)),
         in_scale=qop.in_scale,
         in_zp=qop.in_zp,
         out_scale=qop.out_scale,
@@ -144,29 +144,56 @@ def _prepare_qop(qop: QOp, in_qmax: int) -> PreparedQOp:
     )
 
 
-def prepare_qnet(qnet: QNet, input_bits: int = 8) -> PreparedQNet:
+def _constant_put(mesh):
+    """Constant placement for `prepare_qnet`: default device when mesh is
+    None, else replicated across every replica of the 'data' mesh (so jitted
+    sharded stage traces close over replica-local constants — the
+    multi-replica analogue of DeepDive's per-CU weight buffers)."""
+    if mesh is None:
+        return lambda a: a
+    from repro.dist.sharding import replicate
+    return partial(replicate, mesh=mesh)
+
+
+def replicate_prepared(pq: "PreparedQNet", mesh) -> "PreparedQNet":
+    """Re-place an already-prepared net's constants replicated on `mesh`."""
+    put = _constant_put(mesh)
+    ops = {
+        name: dataclasses.replace(
+            pop, **{f: put(getattr(pop, f)) for f in (
+                "w_q", "w_kern", "w_scale", "wsum", "bias_q", "mult",
+                "zcorr", "zpc", "z_x", "mantissa", "shift")})
+        for name, pop in pq.ops.items()
+    }
+    return dataclasses.replace(pq, ops=ops)
+
+
+def prepare_qnet(qnet: QNet, input_bits: int = 8, mesh=None) -> PreparedQNet:
     """Lower a QNet to its device-resident serving form (one-time cost).
 
     Walks the graph to bound each op's input activations (needed for the
     f32-exactness gate) and uploads every constant once. Idempotent on an
-    already-prepared net.
+    already-prepared net (unless `mesh` is given, which re-places the
+    constants replicated across the mesh's replicas).
     """
     if isinstance(qnet, PreparedQNet):
-        return qnet
+        return qnet if mesh is None else replicate_prepared(qnet, mesh)
+    put = _constant_put(mesh)
     ops: Dict[str, PreparedQOp] = {}
     res_fixed: Dict[str, Tuple[int, int, int, int, int]] = {}
     cur_bits = input_bits
     for block in qnet.spec.blocks:
         for op in block.ops:
             qop = qnet.ops[op.name]
-            ops[op.name] = _prepare_qop(qop, 2**cur_bits - 1)
+            ops[op.name] = _prepare_qop(qop, 2**cur_bits - 1, put)
             cur_bits = op.act_bits
             if block.se is not None and block.se_after == op.name:
                 sq, ex = block.se.squeeze, block.se.excite
                 # squeeze reads the (pooled) dw output; excite reads squeeze
-                ops[sq.name] = _prepare_qop(qnet.ops[sq.name], 2**cur_bits - 1)
+                ops[sq.name] = _prepare_qop(
+                    qnet.ops[sq.name], 2**cur_bits - 1, put)
                 ops[ex.name] = _prepare_qop(
-                    qnet.ops[ex.name], 2**sq.act_bits - 1)
+                    qnet.ops[ex.name], 2**sq.act_bits - 1, put)
         if block.residual:
             last = qnet.ops[block.ops[-1].name]
             first = qnet.ops[block.ops[0].name]
@@ -223,8 +250,14 @@ def _run_qop(x_q: jnp.ndarray, qop, fixed_point: bool) -> jnp.ndarray:
             + qop.in_zp * jnp.asarray(qop.wsum, jnp.float32)
         ) * (qop.in_scale * jnp.asarray(qop.w_scale, jnp.float32))
         y_fp = y_fp + jnp.asarray(qop.bias_q, jnp.float32) * qop.out_scale
-        gate = jnp.clip(y_fp + 3.0, 0.0, 6.0) / 6.0
-        return jnp.round(gate / qop.out_scale).astype(jnp.int32)
+        # requantize with ONE constant multiply: chaining /6.0 with
+        # /out_scale lets XLA reassociate the two divisions under jit
+        # (reciprocal-multiply rewrites), flipping round() on boundary
+        # values — jitted stage executors would drift off the eager
+        # reference by 1 LSB. The f64-folded constant is order-free.
+        requant = jnp.float32(1.0 / (6.0 * qop.out_scale))
+        gate6 = jnp.clip(y_fp + 3.0, 0.0, 6.0)
+        return jnp.round(gate6 * requant).astype(jnp.int32)
 
     if isinstance(qop, PreparedQOp):
         z_x, wsum = qop.z_x, qop.wsum
@@ -380,6 +413,7 @@ __all__ = [
     "PreparedQOp",
     "PreparedQNet",
     "prepare_qnet",
+    "replicate_prepared",
     "run_block",
     "run_blocks",
     "propagate_qparams",

@@ -19,6 +19,8 @@ import threading
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # mesh axes that carry data parallelism, outermost first
@@ -117,6 +119,46 @@ def named_sharding(mesh: Mesh, axes: Sequence[Optional[str]],
     return NamedSharding(mesh, logical_to_spec(axes, mesh, fsdp))
 
 
+# ---------------------------------------------------------------------------
+# serving replication: a 1-D 'data' mesh + placement helpers
+# ---------------------------------------------------------------------------
+
+
+def data_mesh(replicas: Optional[int] = None, devices=None) -> Mesh:
+    """1-D data-parallel mesh over the first `replicas` devices ('data' axis).
+
+    The serving analogue of DeepDive's CU replication: every replica holds
+    the full integer datapath (constants replicated), micro-batches split
+    along 'data'. Defaults to every visible device; on CPU,
+    `XLA_FLAGS=--xla_force_host_platform_device_count=N` overrides the
+    device count before jax initialises."""
+    devs = list(jax.devices()) if devices is None else list(devices)
+    n = len(devs) if replicas is None else int(replicas)
+    if n <= 0 or n > len(devs):
+        raise ValueError(f"replicas={n} with {len(devs)} visible devices")
+    return Mesh(np.asarray(devs[:n]), ("data",))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated placement on `mesh` (the constant/weight sharding)."""
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh: Mesh) -> NamedSharding:
+    """Leading-dim 'data' split (the activation/micro-batch sharding)."""
+    return NamedSharding(mesh, P("data"))
+
+
+def replicate(x, mesh: Optional[Mesh]):
+    """Place one array (or pytree leaf) replicated across `mesh`; identity
+    when `mesh` is None, so callers never branch on distribution. Host
+    arrays go straight to `device_put` — no default-device stopover, so
+    each constant pays exactly one placement."""
+    if mesh is None:
+        return jnp.asarray(x)
+    return jax.device_put(x, replicated(mesh))
+
+
 def _is_axes(x: Any) -> bool:
     """A logical-axes leaf: a (possibly empty) tuple of names / Nones."""
     return isinstance(x, tuple) and all(
@@ -149,4 +191,8 @@ __all__ = [
     "logical_to_spec",
     "named_sharding",
     "tree_shardings",
+    "data_mesh",
+    "replicated",
+    "batch_sharding",
+    "replicate",
 ]

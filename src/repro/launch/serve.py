@@ -1,11 +1,22 @@
 """Serving driver: batched requests through the Engine.
 
+LM serving:
+
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
         --requests 8 [--quant-bits 8]
 
+Vision serving (sharded multi-replica, multi-model):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.serve --vision --replicas 4 \
+        --models mobilenet_v2,efficientnet_compact --requests 32
+
 Serve-time weight quantization (--quant-bits) applies the paper's range-based
 symmetric per-channel scheme to every linear operator — the LM analogue of
-QNet deployment.
+QNet deployment. --vision instead serves calibrated integer QNets through
+the pipelined CU stage executors: --replicas builds a 1-D 'data' mesh and
+shards every micro-batch across it; more than one --models entry routes
+requests through the EDF `MultiModelEngine`.
 """
 from __future__ import annotations
 
@@ -19,9 +30,66 @@ from repro.configs import ARCHS, get_config, reduced_config
 from repro.models.lm import model as M
 from repro.serve.engine import Engine, Request
 
+VISION_ARCHS = ("mobilenet_v2", "efficientnet_compact")
+
+
+def _vision_qnet(arch: str, hw: int, seed: int = 0):
+    from repro.models import efficientnet as effn, layers, mobilenet_v2 as mnv2
+
+    if arch == "mobilenet_v2":
+        net = mnv2.build(alpha=0.35, input_hw=hw, num_classes=1000)
+    elif arch == "efficientnet_compact":
+        net = effn.build_compact(input_hw=hw, num_classes=1000)
+    else:
+        raise ValueError(f"unknown vision arch {arch!r} (pick from {VISION_ARCHS})")
+    return layers.make_calibrated_qnet(net, seed=seed)
+
+
+def vision_main(args) -> None:
+    from repro.dist.sharding import data_mesh
+    from repro.serve.vision import MultiModelEngine, VisionEngine
+
+    mesh = data_mesh(args.replicas) if args.replicas > 1 else None
+    # --batch bounds the largest micro-batch; the engine rounds buckets up
+    # to replica multiples itself
+    buckets = tuple(sorted(
+        {b for b in (1, 2, 4) if b < args.batch} | {args.batch}))
+    models = [m.strip() for m in args.models.split(",") if m.strip()]
+    engines = {
+        m: VisionEngine(_vision_qnet(m, args.hw, args.seed), mesh=mesh,
+                        buckets=buckets)
+        for m in models
+    }
+    router = MultiModelEngine(engines)
+    router.warmup()
+    rng = np.random.default_rng(args.seed)
+    now = time.perf_counter()
+    for i in range(args.requests):
+        img = rng.uniform(-1, 1, (args.hw, args.hw, 3)).astype(np.float32)
+        deadline = now + 5.0 if i % 3 == 0 else None
+        router.submit(models[i % len(models)], img, deadline_s=deadline)
+    results = router.run()
+    n_ok = sum(1 for r in results.values() if r.status == "ok")
+    print(f"[serve-vision] {n_ok}/{len(results)} ok over "
+          f"{len(models)} model(s), {args.replicas} replica(s)")
+    for m, st in sorted(router.stats().items()):
+        print(f"[serve-vision] {m}: fps={st.fps:.1f} "
+              f"p95={st.latency_p95_s*1e3:.1f}ms "
+              f"micro_batches={st.micro_batches} replicas={st.replicas}")
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--vision", action="store_true",
+                    help="serve integer vision QNets instead of an LM")
+    ap.add_argument("--models", default="mobilenet_v2",
+                    help="comma-separated vision model list "
+                         f"(from {', '.join(VISION_ARCHS)})")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel replicas (vision; needs devices)")
+    ap.add_argument("--hw", type=int, default=48, help="vision input H=W")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="largest vision micro-batch bucket")
     ap.add_argument("--arch", choices=sorted(ARCHS), default="llama3.2-1b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
@@ -32,6 +100,9 @@ def main(argv=None):
     ap.add_argument("--quant-bits", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.vision:
+        return vision_main(args)
 
     import dataclasses
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)

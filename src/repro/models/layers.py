@@ -173,6 +173,32 @@ def forward(
     return y, acts
 
 
+def make_calibrated_qnet(net: G.NetSpec, *, bits: int = 4, seed: int = 0,
+                         n_cal: int = 2):
+    """The standard demo/test deployment recipe in one call: random init
+    (PRNGKey(seed)) -> calibrate activations on `n_cal` fixed random
+    batches in [-1, 1] -> quantize to an integer QNet.
+
+    Single source of truth for every driver/example/benchmark/test that
+    needs a calibrated QNet from scratch — the PRNG keys and batch shapes
+    are part of the contract (tests/golden/ fixtures are generated through
+    this exact sequence)."""
+    from repro.core.calibrate import calibrate
+    from repro.core.qnet import quantize_net
+
+    params = init_params(jax.random.PRNGKey(seed), net)
+
+    def apply_fn(p, b):
+        return forward(p, b, net, capture=True)[1]
+
+    hw = net.input_hw
+    cal = [jax.random.uniform(jax.random.PRNGKey(i),
+                              (2, hw, hw, net.input_ch), minval=-1, maxval=1)
+           for i in range(n_cal)]
+    obs = calibrate(apply_fn, params, cal, QuantConfig(bits, False, None))
+    return quantize_net(params, net, obs)
+
+
 __all__ = [
     "conv2d",
     "depthwise_conv2d",
@@ -183,4 +209,5 @@ __all__ = [
     "global_avg_pool",
     "init_params",
     "forward",
+    "make_calibrated_qnet",
 ]

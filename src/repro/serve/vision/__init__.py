@@ -13,11 +13,16 @@ Layers, bottom-up:
   * `engine`   — the continuous-batching front end: request queue, dynamic
                  batch former with shape/bucket admission, per-request
                  deadlines, and throughput/latency/energy-proxy stats
-                 (the Table 6 FPS / FPS-per-Watt view).
+                 (the Table 6 FPS / FPS-per-Watt view). `mesh=` shards
+                 micro-batches data-parallel across a `dist.sharding`
+                 'data' mesh (constants replicated, bit-exact); the
+                 `MultiModelEngine` router serves several models through
+                 per-model pipelines under one EDF dispatch policy.
 """
 from repro.serve.vision.engine import (
     AdmissionError,
     EngineStats,
+    MultiModelEngine,
     RequestResult,
     VisionEngine,
     VisionRequest,
@@ -29,6 +34,7 @@ __all__ = [
     "AdmissionError",
     "CompiledStage",
     "EngineStats",
+    "MultiModelEngine",
     "PipelinedExecutor",
     "RequestResult",
     "VisionEngine",

@@ -11,6 +11,19 @@ images must match the compiled network's input signature exactly (HxWxC),
 and the queue is bounded. Expired deadlines are dropped at batch-forming
 time — the accelerator never burns CU invocations on work nobody waits for.
 
+Two scaling axes beyond the single-device engine:
+
+  * **replication** (`mesh=`): a 1-D 'data' mesh from `dist.sharding`
+    replicates the whole integer datapath — constants on every replica,
+    micro-batch rows sharded along 'data' through every stage executor
+    (`jax.jit` with `NamedSharding` in/out). The multi-device analogue of
+    DeepDive's parallel channel/filter CU replication; results stay
+    bit-exact because every image's arithmetic is replica-local.
+  * **multi-model** (`MultiModelEngine`): requests tagged by model are
+    routed to per-model stage pipelines sharing the device(s); micro-batch
+    dispatch order across models follows the same EDF deadline policy the
+    single-model batch former uses.
+
 `EngineStats` reports the paper's Table 6 serving quantities: FPS, latency
 percentiles, per-stage invocation counts, and an energy proxy (J/image from
 the MAC count at an assumed pJ/MAC for the integer datapath) giving
@@ -22,7 +35,7 @@ import dataclasses
 import itertools
 import math
 import time
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +44,7 @@ import numpy as np
 from repro.core import compiler as CC
 from repro.core import graph as G
 from repro.core.qnet import QNet
+from repro.dist.sharding import batch_sharding
 from repro.serve.vision.pipeline import PipelinedExecutor
 from repro.serve.vision.stages import CompiledStage, compile_stages
 
@@ -57,6 +71,17 @@ def _energy_j_per_image(net: G.NetSpec) -> float:
             pj += (block.se.squeeze.macs(1, 1) + block.se.excite.macs(1, 1)
                    ) * _PJ_PER_MAC.get(block.se.bits, 0.2)
     return pj * 1e-12
+
+
+def _percentile(sorted_lat: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile over pre-sorted latencies.
+
+    NaN-safe: with zero completions (every request expired before a batch
+    formed) there is no latency distribution — report NaN rather than a
+    misleading 0.0 or a divide-by-zero downstream."""
+    if not sorted_lat:
+        return float("nan")
+    return sorted_lat[max(0, math.ceil(p * len(sorted_lat)) - 1)]
 
 
 class AdmissionError(ValueError):
@@ -94,13 +119,22 @@ class EngineStats:
     macs_per_image: int
     energy_j_per_image_proxy: float
     fps_per_watt_proxy: float
+    replicas: int = 1  # mesh 'data' extent the engine shards over
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
 
 
 class VisionEngine:
-    """Serve a calibrated QNet through the pipelined CU stage executors."""
+    """Serve a calibrated QNet through the pipelined CU stage executors.
+
+    `mesh`: a 1-D 'data' mesh (see `dist.sharding.data_mesh`) shards every
+    micro-batch data-parallel across its replicas; each requested bucket is
+    rounded up to the next replica multiple (rows are bucket-padded anyway,
+    so every batch splits evenly — no caller has to special-case counts).
+    `clock`: injectable time source (returns seconds, perf_counter-like) —
+    deadlines, latencies, and wall time all read it; tests pass a fake.
+    """
 
     def __init__(
         self,
@@ -115,6 +149,8 @@ class VisionEngine:
         prepare: bool = True,
         donate: str = "auto",
         interpret: Optional[bool] = None,
+        mesh=None,
+        clock: Optional[Callable[[], float]] = None,
         max_queue: int = 4096,
     ):
         if not buckets or any(b <= 0 for b in buckets):
@@ -122,12 +158,24 @@ class VisionEngine:
         self.qnet = qnet
         self.plan = plan if plan is not None else CC.compile_net(qnet.spec)
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self.mesh = mesh
+        self.replicas = 1
+        self._batch_sharding = None
+        if mesh is not None:
+            self.replicas = int(dict(mesh.shape).get("data", 1))
+            # every bucket rounds up to the next replica multiple: batches
+            # are bucket-padded regardless, so each shard gets equal rows
+            self.buckets = tuple(sorted(
+                {-(-b // self.replicas) * self.replicas
+                 for b in self.buckets}))
+            self._batch_sharding = batch_sharding(mesh)
+        self._clock = time.perf_counter if clock is None else clock
         self.max_queue = max_queue
         self.stages: List[CompiledStage] = compile_stages(
             qnet, self.plan, fixed_point=fixed_point, input_bits=input_bits,
             body_fast_path=body_fast_path, op_kernels=op_kernels,
-            prepare=prepare, donate=donate, interpret=interpret)
-        self.pipe = PipelinedExecutor(self.stages)
+            prepare=prepare, donate=donate, interpret=interpret, mesh=mesh)
+        self.pipe = PipelinedExecutor(self.stages, clock=self._clock)
         net = qnet.spec
         self.input_shape = (net.input_hw, net.input_hw, net.input_ch)
         self._queue: List[VisionRequest] = []
@@ -166,7 +214,7 @@ class VisionEngine:
         rid = next(self._rid)
         self._queue.append(VisionRequest(
             rid=rid, image=image, deadline_s=deadline_s,
-            arrival_s=time.perf_counter() if now is None else now))
+            arrival_s=self._clock() if now is None else now))
         return rid
 
     def pending(self) -> int:
@@ -183,6 +231,13 @@ class VisionEngine:
                 return b
         return self.buckets[-1]
 
+    def _place(self, x: np.ndarray) -> jax.Array:
+        """Host micro-batch -> device: single-device upload, or sharded
+        along the mesh 'data' axis (each replica receives only its rows)."""
+        if self._batch_sharding is None:
+            return jnp.asarray(x)
+        return jax.device_put(x, self._batch_sharding)
+
     def _form_batches(self) -> Iterator[Tuple[List[VisionRequest], jax.Array]]:
         """Drain the queue into bucket-padded micro-batches, EDF-ordered.
 
@@ -196,7 +251,7 @@ class VisionEngine:
         pending, self._queue = self._queue, []
         head = 0
         while head < len(pending):
-            now = time.perf_counter()
+            now = self._clock()
             live: List[VisionRequest] = []
             while head < len(pending) and len(live) < self.buckets[-1]:
                 req = pending[head]
@@ -216,33 +271,41 @@ class VisionEngine:
             self._micro_batches += 1
             self._rows += bucket
             self._pad_rows += bucket - len(live)
-            yield live, jnp.asarray(x)
+            yield live, self._place(x)
 
     # ------------------------------------------------------------------
     # serving
     # ------------------------------------------------------------------
 
+    def _record_batch(self, reqs: List[VisionRequest], y: jax.Array,
+                      done: float) -> None:
+        """Un-pad a finished micro-batch into per-request results."""
+        logits = np.asarray(y)
+        for i, req in enumerate(reqs):
+            self._results[req.rid] = RequestResult(
+                req.rid, "ok", logits[i], done - req.arrival_s)
+            self._latencies.append(done - req.arrival_s)
+            self._n_ok += 1
+
+    def _collect_results(self) -> Dict[int, RequestResult]:
+        results, self._results = self._results, {}
+        return results
+
     def run(self) -> Dict[int, RequestResult]:
         """Drain the queue through the pipelined CU stages; return results
         (keyed by request id) for everything completed by this call."""
-        t0 = time.perf_counter()
+        t0 = self._clock()
         for reqs, y in self.pipe.stream(self._form_batches()):
-            done = time.perf_counter()
-            logits = np.asarray(y)
-            for i, req in enumerate(reqs):
-                self._results[req.rid] = RequestResult(
-                    req.rid, "ok", logits[i], done - req.arrival_s)
-                self._latencies.append(done - req.arrival_s)
-                self._n_ok += 1
-        self._wall_s += time.perf_counter() - t0
-        results, self._results = self._results, {}
-        return results
+            self._record_batch(reqs, y, self._clock())
+        self._wall_s += self._clock() - t0
+        return self._collect_results()
 
     def warmup(self) -> None:
         """Pre-trace every stage at every bucket size (avoids paying XLA
         tracing on the serving path)."""
         for b in self.buckets:
-            self.pipe.warmup(jnp.zeros((b, *self.input_shape), jnp.float32))
+            self.pipe.warmup(
+                self._place(np.zeros((b, *self.input_shape), np.float32)))
 
     # ------------------------------------------------------------------
     # stats
@@ -250,12 +313,6 @@ class VisionEngine:
 
     def stats(self) -> EngineStats:
         lat = sorted(self._latencies)
-
-        def pct(p: float) -> float:
-            if not lat:
-                return 0.0
-            return lat[max(0, math.ceil(p * len(lat)) - 1)]  # nearest-rank
-
         macs = self.qnet.spec.count_macs()
         energy_j = _energy_j_per_image(self.qnet.spec)
         fps = self._n_ok / self._wall_s if self._wall_s > 0 else 0.0
@@ -268,8 +325,8 @@ class VisionEngine:
             n_expired=self._n_expired,
             wall_s=self._wall_s,
             fps=fps,
-            latency_p50_s=pct(0.50),
-            latency_p95_s=pct(0.95),
+            latency_p50_s=_percentile(lat, 0.50),
+            latency_p95_s=_percentile(lat, 0.95),
             micro_batches=self._micro_batches,
             pad_fraction=(self._pad_rows / self._rows) if self._rows else 0.0,
             stage_invocations={
@@ -278,7 +335,147 @@ class VisionEngine:
             macs_per_image=macs,
             energy_j_per_image_proxy=energy_j,
             fps_per_watt_proxy=(1.0 / energy_j) if energy_j > 0 else 0.0,
+            replicas=self.replicas,
         )
+
+
+class MultiModelEngine:
+    """EDF router over per-model `VisionEngine`s sharing the device (mesh).
+
+    Requests are tagged by model name at submit time and drain through that
+    model's own stage pipeline. One `run()` drains every model's queue:
+    each scheduler round ticks every pipeline once (so no model starves),
+    and the order models dispatch within a round is earliest-deadline-first
+    over each model's next pending micro-batch — the model holding the
+    tightest deadline enqueues its CU invocations into the shared device
+    stream first, extending the single-model EDF policy across models.
+
+    `dispatch_log` records (model, live_rows) per dispatched micro-batch in
+    dispatch order for the LAST drain (reset at each run()) — the
+    scheduling trace the fairness tests assert on.
+
+    One time source rules the fleet: an explicit `clock` is propagated down
+    to every engine (wall time, latencies, and deadline expiry must never
+    mix clocks); with `clock=None` the router adopts the engines' shared
+    clock and refuses construction if they disagree.
+    """
+
+    def __init__(self, engines: Dict[str, VisionEngine],
+                 clock: Optional[Callable[[], float]] = None):
+        if not engines:
+            raise ValueError("need at least one model engine")
+        self.engines = dict(engines)
+        if clock is None:
+            clocks = {id(e._clock) for e in self.engines.values()}
+            if len(clocks) != 1:
+                raise ValueError(
+                    "engines hold different clocks — pass an explicit "
+                    "clock= to unify the router's time source")
+            self._clock = next(iter(self.engines.values()))._clock
+        else:
+            for eng in self.engines.values():
+                # rebinding the clock over prior activity would mix time
+                # domains: arrivals/deadlines in flight, or wall/expiry
+                # counters already accrued under the old clock
+                if (eng.pending() or eng._latencies or eng._results
+                        or eng._wall_s or eng._n_ok or eng._n_expired
+                        or eng.pipe.busy):
+                    raise ValueError(
+                        "cannot rebind the clock of an engine with pending "
+                        "requests or recorded activity — construct the "
+                        "router before serving")
+            self._clock = clock
+            for eng in self.engines.values():
+                eng._clock = clock
+                eng.pipe._clock = clock
+        self.dispatch_log: List[Tuple[str, int]] = []
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, model: str, image: np.ndarray, *,
+               deadline_s: Optional[float] = None,
+               now: Optional[float] = None) -> Tuple[str, int]:
+        """Admit one image for `model`; returns the (model, rid) handle."""
+        eng = self.engines.get(model)
+        if eng is None:
+            raise AdmissionError(
+                f"unknown model {model!r}; serving {sorted(self.engines)}")
+        return model, eng.submit(image, deadline_s=deadline_s, now=now)
+
+    def pending(self) -> Dict[str, int]:
+        return {m: e.pending() for m, e in self.engines.items()}
+
+    def warmup(self) -> None:
+        for eng in self.engines.values():
+            eng.warmup()
+
+    # -- scheduling --------------------------------------------------------
+
+    @staticmethod
+    def _edf_key(batch) -> float:
+        """Earliest live deadline in a formed micro-batch (inf if none)."""
+        if batch is None:
+            return float("inf")
+        deadlines = [r.deadline_s for r in batch[0] if r.deadline_s is not None]
+        return min(deadlines) if deadlines else float("inf")
+
+    def run(self) -> Dict[Tuple[str, int], RequestResult]:
+        """Drain every model's queue; results keyed by (model, rid)."""
+        t0 = self._clock()
+        self.dispatch_log = []  # trace of THIS drain only (bounded)
+        formers: Dict[str, Iterator] = {}
+        peeked: Dict[str, Optional[Tuple]] = {}
+        for m, eng in self.engines.items():
+            if eng.pending():
+                formers[m] = eng._form_batches()
+                peeked[m] = next(formers[m], None)
+        active = set(formers)
+
+        def live_models() -> List[str]:
+            return [m for m, e in self.engines.items()
+                    if peeked.get(m) is not None or e.pipe.busy]
+
+        try:
+            while True:
+                models = live_models()
+                if not models:
+                    break
+                # EDF across models: tightest next-batch deadline
+                # dispatches first this round; name-ordered tie-break keeps
+                # it deterministic (and round-robin-fair for deadline-less
+                # load).
+                for m in sorted(models,
+                                key=lambda m: (self._edf_key(peeked.get(m)), m)):
+                    eng = self.engines[m]
+                    finished = eng.pipe.advance()
+                    batch = peeked.get(m)
+                    if batch is not None:
+                        eng.pipe.inject(batch)
+                        self.dispatch_log.append((m, len(batch[0])))
+                        peeked[m] = next(formers[m], None)
+                    if finished is not None:
+                        eng.pipe.harvest(finished)
+                        eng._record_batch(
+                            finished[0], finished[1], eng._clock())
+        finally:
+            # mirror stream()'s abandoned-drain contract for the tick-level
+            # drive: an escaping exception must not leave stale in-flight
+            # batches to replay into a later run()'s results
+            for m in self.engines:
+                self.engines[m].pipe.reset()
+        wall = self._clock() - t0
+        results: Dict[Tuple[str, int], RequestResult] = {}
+        for m, eng in self.engines.items():
+            if m in active:
+                # the drain shared the device, so the full drain wall is
+                # each participating model's serving window
+                eng._wall_s += wall
+            for rid, res in eng._collect_results().items():
+                results[(m, rid)] = res
+        return results
+
+    def stats(self) -> Dict[str, EngineStats]:
+        return {m: e.stats() for m, e in self.engines.items()}
 
 
 __all__ = [
@@ -287,4 +484,5 @@ __all__ = [
     "RequestResult",
     "EngineStats",
     "VisionEngine",
+    "MultiModelEngine",
 ]

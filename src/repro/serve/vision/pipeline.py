@@ -25,16 +25,67 @@ from repro.serve.vision.stages import CompiledStage
 
 
 class PipelinedExecutor:
-    def __init__(self, stages: List[CompiledStage]):
+    def __init__(self, stages: List[CompiledStage], clock=None):
         if not stages:
             raise ValueError("need at least one stage")
         self.stages = stages
+        self._slots: List[Optional[Tuple[Any, jax.Array]]] = \
+            [None] * len(stages)
+        # harvest_wait_s reads the same injectable clock as the engine —
+        # one time source for every stat (see VisionEngine's clock)
+        self._clock = time.perf_counter if clock is None else clock
+        self._streaming = False
         # wall time spent blocked on finished outputs (pipeline stall proxy)
         self.harvest_wait_s = 0.0
 
     @property
     def depth(self) -> int:
         return len(self.stages)
+
+    @property
+    def busy(self) -> bool:
+        """True while any micro-batch is still in flight."""
+        return any(s is not None for s in self._slots)
+
+    # -- tick-level API (used directly by the multi-model router) ----------
+
+    def advance(self) -> Optional[Tuple[Any, jax.Array]]:
+        """One scheduler tick: every occupied slot advances exactly one
+        stage (back-to-front, all dispatches async). Frees the Head slot.
+        Returns the (tag, y) that left the last stage this tick, if any —
+        NOT yet blocked on; callers harvest via `harvest`."""
+        finished = None
+        for i in reversed(range(self.depth)):
+            if self._slots[i] is None:
+                continue
+            tag, x = self._slots[i]
+            self._slots[i] = None
+            y = self.stages[i](x)  # async dispatch — returns immediately
+            if i + 1 < self.depth:
+                self._slots[i + 1] = (tag, y)
+            else:
+                finished = (tag, y)
+        return finished
+
+    def inject(self, batch: Tuple[Any, jax.Array]) -> None:
+        """Occupy the Head slot with the next micro-batch."""
+        if self._slots[0] is not None:
+            raise RuntimeError("Head slot occupied — advance() first")
+        self._slots[0] = batch
+
+    def reset(self) -> None:
+        """Drop every in-flight micro-batch (abandoned drain): a later
+        stream()/run() must never replay stale tags into its results."""
+        self._slots = [None] * self.depth
+
+    def harvest(self, finished: Tuple[Any, jax.Array]) -> Tuple[Any, jax.Array]:
+        """Block until a finished output is ready (the only sync point)."""
+        t0 = self._clock()
+        jax.block_until_ready(finished[1])
+        self.harvest_wait_s += self._clock() - t0
+        return finished
+
+    # -- streaming driver ---------------------------------------------------
 
     def stream(
         self, batches: Iterable[Tuple[Any, jax.Array]],
@@ -43,34 +94,31 @@ class PipelinedExecutor:
         (tag, y) in completion order (== submission order: the pipeline
         is in-order). Outputs are harvested ready — iterating does not
         add synchronisation beyond the final stage itself."""
+        if self._streaming or self.busy:
+            raise RuntimeError(
+                "PipelinedExecutor is already draining — one stream() (or "
+                "tick-level drive) at a time")
+        self._streaming = True
         it = iter(batches)
-        slots: List[Optional[Tuple[Any, jax.Array]]] = [None] * self.depth
         exhausted = False
-        while True:
-            finished = None
-            # back-to-front: each occupied slot advances exactly one stage
-            for i in reversed(range(self.depth)):
-                if slots[i] is None:
-                    continue
-                tag, x = slots[i]
-                slots[i] = None
-                y = self.stages[i](x)  # async dispatch — returns immediately
-                if i + 1 < self.depth:
-                    slots[i + 1] = (tag, y)
-                else:
-                    finished = (tag, y)
-            if not exhausted:
-                try:
-                    slots[0] = next(it)
-                except StopIteration:
-                    exhausted = True
-            if finished is not None:
-                t0 = time.perf_counter()
-                jax.block_until_ready(finished[1])
-                self.harvest_wait_s += time.perf_counter() - t0
-                yield finished
-            if exhausted and all(s is None for s in slots):
-                return
+        try:
+            while True:
+                finished = self.advance()
+                if not exhausted:
+                    try:
+                        self.inject(next(it))
+                    except StopIteration:
+                        exhausted = True
+                if finished is not None:
+                    yield self.harvest(finished)
+                if exhausted and not self.busy:
+                    return
+        finally:
+            # abandoned mid-drain (caller broke out / exception): slots
+            # used to be local per call; instance slots must be cleared to
+            # keep that contract
+            self._streaming = False
+            self.reset()
 
     def run(self, batches: Iterable[jax.Array]) -> List[jax.Array]:
         """Convenience: pipeline a list of micro-batches, return outputs."""

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compiler as CC
+from repro.dist.sharding import batch_sharding
 from repro.core import cu
 from repro.core import graph as G
 from repro.core.qnet import QNet
@@ -67,7 +68,7 @@ class CompiledStage:
     def __init__(self, spec: StageSpec, qnet: Union[QNet, cu.PreparedQNet],
                  *, fixed_point: bool, input_bits: int, fast_path: bool,
                  op_kernels: bool, interpret: Optional[bool],
-                 donate: bool = False):
+                 donate: bool = False, mesh=None):
         self.spec = spec
         self._qnet = qnet
         self._fixed_point = fixed_point
@@ -75,10 +76,19 @@ class CompiledStage:
         self._fast_path = fast_path and spec.cu == CC.BODY
         self._op_kernels = op_kernels
         self._interpret = interpret
+        self.mesh = mesh
         self.invocations = 0  # CU invocations dispatched (micro-batches)
         self.traces = 0  # jit cache misses (should stay == #buckets)
-        self._fn = jax.jit(
-            self._trace, donate_argnums=(0,) if donate else ())
+        jit_kwargs = dict(donate_argnums=(0,) if donate else ())
+        if mesh is not None:
+            # data-parallel replication: micro-batch rows split along the
+            # mesh 'data' axis in AND out, so an N-replica mesh runs N
+            # shards of every CU invocation concurrently. Constants are
+            # replicated (prepare_qnet(mesh=...)), activations stay sharded
+            # across the whole executor chain — no resharding between CUs.
+            ns = batch_sharding(mesh)
+            jit_kwargs.update(in_shardings=ns, out_shardings=ns)
+        self._fn = jax.jit(self._trace, **jit_kwargs)
 
     def _trace(self, x: jax.Array) -> jax.Array:
         self.traces += 1
@@ -124,6 +134,7 @@ def compile_stages(
     prepare: bool = True,
     donate: str = "auto",  # "auto" | "on" | "off"
     interpret: Optional[bool] = None,
+    mesh=None,
 ) -> List[CompiledStage]:
     """Lower a CUPlan into the ordered list of jitted stage executors.
 
@@ -140,7 +151,15 @@ def compile_stages(
     `donate`: donate each non-Head stage's input buffer to XLA ("auto" ==
     only on accelerator backends; the CPU runtime cannot reuse donations
     and would warn).
+
+    `mesh`: a 1-D 'data' mesh (`dist.sharding.data_mesh`) replicates the
+    whole executor chain: constants replicated on every device, micro-batch
+    rows sharded along 'data' in and out of every stage. Batch sizes must
+    divide by the replica count. `None` (default) is the single-device
+    configuration, byte-identical to previous behavior.
     """
+    if mesh is not None and "data" not in mesh.axis_names:
+        raise ValueError(f"mesh needs a 'data' axis, got {mesh.axis_names}")
     if plan is None:
         plan = CC.compile_net(qnet.spec)
     fast = _resolve(body_fast_path, "body_fast_path")
@@ -160,7 +179,9 @@ def compile_stages(
     donate_ok = (jax.default_backend() != "cpu") if donate == "auto" \
         else donate == "on"
     if prepare:
-        qnet = cu.prepare_qnet(qnet, input_bits=input_bits)
+        qnet = cu.prepare_qnet(qnet, input_bits=input_bits, mesh=mesh)
+    elif mesh is not None and isinstance(qnet, cu.PreparedQNet):
+        qnet = cu.replicate_prepared(qnet, mesh)
 
     sigs = plan.stage_signatures()
     stages: List[CompiledStage] = []
@@ -181,7 +202,7 @@ def compile_stages(
         stages.append(CompiledStage(
             spec, qnet, fixed_point=fixed_point, input_bits=input_bits,
             fast_path=fast, op_kernels=kerns, interpret=interpret,
-            donate=donate_ok and i > 0))
+            donate=donate_ok and i > 0, mesh=mesh))
         s, z = out_s, out_z
     return stages
 

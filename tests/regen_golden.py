@@ -1,0 +1,100 @@
+"""Regenerate the frozen golden conformance fixtures under tests/golden/.
+
+    PYTHONPATH=src python -m tests.regen_golden
+
+Each case freezes BOTH the quantized network and the golden vectors:
+
+  * ``<model>_act<bits>.qnet`` — the serialized `QNet` (weights + requant
+    constants). Freezing the deployment artifact itself means float
+    calibration drift across machines/BLAS builds can never silently move
+    the fixture; the conformance suite tests the *integer datapath*, which
+    must be bit-exact everywhere.
+  * ``<model>_act<bits>.npz`` — the input batch (float32), every CU-stage
+    output activation (uint8 — the integer datapath never leaves
+    [0, 2^act_bits - 1]), and the final dequantized float32 logits, all
+    produced by the reference interpreter `cu.run_blocks`.
+
+Cases: MobileNetV2 (alpha=0.35) and the compact EfficientNet at act_bits
+{4, 8}, input 32x32, 10 classes, batch 2 — small enough to check in, deep
+enough to cover every op kind (CONV/DW/PW/DENSE, residual, SE, avgpool).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compiler as CC, cu, qnet as Q
+from repro.models import efficientnet as effn, mobilenet_v2 as mnv2
+from repro.models.layers import make_calibrated_qnet
+
+HW = 32
+BATCH = 2
+NUM_CLASSES = 10
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+CASES = tuple((model, bits)
+              for model in ("mobilenet_v2", "efficientnet_compact")
+              for bits in (4, 8))
+
+
+def build_net(model: str, bits: int):
+    if model == "mobilenet_v2":
+        return mnv2.build(alpha=0.35, input_hw=HW, bits=bits,
+                          num_classes=NUM_CLASSES)
+    if model == "efficientnet_compact":
+        return effn.build_compact(input_hw=HW, bits=bits,
+                                  num_classes=NUM_CLASSES)
+    raise ValueError(model)
+
+
+def make_qnet(net, bits: int, seed: int = 0):
+    return make_calibrated_qnet(net, bits=bits, seed=seed)
+
+
+def golden_vectors(qnet, x: np.ndarray):
+    """(stage_cus, per-stage int activations, float logits) from the
+    reference `cu.run_blocks` route — the semantic ground truth."""
+    plan = CC.compile_net(qnet.spec)
+    sigs = plan.stage_signatures()
+    s, z = cu.input_qparams(qnet)
+    y = cu.quantize_input(jnp.asarray(x), s, z, 8)
+    acts, cus = [], []
+    for sig in sigs:
+        y, s, z = cu.run_blocks(y, sig.blocks, qnet, s, z)
+        acts.append(np.asarray(y))
+        cus.append(sig.cu)
+    logits = (acts[-1].astype(np.float32) + np.float32(z)) * np.float32(s)
+    return cus, acts, logits
+
+
+def fixture_paths(model: str, bits: int):
+    base = os.path.join(GOLDEN_DIR, f"{model}_act{bits}")
+    return base + ".qnet", base + ".npz"
+
+
+def main() -> None:
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    rng_img = jax.random.PRNGKey(7)
+    x = np.asarray(jax.random.uniform(
+        rng_img, (BATCH, HW, HW, 3), minval=-1, maxval=1), np.float32)
+    for model, bits in CASES:
+        net = build_net(model, bits)
+        qnet = make_qnet(net, bits)
+        cus, acts, logits = golden_vectors(qnet, x)
+        qnet_path, npz_path = fixture_paths(model, bits)
+        Q.save_qnet(qnet, qnet_path)
+        arrays = {"input": x, "logits": logits}
+        for i, (cu_name, act) in enumerate(zip(cus, acts)):
+            assert act.min() >= 0 and act.max() <= 255, (model, bits, cu_name)
+            arrays[f"stage{i}_{cu_name}"] = act.astype(np.uint8)
+        np.savez_compressed(npz_path, **arrays)
+        sizes = (os.path.getsize(qnet_path) + os.path.getsize(npz_path)) / 1024
+        print(f"[golden] {model} act{bits}: {len(cus)} stages, "
+              f"{sizes:.0f} KiB -> {os.path.relpath(npz_path)}")
+
+
+if __name__ == "__main__":
+    main()

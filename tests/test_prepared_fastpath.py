@@ -1,13 +1,18 @@
 """PreparedQNet integer fast path: bit-exactness, zero per-call host
-uploads, trace-count stability, integer residual, and the quantized_linear
-block-size regressions."""
+uploads, trace-count stability, integer residual, differential property
+fuzz over random NetSpecs, and the quantized_linear block-size
+regressions."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import cu, qnet as Q
-from repro.core.calibrate import calibrate
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import cu, graph as G
 from repro.core.integer_ops import (
     f32_accum_exact,
     int_conv2d,
@@ -15,7 +20,6 @@ from repro.core.integer_ops import (
     int_residual_add,
     residual_fixed_consts,
 )
-from repro.core.quant import QuantConfig
 from repro.models import efficientnet as effn, layers, mobilenet_v2 as mnv2
 from repro.serve.vision import VisionEngine
 
@@ -23,15 +27,7 @@ HW = 32
 
 
 def _make_qnet(net, seed=0):
-    params = layers.init_params(jax.random.PRNGKey(seed), net)
-
-    def apply_fn(p, b):
-        return layers.forward(p, b, net, capture=True)[1]
-
-    cal = [jax.random.uniform(jax.random.PRNGKey(i), (2, HW, HW, 3),
-                              minval=-1, maxval=1) for i in range(2)]
-    obs = calibrate(apply_fn, params, cal, QuantConfig(4, False, None))
-    return Q.quantize_net(params, net, obs)
+    return layers.make_calibrated_qnet(net, seed=seed)
 
 
 @pytest.fixture(scope="module")
@@ -182,6 +178,79 @@ def test_op_kernels_flag_validation(mnv2_qnet):
     with pytest.raises(ValueError, match="fixed_point"):
         VisionEngine(mnv2_qnet, buckets=(1,), op_kernels="on",
                      fixed_point=True)
+
+
+# ---------------------------------------------------------------------------
+# differential property fuzz: random NetSpecs, fast path vs reference
+# ---------------------------------------------------------------------------
+
+
+def _rand_netspec(stem_ch: int, n_body: int, expand: int, kernel: int,
+                  stride: int, bits: int, body_ch: int) -> G.NetSpec:
+    """A small compile_net-compatible net: CONV stem -> IRB-ish body blocks
+    (mixed DW kernel/stride, optional expansion, residual where shapes
+    allow) -> PW+avgpool tail -> DENSE classifier."""
+    blocks = [G.BlockSpec("stem", (
+        G.OpSpec("stem/conv", G.CONV, 3, stem_ch, 3, 2, G.RELU6, 8, bits),))]
+    in_ch = stem_ch
+    for i in range(n_body + 1):  # +1: first IRB completes the Head
+        name = f"irb{i}"
+        ops = []
+        hidden = in_ch * expand
+        if expand != 1:
+            ops.append(G.OpSpec(f"{name}/expand", G.PW, in_ch, hidden, 1, 1,
+                                G.RELU6, bits, bits))
+        # stride/kernel only vary on the first body block so later blocks
+        # keep stride 1 and can exercise the residual skip-line
+        s = stride if i == 0 else 1
+        ops.append(G.OpSpec(f"{name}/dw", G.DW, hidden, hidden, kernel, s,
+                            G.RELU6, bits, bits))
+        ops.append(G.OpSpec(f"{name}/project", G.PW, hidden, body_ch, 1, 1,
+                            G.NONE, bits, bits))
+        residual = s == 1 and in_ch == body_ch
+        blocks.append(G.BlockSpec(name, tuple(ops), residual=residual))
+        in_ch = body_ch
+    blocks.append(G.BlockSpec("tail", (
+        G.OpSpec("tail/pw", G.PW, in_ch, 2 * body_ch, 1, 1, G.RELU6, bits,
+                 bits),), avgpool=True))
+    blocks.append(G.BlockSpec("classifier", (
+        G.OpSpec("classifier/fc", G.DENSE, 2 * body_ch, 7, 1, 1, G.NONE,
+                 bits, bits),)))
+    return G.NetSpec(name="fuzz", blocks=tuple(blocks), input_hw=16,
+                     num_classes=7)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    stem_ch=st.sampled_from([8, 16]),
+    n_body=st.integers(1, 2),
+    expand=st.sampled_from([1, 2]),
+    kernel=st.sampled_from([3, 5]),
+    stride=st.sampled_from([1, 2]),
+    bits=st.sampled_from([4, 8]),
+    body_ch=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_fuzz_fast_path_matches_reference(stem_ch, n_body, expand, kernel,
+                                          stride, bits, body_ch, seed):
+    """Differential property: for random small NetSpecs (mixed DW kernel /
+    stride / 5x5 / residual / act bits), the PreparedQNet fast path — eager
+    AND jitted, float AND fixed-point requant — is bit-exact with the
+    reference interpreter. Catches per-op formulation drift (e.g. f32
+    reassociation under jit) that the two fixed model topologies miss."""
+    net = _rand_netspec(stem_ch, n_body, expand, kernel, stride, bits,
+                        body_ch)
+    qnet = _make_qnet(net, seed=seed % 7)
+    pq = cu.prepare_qnet(qnet)
+    x = jnp.asarray(np.asarray(jax.random.uniform(
+        jax.random.PRNGKey(seed), (2, 16, 16, 3), minval=-1, maxval=1)))
+    ref = np.asarray(cu.run_qnet(qnet, x))
+    np.testing.assert_array_equal(ref, np.asarray(cu.run_qnet(pq, x)))
+    np.testing.assert_array_equal(
+        ref, np.asarray(jax.jit(lambda t: cu.run_qnet(pq, t))(x)))
+    ref_fx = np.asarray(cu.run_qnet(qnet, x, fixed_point=True))
+    np.testing.assert_array_equal(
+        ref_fx, np.asarray(cu.run_qnet(pq, x, fixed_point=True)))
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,9 @@
 """Vision serving subsystem: stage compiler correctness, pipelined
 bit-exactness vs the monolithic integer runner, bucket admission edge cases,
-deadline handling, and a queue-drain throughput smoke test."""
+deadline handling, deterministic fake-clock stress tests (EDF under expiry,
+padding tails, bounded queue, NaN-safe stats, multi-model routing/fairness,
+sharded multi-replica serving), and a queue-drain throughput smoke test."""
+import math
 import time
 
 import jax
@@ -8,12 +11,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import compiler as CC, cu, qnet as Q
-from repro.core.calibrate import calibrate
-from repro.core.quant import QuantConfig
-from repro.models import efficientnet as effn, layers, mobilenet_v2 as mnv2
+from repro.core import compiler as CC, cu
+from repro.dist.sharding import data_mesh
+from repro.models import efficientnet as effn, mobilenet_v2 as mnv2
+from repro.models.layers import make_calibrated_qnet
 from repro.serve.vision import (
     AdmissionError,
+    MultiModelEngine,
     PipelinedExecutor,
     VisionEngine,
     compile_stages,
@@ -22,16 +26,25 @@ from repro.serve.vision import (
 HW = 32
 
 
+class FakeClock:
+    """Deterministic injectable time source: every read ticks by `step`
+    (so completion order is observable in latencies), plus manual
+    `advance` for deadline scenarios — no wall-clock sleeps anywhere."""
+
+    def __init__(self, t0: float = 0.0, step: float = 0.0):
+        self.t = t0
+        self.step = step
+
+    def __call__(self) -> float:
+        self.t += self.step
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
 def _make_qnet(net, seed=0):
-    params = layers.init_params(jax.random.PRNGKey(seed), net)
-
-    def apply_fn(p, b):
-        return layers.forward(p, b, net, capture=True)[1]
-
-    cal = [jax.random.uniform(jax.random.PRNGKey(i), (2, HW, HW, 3),
-                              minval=-1, maxval=1) for i in range(2)]
-    obs = calibrate(apply_fn, params, cal, QuantConfig(4, False, None))
-    return Q.quantize_net(params, net, obs)
+    return make_calibrated_qnet(net, seed=seed)
 
 
 @pytest.fixture(scope="module")
@@ -198,6 +211,22 @@ def test_pipeline_executor_ordering(mnv2_qnet):
             np.asarray(y), np.asarray(cu.run_qnet(mnv2_qnet, x)))
 
 
+def test_pipeline_stream_abandoned_mid_drain_does_not_leak(mnv2_qnet):
+    """Breaking out of stream() mid-drain must drop the in-flight batches:
+    a later drain on the same executor must not replay stale tags."""
+    stages = compile_stages(mnv2_qnet)
+    pipe = PipelinedExecutor(stages)
+    batches = [jnp.asarray(_images(2, seed=i)) for i in range(3)]
+    for _ in pipe.stream(enumerate(batches)):
+        break  # abandon with batches still in flight
+    assert not pipe.busy
+    outs = pipe.run(batches)  # fresh drain: exactly these 3, nothing stale
+    assert len(outs) == 3
+    np.testing.assert_array_equal(
+        np.asarray(outs[0]),
+        np.asarray(cu.run_qnet(mnv2_qnet, batches[0])))
+
+
 # ---------------------------------------------------------------------------
 # bucket admission edge cases
 # ---------------------------------------------------------------------------
@@ -271,6 +300,232 @@ def test_edf_orders_batches(mnv2_qnet):
     # tight + loose share the first bucket-2 batch; no-deadline rides last
     assert results[tight].latency_s <= results[nodeadline].latency_s
     assert all(r.status == "ok" for r in results.values())
+
+
+# ---------------------------------------------------------------------------
+# deterministic fake-clock stress tests
+# ---------------------------------------------------------------------------
+
+
+def test_fake_clock_expiry_is_deterministic(mnv2_qnet):
+    """Deadline expiry is decided against the injected clock at batch-form
+    time — no sleeps, no wall-clock racing."""
+    clock = FakeClock(t0=100.0)
+    eng = VisionEngine(mnv2_qnet, buckets=(2,), clock=clock)
+    img = _images(1)[0]
+    dead = eng.submit(img, deadline_s=50.0)   # already past the fake now
+    live = eng.submit(img, deadline_s=200.0)
+    later = eng.submit(img, deadline_s=101.0)
+    clock.advance(5.0)  # 105.0: 'later' expires before the drain
+    results = eng.run()
+    assert results[dead].status == "expired"
+    assert results[later].status == "expired"
+    assert results[live].status == "ok"
+    stats = eng.stats()
+    assert (stats.n_ok, stats.n_expired) == (1, 2)
+    assert stats.micro_batches == 1  # expired requests burn no CU work
+
+
+def test_fake_clock_edf_dispatch_order(mnv2_qnet):
+    """Tighter deadlines land in earlier micro-batches: with a ticking
+    clock, completion times (latencies from a common arrival) are ordered
+    exactly by deadline tightness, batch by batch."""
+    clock = FakeClock(t0=0.0, step=1e-4)
+    eng = VisionEngine(mnv2_qnet, buckets=(2,), clock=clock)
+    img = _images(1)[0]
+    # submit in scrambled order; all share arrival now=0
+    d = {eng.submit(img, deadline_s=dl, now=0.0): dl
+         for dl in (300.0, 110.0, 150.0, 120.0)}
+    results = eng.run()
+    assert all(r.status == "ok" for r in results.values())
+    # sort rids by their deadline; EDF packs [110,120] then [150,300]
+    by_deadline = sorted(d, key=lambda r: d[r])
+    lat = [results[r].latency_s for r in by_deadline]
+    assert lat[0] == lat[1] < lat[2] == lat[3], lat
+
+
+def test_fake_clock_padding_tail(mnv2_qnet):
+    """5 requests over (2, 4) buckets: one full 4-bucket + a padded 2-bucket
+    (deterministic — the fake clock never expires anything mid-drain)."""
+    clock = FakeClock(t0=0.0)
+    eng = VisionEngine(mnv2_qnet, buckets=(2, 4), clock=clock)
+    for img in _images(5):
+        eng.submit(img)
+    results = eng.run()
+    stats = eng.stats()
+    assert stats.n_ok == 5
+    assert stats.micro_batches == 2
+    assert stats.pad_fraction == pytest.approx(1 / 6)
+    assert all(r.status == "ok" for r in results.values())
+
+
+def test_bounded_queue_frees_capacity_after_drain(mnv2_qnet):
+    clock = FakeClock()
+    eng = VisionEngine(mnv2_qnet, buckets=(2,), max_queue=2, clock=clock)
+    img = _images(1)[0]
+    eng.submit(img)
+    eng.submit(img)
+    with pytest.raises(AdmissionError, match="queue full"):
+        eng.submit(img)
+    eng.run()
+    assert eng.pending() == 0
+    eng.submit(img)  # drained queue admits again
+
+
+def test_all_expired_stats_nan_safe(mnv2_qnet):
+    """Regression: when every request expires there are zero completions —
+    stats() must report NaN percentiles (not a misleading 0.0 or a
+    divide-by-zero) and keep every ratio finite."""
+    clock = FakeClock(t0=1000.0)
+    eng = VisionEngine(mnv2_qnet, buckets=(2,), clock=clock)
+    for img in _images(3):
+        eng.submit(img, deadline_s=1.0)  # all long past
+    results = eng.run()
+    assert all(r.status == "expired" for r in results.values())
+    stats = eng.stats()
+    assert stats.n_ok == 0 and stats.n_expired == 3
+    assert math.isnan(stats.latency_p50_s)
+    assert math.isnan(stats.latency_p95_s)
+    assert stats.fps == 0.0
+    assert stats.pad_fraction == 0.0
+    assert stats.micro_batches == 0
+    stats.as_dict()  # stays serializable
+
+
+# ---------------------------------------------------------------------------
+# multi-model routing
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def router(mnv2_qnet, effnet_qnet):
+    clock = FakeClock(t0=0.0, step=1e-4)
+    return MultiModelEngine({
+        "mnv2": VisionEngine(mnv2_qnet, buckets=(2,), clock=clock),
+        "effnet": VisionEngine(effnet_qnet, buckets=(2,), clock=clock),
+    }, clock=clock), clock
+
+
+def test_multi_model_bit_exact_and_tagged(router, mnv2_qnet, effnet_qnet):
+    mm, clock = router
+    imgs = _images(4)
+    handles = [mm.submit("mnv2" if i % 2 == 0 else "effnet", img, now=0.0)
+               for i, img in enumerate(imgs)]
+    results = mm.run()
+    assert all(results[h].status == "ok" for h in handles)
+    refs = {"mnv2": np.asarray(cu.run_qnet(mnv2_qnet, jnp.asarray(imgs))),
+            "effnet": np.asarray(cu.run_qnet(effnet_qnet, jnp.asarray(imgs)))}
+    for i, h in enumerate(handles):
+        np.testing.assert_array_equal(results[h].logits, refs[h[0]][i])
+    stats = mm.stats()
+    assert set(stats) == {"mnv2", "effnet"}
+    assert stats["mnv2"].n_ok == stats["effnet"].n_ok == 2
+
+
+def test_multi_model_unknown_model_rejected(router):
+    mm, _ = router
+    with pytest.raises(AdmissionError, match="unknown model"):
+        mm.submit("resnet", _images(1)[0])
+
+
+def test_multi_model_mixed_clocks_rejected(mnv2_qnet, effnet_qnet):
+    """Wall time, latencies, and deadlines must share ONE time source: the
+    router refuses engines holding different clocks unless an explicit
+    clock= unifies them (which is propagated down)."""
+    with pytest.raises(ValueError, match="clock"):
+        MultiModelEngine({
+            "a": VisionEngine(mnv2_qnet, buckets=(2,), clock=FakeClock()),
+            "b": VisionEngine(effnet_qnet, buckets=(2,), clock=FakeClock()),
+        })
+    shared = FakeClock()
+    mm = MultiModelEngine({
+        "a": VisionEngine(mnv2_qnet, buckets=(2,), clock=FakeClock()),
+        "b": VisionEngine(effnet_qnet, buckets=(2,), clock=FakeClock()),
+    }, clock=shared)
+    assert all(e._clock is shared for e in mm.engines.values())
+
+
+def test_multi_model_fairness_round_robin(router):
+    """Deadline-less load from two models interleaves one micro-batch per
+    model per scheduler round — neither model starves the other."""
+    mm, _ = router
+    for i, img in enumerate(_images(8)):
+        mm.submit("mnv2" if i < 4 else "effnet", img, now=0.0)
+    results = mm.run()
+    assert all(r.status == "ok" for r in results.values())
+    order = [m for m, _ in mm.dispatch_log]
+    assert sorted(order) == ["effnet", "effnet", "mnv2", "mnv2"]
+    # strict alternation: a model never dispatches twice in a row
+    assert all(a != b for a, b in zip(order, order[1:])), order
+
+
+def test_multi_model_edf_prioritizes_tight_deadlines(router):
+    """The model holding the tightest next deadline dispatches first into
+    the shared device stream, regardless of name order."""
+    mm, clock = router
+    img = _images(1)[0]
+    # effnet sorts first by name — give mnv2 the tighter deadlines to show
+    # EDF (not name order) decides
+    for _ in range(2):
+        mm.submit("effnet", img, deadline_s=1e6, now=0.0)
+        mm.submit("mnv2", img, deadline_s=10.0, now=0.0)
+    results = mm.run()
+    assert all(r.status == "ok" for r in results.values())
+    assert mm.dispatch_log[0][0] == "mnv2", mm.dispatch_log
+
+
+# ---------------------------------------------------------------------------
+# sharded multi-replica serving
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_single_replica_mesh_is_bit_exact(mnv2_qnet):
+    """mesh over 1 device: the degenerate sharded path must match the
+    monolithic reference exactly (and keep every bucket unchanged)."""
+    imgs = _images(4)
+    eng = VisionEngine(mnv2_qnet, buckets=(1, 2, 4), mesh=data_mesh(1))
+    assert eng.buckets == (1, 2, 4) and eng.replicas == 1
+    rids = [eng.submit(img) for img in imgs]
+    results = eng.run()
+    got = np.stack([results[r].logits for r in rids])
+    np.testing.assert_array_equal(
+        got, np.asarray(cu.run_qnet(mnv2_qnet, jnp.asarray(imgs))))
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >=2 devices (set "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+def test_sharded_multi_replica_bit_exact(mnv2_qnet):
+    """Micro-batches sharded across the 'data' mesh produce logits
+    bit-identical to the single-device engine, and every requested bucket
+    is rounded up to a replica multiple at construction."""
+    n = 2 * (len(jax.devices()) // 2)
+    mesh = data_mesh(n)
+    eng = VisionEngine(mnv2_qnet, buckets=(1, 2, 4, n, 2 * n), mesh=mesh)
+    assert all(b % n == 0 for b in eng.buckets)
+    assert eng.replicas == n
+    imgs = _images(2 * n)
+    rids = [eng.submit(img) for img in imgs]
+    results = eng.run()
+    got = np.stack([results[r].logits for r in rids])
+    np.testing.assert_array_equal(
+        got, np.asarray(cu.run_qnet(mnv2_qnet, jnp.asarray(imgs))))
+    assert eng.stats().replicas == n
+
+
+def test_sharded_buckets_round_up_to_replica_multiples(mnv2_qnet):
+    if len(jax.devices()) < 2:
+        with pytest.raises(ValueError, match="replicas"):
+            data_mesh(2)
+        return
+    eng = VisionEngine(mnv2_qnet, buckets=(1, 3, 4), mesh=data_mesh(2))
+    assert eng.buckets == (2, 4)  # 1 -> 2, 3 -> 4 (merged), 4 stays
+    img = _images(1)[0]
+    rid = eng.submit(img)
+    res = eng.run()
+    np.testing.assert_array_equal(
+        res[rid].logits,
+        np.asarray(cu.run_qnet(mnv2_qnet, jnp.asarray(img[None])))[0])
 
 
 # ---------------------------------------------------------------------------

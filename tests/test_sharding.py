@@ -20,11 +20,20 @@ def test_logical_rules_single_pod():
 
 
 def test_fit_spec_drops_nondividing_axes():
-    mesh = make_host_mesh()  # (1, 1) on this container: everything divides
-    # fabricate a mesh-shape check via the helper directly
+    # pin a 1x1 mesh explicitly: with forced host devices (the CI 4-device
+    # matrix) make_host_mesh() would be (4, 1) and 7 % 4 != 0 legitimately
+    # drops 'data'
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
     spec = SH._fit_spec_to_shape(P("data", "model"), (7, 8), mesh)
     # axis sizes are 1 here, so nothing is dropped
     assert spec == P("data", "model")
+    # and on a mesh whose 'data' extent does NOT divide dim 0, it is dropped
+    if len(jax.devices()) >= 2:
+        mesh2 = Mesh(np.array(jax.devices()[:2]).reshape(2, 1),
+                     ("data", "model"))
+        assert SH._fit_spec_to_shape(
+            P("data", "model"), (7, 8), mesh2) == P(None, "model")
 
 
 def test_shard_noop_without_mesh():
