@@ -20,8 +20,6 @@ def run(alpha=0.75, hw=224, act_bits=4):
     h = net.input_hw
     tot_unfused = tot_fused = 0
     for blk in net.blocks:
-        names = [op.kind for op in blk.ops]
-        h_in = h
         sizes = []
         for op in blk.ops:
             if op.kind == "dense":

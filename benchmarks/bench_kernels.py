@@ -51,7 +51,6 @@ def run():
     xq = jnp.asarray(rng.integers(0, 16, (m, k)), jnp.int32)
     wq = jnp.asarray(rng.integers(-7, 8, (k, n)), jnp.int32)
     multp = jnp.ones(n, jnp.float32) * 0.01
-    zpc = jnp.zeros(n, jnp.int32)
     bp = jnp.zeros(n, jnp.int32)
     pw_ref = jax.jit(lambda x, w: IO.quantized_op_epilogue(
         IO.int_pointwise(x, w), z_x=jnp.int32(0), wsum=w.sum(0),
@@ -76,8 +75,9 @@ def run():
     w1 = jnp.asarray(rng.integers(-7, 8, (cc, e)), jnp.int32)
     w2 = jnp.asarray(rng.integers(-7, 8, (3, 3, e)), jnp.int32)
     w3 = jnp.asarray(rng.integers(-7, 8, (e, co)), jnp.int32)
-    mk = lambda n: (jnp.ones(n, jnp.float32) * 0.01, jnp.zeros(n, jnp.float32),
-                    jnp.zeros(n, jnp.int32))
+    def mk(n):
+        return (jnp.ones(n, jnp.float32) * 0.01, jnp.zeros(n, jnp.float32),
+                jnp.zeros(n, jnp.int32))
     m1, c1, b1 = mk(e)
     m2, c2, b2 = mk(e)
     m3, c3, b3 = mk(co)

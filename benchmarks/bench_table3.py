@@ -45,7 +45,6 @@ def activation_bytes(net, bits=4):
 
 
 def run():
-    prev_fps = None
     for (alpha, hh), paper in sorted(PAPER_FPS.items()):
         net = mnv2.build(alpha=alpha, input_hw=hh, bits=4)
         macs = net.count_macs()

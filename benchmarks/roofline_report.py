@@ -12,7 +12,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-from collections import defaultdict
 
 PEAK = 197e12
 HBM_GB = 16e9  # v5e per-chip HBM

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Union
 
 from repro.models.lm.config import LMConfig
 

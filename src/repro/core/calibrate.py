@@ -16,7 +16,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, Iterable, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from .quant import QuantConfig, compute_scale_zp, observe_range

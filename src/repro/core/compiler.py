@@ -20,8 +20,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
-import numpy as np
-
 from repro.core import graph as G
 
 HEAD, BODY, TAIL, CLASSIFIER = "head", "body", "tail", "classifier"
@@ -57,6 +55,9 @@ class StageSignature:
 class CUPlan:
     net: G.NetSpec
     schedule: Tuple[CUAssignment, ...]
+    # optional measured per-op route selection (repro.tune.TunedPlan); stage
+    # compilers pick it up when the caller does not pass one explicitly
+    tuned: Optional[object] = None
 
     @property
     def body_invocations(self) -> int:
@@ -82,6 +83,29 @@ class CUPlan:
         if len(set(seen)) != len(seen):
             raise ValueError(f"non-contiguous CU schedule: {seen}")
         return tuple((cu, tuple(blocks)) for cu, blocks in groups)
+
+    def op_descriptors(self) -> Tuple[Tuple[str, G.BlockSpec, G.OpSpec,
+                                            Optional[int]], ...]:
+        """Per-op job descriptors: (cu, block, op, in_hw) in schedule order.
+
+        `in_hw` is the spatial size of the op's input tensor (None once the
+        tensor is collapsed — DENSE after the Tail's global pool). This is
+        the shape walk the route autotuner keys its per-op cache on: the
+        same (kind, shape, act_bits) op in two nets resolves to the same
+        tuning-cache entry. SE squeeze/excite ops are not enumerated — they
+        run on the reference path."""
+        descs: List[Tuple[str, G.BlockSpec, G.OpSpec, Optional[int]]] = []
+        hw: Optional[int] = self.net.input_hw
+        for a in self.schedule:
+            for op in a.block.ops:
+                descs.append((a.cu, a.block, op, hw))
+                if op.kind == G.DENSE:
+                    hw = None
+                elif hw is not None:
+                    hw = -(-hw // op.stride)
+            if a.block.avgpool:
+                hw = None
+        return tuple(descs)
 
     def stage_signatures(self) -> Tuple[StageSignature, ...]:
         """Lower the schedule into per-stage shape signatures (what each
@@ -146,12 +170,15 @@ class CUPlan:
         return out
 
 
-def compile_net(net: G.NetSpec) -> CUPlan:
+def compile_net(net: G.NetSpec, tuned: Optional[object] = None) -> CUPlan:
     """Partition blocks into CUs by recurrence (paper Sec. 4.2.1).
 
     Rule: the stem (normal conv) and the first instance of the repeating
     block pattern form the Head; the remaining repeats form the Body; the
     final pointwise+avgpool is the Tail; the dense layer the Classifier.
+
+    `tuned` (a `repro.tune.TunedPlan`) rides on the plan: downstream stage
+    compilers consult it for measured per-op route selection.
     """
     blocks = list(net.blocks)
     schedule: List[CUAssignment] = []
@@ -177,7 +204,7 @@ def compile_net(net: G.NetSpec) -> CUPlan:
     for b, role in zip(blocks, roles):
         schedule.append(CUAssignment(role, b, inv))
         inv += 1
-    return CUPlan(net, tuple(schedule))
+    return CUPlan(net, tuple(schedule), tuned=tuned)
 
 
 __all__ = ["CUPlan", "CUAssignment", "compile_net", "HEAD", "BODY", "TAIL", "CLASSIFIER"]

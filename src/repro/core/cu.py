@@ -29,15 +29,13 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, Optional, Tuple, Union
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import graph as G
 from repro.core.integer_ops import (
-    clip_act,
     f32_accum_exact,
     int_conv2d,
     int_conv2d_f32,
@@ -100,12 +98,20 @@ class PreparedQOp:
 class PreparedQNet:
     """A QNet lowered for serving: per-op `PreparedQOp`s + per-residual
     integer skip-add constants. Drop-in for `QNet` in every runner here and
-    in `kernels/ops.py` / `serve/vision/stages.py`."""
+    in `kernels/ops.py` / `serve/vision/stages.py`.
+
+    `routes` (op name -> (route, params)) carries a measured route
+    selection resolved from a `repro.tune.TunedPlan` at prepare time: the
+    runners execute a routed op through that route instead of the default
+    formulation. Ops absent from the map fall back to the defaults, so a
+    partial (or empty) map is always safe."""
 
     qnet: QNet
     ops: Dict[str, PreparedQOp]
     res_q: Dict[str, Tuple[float, float]]
     res_fixed: Dict[str, Tuple[int, int, int, int, int]]
+    routes: Dict[str, Tuple[str, Dict[str, int]]] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def spec(self) -> G.NetSpec:
@@ -168,16 +174,54 @@ def replicate_prepared(pq: "PreparedQNet", mesh) -> "PreparedQNet":
     return dataclasses.replace(pq, ops=ops)
 
 
-def prepare_qnet(qnet: QNet, input_bits: int = 8, mesh=None) -> PreparedQNet:
+def _validate_routes(op_routes, ops: Dict[str, PreparedQOp]) -> Dict:
+    """Attach-time validation of resolved routes against the *actual*
+    prepared constants: an `int_f32` route whose op fails the 2^24
+    exactness bound here (different weights than the tuned net) is
+    dropped rather than run inexactly; unknown op names are ignored."""
+    routes: Dict[str, Tuple[str, Dict[str, int]]] = {}
+    for name, (route, params) in op_routes.items():
+        pop = ops.get(name)
+        if pop is None:
+            continue
+        if route == "int_f32" and not pop.f32_exact:
+            continue
+        routes[name] = (route, dict(params))
+    return routes
+
+
+def _resolve_tuned_routes(tuned, qnet,
+                          ops: Dict[str, PreparedQOp]) -> Dict:
+    """Project a `TunedPlan` onto prepared ops (op name -> (route, params))."""
+    op_routes, _ = tuned.resolve(qnet)
+    return _validate_routes(op_routes, ops)
+
+
+def prepare_qnet(qnet: QNet, input_bits: int = 8, mesh=None,
+                 tuned=None, routes=None) -> PreparedQNet:
     """Lower a QNet to its device-resident serving form (one-time cost).
 
     Walks the graph to bound each op's input activations (needed for the
     f32-exactness gate) and uploads every constant once. Idempotent on an
     already-prepared net (unless `mesh` is given, which re-places the
     constants replicated across the mesh's replicas).
+
+    `tuned` (a `repro.tune.TunedPlan`) resolves the measured per-op route
+    selection onto the prepared net: the runners then execute each routed
+    op through its tuned route (see `PreparedQNet.routes`). Callers that
+    already resolved a plan (the stage compiler) pass the op-name-keyed
+    `routes` dict directly instead; both paths re-validate eligibility
+    against the prepared constants.
     """
     if isinstance(qnet, PreparedQNet):
-        return qnet if mesh is None else replicate_prepared(qnet, mesh)
+        pq = qnet if mesh is None else replicate_prepared(qnet, mesh)
+        if routes is not None:
+            pq = dataclasses.replace(
+                pq, routes=_validate_routes(routes, pq.ops))
+        elif tuned is not None:
+            pq = dataclasses.replace(pq, routes=_resolve_tuned_routes(
+                tuned, pq.qnet, pq.ops))
+        return pq
     put = _constant_put(mesh)
     ops: Dict[str, PreparedQOp] = {}
     res_fixed: Dict[str, Tuple[int, int, int, int, int]] = {}
@@ -201,19 +245,47 @@ def prepare_qnet(qnet: QNet, input_bits: int = 8, mesh=None) -> PreparedQNet:
             res_fixed[block.name] = residual_fixed_consts(
                 first.in_scale, first.in_zp,
                 last.out_scale, last.out_zp, y_s, y_z)
+    if routes is not None:
+        attached = _validate_routes(routes, ops)
+    elif tuned is not None:
+        attached = _resolve_tuned_routes(tuned, qnet, ops)
+    else:
+        attached = {}
     return PreparedQNet(qnet=qnet, ops=ops, res_q=dict(qnet.res_q),
-                        res_fixed=res_fixed)
+                        res_fixed=res_fixed, routes=attached)
 
 
-def _accumulate(x_q: jnp.ndarray, qop) -> jnp.ndarray:
+def _accumulate(x_q: jnp.ndarray, qop, route: Optional[str] = None
+                ) -> jnp.ndarray:
     """Int32 accumulator for one op.
 
     `QOp` (host metadata) takes the reference XLA integer ops; `PreparedQOp`
     takes the compiled fast-path formulations — shifted-slice depthwise and,
     when the per-op exactness bound holds, f32-unit matmul/conv — which
     produce the *same* int32 accumulator (see core/integer_ops docstrings).
+
+    `route` (PreparedQOp only) forces one of the named tuned-cache
+    accumulator routes instead of the heuristic default — every route is an
+    alternate formulation of the identical accumulator, so the choice can
+    never move a bit, only the wall clock.
     """
     op = qop.spec
+    if route is not None:
+        assert isinstance(qop, PreparedQOp), "routes bind to prepared ops"
+        if route == "int_ref":
+            if op.kind == G.CONV:
+                return int_conv2d(x_q, qop.w_q, stride=op.stride)
+            if op.kind == G.DW:
+                return int_conv2d(x_q, qop.w_q, stride=op.stride,
+                                  groups=op.in_ch)
+            return int_pointwise(x_q, qop.w_kern)
+        if route == "dw_shifts":
+            return int_depthwise_shifts(x_q, qop.w_kern, stride=op.stride)
+        if route == "int_f32":
+            if op.kind == G.CONV:
+                return int_conv2d_f32(x_q, qop.w_q, stride=op.stride)
+            return int_pointwise_f32(x_q, qop.w_kern)
+        raise ValueError(f"unknown tuned route {route!r} for {op.name}")
     if isinstance(qop, PreparedQOp):
         if op.kind == G.DW:
             return int_depthwise_shifts(x_q, qop.w_kern, stride=op.stride)
@@ -238,9 +310,21 @@ def _accumulate(x_q: jnp.ndarray, qop) -> jnp.ndarray:
     raise ValueError(op.kind)
 
 
-def _run_qop(x_q: jnp.ndarray, qop, fixed_point: bool) -> jnp.ndarray:
+def _run_qop(x_q: jnp.ndarray, qop, fixed_point: bool,
+             route: Optional[Tuple[str, Dict[str, int]]] = None,
+             interpret: Optional[bool] = None) -> jnp.ndarray:
     op = qop.spec
-    acc = _accumulate(x_q, qop)
+    if route is not None and op.act != G.HSIGMOID and not fixed_point:
+        name, params = route
+        if name in ("pallas_pw", "pallas_dw"):
+            # deferred import: kernels.ops imports this module at top level
+            from repro.kernels import ops as K
+            if name == "pallas_dw":
+                return K.run_dw_qop(x_q, qop, interpret=interpret, **params)
+            return K.run_pw_qop(x_q, qop, interpret=interpret, **params)
+        acc = _accumulate(x_q, qop, route=name)
+    else:
+        acc = _accumulate(x_q, qop)
 
     if op.act == G.HSIGMOID:
         # gate: y = relu6(x + 3)/6 quantized to [0, qmax] with S=1/qmax.
@@ -319,13 +403,26 @@ def run_block(
     in_s: float,
     in_z: float,
     fixed_point: bool = False,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, float, float]:
-    """Execute one block (one CU invocation) fully fused in integer math."""
+    """Execute one block (one CU invocation) fully fused in integer math.
+
+    A `PreparedQNet` carrying tuned `routes` (see `prepare_qnet(tuned=)`)
+    dispatches each routed op through its measured route; everything else
+    takes the default formulation. Tuned routes are float-requant only, so
+    `fixed_point=True` ignores them (the reference fixed-point datapath is
+    the bit-exactness contract there). `interpret` forwards to any routed
+    Pallas kernel (None = auto by backend)."""
+    routes = None
+    if not fixed_point and isinstance(qnet, PreparedQNet) and qnet.routes:
+        routes = qnet.routes
     y = x_q
     cur_s, cur_z = in_s, in_z
     for op in block.ops:
         qop = qnet.ops[op.name]
-        y = _run_qop(y, qop, fixed_point)
+        y = _run_qop(y, qop, fixed_point,
+                     route=routes.get(op.name) if routes else None,
+                     interpret=interpret)
         cur_s, cur_z = qop.out_scale, qop.out_zp
         if block.se is not None and block.se_after == op.name:
             sq, ex = qnet.ops[block.se.squeeze.name], qnet.ops[block.se.excite.name]

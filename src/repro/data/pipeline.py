@@ -16,9 +16,8 @@ Gaussians "imagenet-lite" whose labels are learnable (for convergence tests).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
-import jax
 import numpy as np
 
 

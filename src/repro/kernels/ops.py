@@ -21,18 +21,16 @@ Fast-path matrix (which CU op hits which kernel — see README 'Performance'):
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Optional, Tuple, Union
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.qnet import QOp, QNet
+from repro.core.qnet import QNet
 from repro.core import cu as _cu
 from repro.core import graph as G
-from repro.core.quant import QuantConfig, compute_scale_zp, observe_range, quantize
+from repro.core.quant import QuantConfig
 from repro.kernels import depthwise_conv as _dw
 from repro.kernels import fused_irb as _irb
 from repro.kernels import pointwise_conv as _pw
@@ -98,13 +96,18 @@ def _pw_zpc(qop) -> jnp.ndarray:
     return jnp.int32(qop.in_zp) * jnp.asarray(qop.wsum, jnp.int32)
 
 
-def run_pw_qop(x_q: jnp.ndarray, qop, interpret: Optional[bool] = None):
+def run_pw_qop(x_q: jnp.ndarray, qop, interpret: Optional[bool] = None,
+               block_m: int = 128, block_n: int = 128, block_k: int = 128):
     """Pointwise / dense QNet op via the Pallas matmul-CU kernel.
 
     Bit-exact with `int_pointwise` + `quantized_op_epilogue` (the kernel
     applies the identical integer zero-point correction and f32 requant
     sequence). Clips to [0, qmax] like the reference epilogue — linear ops
     included, since the output quantizer's codomain is [0, qmax] either way.
+
+    `block_m/n/k` expose the kernel's tile sizes (the route autotuner
+    sweeps them; tiling only reorders identical integer accumulations, so
+    any tile choice stays bit-exact).
     """
     interp = (not on_tpu()) if interpret is None else interpret
     mult = qop.mult if isinstance(qop, _cu.PreparedQOp) else jnp.asarray(
@@ -113,7 +116,8 @@ def run_pw_qop(x_q: jnp.ndarray, qop, interpret: Optional[bool] = None):
         qop.bias_q, jnp.int32)
     return _pw.pointwise_conv_q(
         x_q, _mat_weight(qop), mult, _pw_zpc(qop), bias,
-        qmax=qop.qmax, clip=True, interpret=interp,
+        qmax=qop.qmax, clip=True, block_m=block_m, block_n=block_n,
+        block_k=block_k, interpret=interp,
     )
 
 

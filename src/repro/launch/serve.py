@@ -16,7 +16,9 @@ symmetric per-channel scheme to every linear operator — the LM analogue of
 QNet deployment. --vision instead serves calibrated integer QNets through
 the pipelined CU stage executors: --replicas builds a 1-D 'data' mesh and
 shards every micro-batch across it; more than one --models entry routes
-requests through the EDF `MultiModelEngine`.
+requests through the EDF `MultiModelEngine`. --tuned-cache serves through
+a committed per-op route selection (see `repro.tune`); --tune measures one
+live first.
 """
 from __future__ import annotations
 
@@ -45,6 +47,31 @@ def _vision_qnet(arch: str, hw: int, seed: int = 0):
     return layers.make_calibrated_qnet(net, seed=seed)
 
 
+def _vision_tuned(args, qnets):
+    """Resolve the serving route selection: tune live (--tune), or load a
+    committed cache (--tuned-cache). Returns a TunedPlan or None."""
+    if args.tune:
+        import functools
+
+        from repro.tune import save_tuned, tune_qnet
+
+        plans = [tune_qnet(q, batch=args.batch) for q in qnets.values()]
+        tuned = functools.reduce(lambda a, b: a.merge(b), plans)
+        if args.tuned_cache:
+            save_tuned(tuned, args.tuned_cache)
+            print(f"[serve-vision] tuned {len(tuned)} entries "
+                  f"-> {args.tuned_cache}")
+        return tuned
+    if args.tuned_cache:
+        from repro.tune import load_tuned
+
+        tuned = load_tuned(args.tuned_cache)
+        print(f"[serve-vision] loaded tuning cache {args.tuned_cache} "
+              f"({len(tuned)} entries)")
+        return tuned
+    return None
+
+
 def vision_main(args) -> None:
     from repro.dist.sharding import data_mesh
     from repro.serve.vision import MultiModelEngine, VisionEngine
@@ -55,9 +82,14 @@ def vision_main(args) -> None:
     buckets = tuple(sorted(
         {b for b in (1, 2, 4) if b < args.batch} | {args.batch}))
     models = [m.strip() for m in args.models.split(",") if m.strip()]
+    qnets = {m: _vision_qnet(m, args.hw, args.seed) for m in models}
+    tuned = _vision_tuned(args, qnets)
+    if tuned is not None:
+        for m, q in qnets.items():
+            print(f"[serve-vision] {m}: tuned route coverage "
+                  f"{tuned.coverage(q):.0%}")
     engines = {
-        m: VisionEngine(_vision_qnet(m, args.hw, args.seed), mesh=mesh,
-                        buckets=buckets)
+        m: VisionEngine(qnets[m], mesh=mesh, buckets=buckets, tuned=tuned)
         for m in models
     }
     router = MultiModelEngine(engines)
@@ -90,6 +122,12 @@ def main(argv=None):
     ap.add_argument("--hw", type=int, default=48, help="vision input H=W")
     ap.add_argument("--batch", type=int, default=8,
                     help="largest vision micro-batch bucket")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune per-op routes for each vision model "
+                         "before serving (saved to --tuned-cache if given)")
+    ap.add_argument("--tuned-cache", default=None,
+                    help="tuning-cache JSON to load (or write, with "
+                         "--tune) for vision serving")
     ap.add_argument("--arch", choices=sorted(ARCHS), default="llama3.2-1b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)

@@ -14,14 +14,11 @@ are exercised by the dry-run):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import signal
-import sys
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCHS, get_config, reduced_config
 from repro.data.pipeline import DataConfig, lm_batch

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import graph as G
-from repro.core.quant import QuantConfig, fake_quant, fake_quant_minmax
+from repro.core.quant import QuantConfig, fake_quant_minmax
 
 # ---------------------------------------------------------------------------
 # primitive float ops (NHWC, HWIO)

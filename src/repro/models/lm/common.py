@@ -13,7 +13,7 @@ weight-side memory roofline term by 4x/8x (see EXPERIMENTS.md §Perf).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

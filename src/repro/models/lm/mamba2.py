@@ -16,7 +16,7 @@ which is why mamba2 runs the long_500k cell.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -13,9 +13,7 @@ get a leading `None` (the scan axis is never sharded).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,14 +11,14 @@ Capacity-based dropping keeps every shape static (required for pjit).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import shard
 from repro.models.lm.config import LMConfig
-from repro.models.lm.common import dt, init_linear, init_mlp, linear, mlp
+from repro.models.lm.common import dt, init_mlp, mlp
 
 F32 = jnp.float32
 

@@ -16,7 +16,7 @@ long_500k runnable for the hybrid architecture.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -134,6 +134,9 @@ class VisionEngine:
     so every batch splits evenly — no caller has to special-case counts).
     `clock`: injectable time source (returns seconds, perf_counter-like) —
     deadlines, latencies, and wall time all read it; tests pass a fake.
+    `tuned`: a `repro.tune.TunedPlan` — measured per-op route selection
+    replaces the stage compiler's hard-coded kernel heuristics (ops with
+    no cache entry keep the defaults; see `compile_stages`).
     """
 
     def __init__(
@@ -150,6 +153,7 @@ class VisionEngine:
         donate: str = "auto",
         interpret: Optional[bool] = None,
         mesh=None,
+        tuned=None,
         clock: Optional[Callable[[], float]] = None,
         max_queue: int = 4096,
     ):
@@ -174,7 +178,8 @@ class VisionEngine:
         self.stages: List[CompiledStage] = compile_stages(
             qnet, self.plan, fixed_point=fixed_point, input_bits=input_bits,
             body_fast_path=body_fast_path, op_kernels=op_kernels,
-            prepare=prepare, donate=donate, interpret=interpret, mesh=mesh)
+            prepare=prepare, donate=donate, interpret=interpret, mesh=mesh,
+            tuned=tuned)
         self.pipe = PipelinedExecutor(self.stages, clock=self._clock)
         net = qnet.spec
         self.input_shape = (net.input_hw, net.input_hw, net.input_ch)

@@ -68,7 +68,8 @@ class CompiledStage:
     def __init__(self, spec: StageSpec, qnet: Union[QNet, cu.PreparedQNet],
                  *, fixed_point: bool, input_bits: int, fast_path: bool,
                  op_kernels: bool, interpret: Optional[bool],
-                 donate: bool = False, mesh=None):
+                 donate: bool = False, mesh=None, tuned: bool = False,
+                 fused_blocks: frozenset = frozenset()):
         self.spec = spec
         self._qnet = qnet
         self._fixed_point = fixed_point
@@ -76,6 +77,8 @@ class CompiledStage:
         self._fast_path = fast_path and spec.cu == CC.BODY
         self._op_kernels = op_kernels
         self._interpret = interpret
+        self._tuned = tuned
+        self._fused_blocks = fused_blocks
         self.mesh = mesh
         self.invocations = 0  # CU invocations dispatched (micro-batches)
         self.traces = 0  # jit cache misses (should stay == #buckets)
@@ -99,7 +102,20 @@ class CompiledStage:
                 y, spec.in_scale, spec.in_zp, self._input_bits)
         s, z = spec.in_scale, spec.in_zp
         for block in spec.blocks:
-            if self._fast_path and K.fusable_irb(block):
+            if self._tuned:
+                # measured route selection: the TunedPlan's per-op routes
+                # ride on the PreparedQNet (cu.run_block dispatches them);
+                # fused-IRB block choices are honored here. Ops/blocks
+                # without a cache entry fall back to the default route.
+                if block.name in self._fused_blocks and K.fusable_irb(block):
+                    y, s, z = K.run_irb_block(
+                        y, block, self._qnet, s, z,
+                        interpret=self._interpret)
+                else:
+                    y, s, z = cu.run_block(
+                        y, block, self._qnet, s, z, self._fixed_point,
+                        interpret=self._interpret)
+            elif self._fast_path and K.fusable_irb(block):
                 y, s, z = K.run_irb_block(
                     y, block, self._qnet, s, z, interpret=self._interpret)
             elif self._op_kernels:
@@ -135,6 +151,7 @@ def compile_stages(
     donate: str = "auto",  # "auto" | "on" | "off"
     interpret: Optional[bool] = None,
     mesh=None,
+    tuned=None,
 ) -> List[CompiledStage]:
     """Lower a CUPlan into the ordered list of jitted stage executors.
 
@@ -143,6 +160,16 @@ def compile_stages(
     kernels in every stage. Both are "auto" == only on a real TPU (in
     interpret mode the kernels are emulated and slower than the compiled XLA
     path, though still bit-exact); "on"/"off" force either way.
+
+    `tuned` (a `repro.tune.TunedPlan`, or carried on `plan.tuned`) REPLACES
+    those hard-coded heuristics with measured cache lookup: each op runs the
+    route the autotuner verified bit-exact and timed fastest for its
+    (kind, shape, act_bits, backend) key; fusable Body blocks honor the
+    block-level fused-IRB decision. Ops/blocks with no cache entry fall
+    back to today's defaults, so a partial or foreign-backend cache is
+    always safe. Tuned routes are float-requant formulations, so
+    `fixed_point=True` is refused, and routes bind to prepared constants,
+    so `prepare=False` is refused too.
 
     `prepare`: lower the QNet with `cu.prepare_qnet` first (device-resident
     constants + compiled integer formulations). Default on — this is the
@@ -162,8 +189,31 @@ def compile_stages(
         raise ValueError(f"mesh needs a 'data' axis, got {mesh.axis_names}")
     if plan is None:
         plan = CC.compile_net(qnet.spec)
+    if tuned is None:
+        tuned = getattr(plan, "tuned", None)
+    fused_blocks: frozenset = frozenset()
     fast = _resolve(body_fast_path, "body_fast_path")
     kerns = _resolve(op_kernels, "op_kernels")
+    op_routes = None
+    if tuned is not None:
+        if fixed_point:
+            raise ValueError(
+                "tuned= carries float-requant routes only and cannot "
+                "serve fixed_point=True")
+        if not prepare:
+            raise ValueError(
+                "tuned= requires prepare=True (routes bind to PreparedQOp "
+                "device constants)")
+        # one resolve, with cache MISSES filled by the heuristic defaults
+        # (on TPU an uncovered op keeps the default-tile Pallas route, an
+        # uncovered fusable block keeps the fused kernel) — a partial or
+        # foreign-backend cache can never silently degrade a route below
+        # what the non-tuned heuristics would run
+        op_routes, fused = tuned.resolve_with_defaults(
+            qnet, plan, op_kernels=kerns, body_fast_path=fast)
+        if not op_routes and not fused:
+            tuned = op_routes = None  # nothing to route: pure heuristics
+        fused_blocks = frozenset(fused or ())
     if fixed_point and (fast or kerns):
         # the Pallas kernels' requant epilogue is float-multiplier only; a
         # silent fallback would break bit-exactness with
@@ -179,7 +229,8 @@ def compile_stages(
     donate_ok = (jax.default_backend() != "cpu") if donate == "auto" \
         else donate == "on"
     if prepare:
-        qnet = cu.prepare_qnet(qnet, input_bits=input_bits, mesh=mesh)
+        qnet = cu.prepare_qnet(qnet, input_bits=input_bits, mesh=mesh,
+                               routes=op_routes)
     elif mesh is not None and isinstance(qnet, cu.PreparedQNet):
         qnet = cu.replicate_prepared(qnet, mesh)
 
@@ -202,7 +253,8 @@ def compile_stages(
         stages.append(CompiledStage(
             spec, qnet, fixed_point=fixed_point, input_bits=input_bits,
             fast_path=fast, op_kernels=kerns, interpret=interpret,
-            donate=donate_ok and i > 0, mesh=mesh))
+            donate=donate_ok and i > 0, mesh=mesh,
+            tuned=tuned is not None, fused_blocks=fused_blocks))
         s, z = out_s, out_z
     return stages
 

@@ -11,8 +11,7 @@ bitwise-continuation tests.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,56 @@
+"""Route autotuning: measured per-op kernel selection with a committed
+tuning cache (see `autotune.tune_qnet` and `cache.TunedPlan`).
+
+    plan = tune_qnet(qnet, batch=8)          # measure + verify bit-exact
+    save_tuned(plan, "experiments/tuned/my_cpu.json")
+    engine = VisionEngine(qnet, tuned=load_tuned(...))  # cache lookup
+
+`python -m repro.tune` regenerates the committed caches.
+"""
+from repro.tune.autotune import (
+    Candidate,
+    DW_BLOCK_H_SWEEP,
+    PW_TILE_SWEEP,
+    op_candidates,
+    tune_qnet,
+    wall_measure,
+)
+from repro.tune.cache import (
+    CACHE_VERSION,
+    DW_SHIFTS,
+    FUSED_IRB,
+    INT_F32,
+    INT_REF,
+    PALLAS_DW,
+    PALLAS_PW,
+    PER_OP,
+    RouteChoice,
+    TunedPlan,
+    irb_key,
+    load_tuned,
+    op_key,
+    save_tuned,
+)
+
+__all__ = [
+    "Candidate",
+    "DW_BLOCK_H_SWEEP",
+    "PW_TILE_SWEEP",
+    "op_candidates",
+    "tune_qnet",
+    "wall_measure",
+    "CACHE_VERSION",
+    "DW_SHIFTS",
+    "FUSED_IRB",
+    "INT_F32",
+    "INT_REF",
+    "PALLAS_DW",
+    "PALLAS_PW",
+    "PER_OP",
+    "RouteChoice",
+    "TunedPlan",
+    "irb_key",
+    "load_tuned",
+    "op_key",
+    "save_tuned",
+]

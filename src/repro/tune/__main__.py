@@ -1,0 +1,125 @@
+"""Regenerate the committed tuning caches under experiments/tuned/.
+
+    # the four golden-fixture nets (what the tier-1 parity tests consume):
+    PYTHONPATH=src python -m repro.tune --golden
+
+    # the benchmark nets (mnv2 a0.35 at hw 48 + the hw-32 smoke shape),
+    # merged into one cache the benchmarks/CI consume:
+    PYTHONPATH=src python -m repro.tune --bench
+
+    # ad-hoc: one model/shape to a chosen path
+    PYTHONPATH=src python -m repro.tune --models mobilenet_v2 --hw 48 \
+        --bits 4 --batch 8 --out experiments/tuned/custom.json
+
+Caches are backend-keyed (a cache tuned on CPU resolves nothing on TPU),
+so the filenames carry the backend suffix.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import sys
+
+import jax
+
+TUNED_DIR = os.path.join("experiments", "tuned")
+
+
+def _build_qnet(model: str, hw: int, bits: int, num_classes: int):
+    from repro.models import efficientnet as effn, layers, mobilenet_v2 as mnv2
+
+    if model == "mobilenet_v2":
+        net = mnv2.build(alpha=0.35, input_hw=hw, bits=bits,
+                         num_classes=num_classes)
+    elif model == "efficientnet_compact":
+        net = effn.build_compact(input_hw=hw, bits=bits,
+                                 num_classes=num_classes)
+    else:
+        raise SystemExit(f"unknown model {model!r}")
+    return layers.make_calibrated_qnet(net, bits=bits)
+
+
+def tune_golden(args) -> None:
+    """One cache per frozen golden fixture net (the conformance contract)."""
+    from repro.core import qnet as Q
+    from repro.tune import save_tuned, tune_qnet
+    from tests.regen_golden import CASES, build_net, fixture_paths
+
+    backend = jax.default_backend()
+    for model, bits in CASES:
+        qnet_path, _ = fixture_paths(model, bits)
+        qnet = Q.load_qnet(qnet_path, build_net(model, bits))
+        plan = tune_qnet(qnet, batch=args.batch, repeats=args.repeats,
+                         seed=args.seed, verbose=args.verbose)
+        out = os.path.join(TUNED_DIR, f"{model}_act{bits}_{backend}.json")
+        save_tuned(plan, out)
+        print(f"[tune] {model} act{bits}: {len(plan)} entries -> {out}")
+
+
+def tune_bench(args) -> None:
+    """One merged cache covering the benchmark serving shapes."""
+    from repro.tune import save_tuned, tune_qnet
+
+    backend = jax.default_backend()
+    plans = []
+    for hw in (48, 32):  # full benchmark + the CI smoke geometry
+        qnet = _build_qnet("mobilenet_v2", hw, 4, 1000)
+        plans.append(tune_qnet(qnet, batch=args.batch, repeats=args.repeats,
+                               seed=args.seed, verbose=args.verbose))
+        print(f"[tune] mobilenet_v2 hw{hw}: {len(plans[-1])} entries",
+              file=sys.stderr)
+    merged = functools.reduce(lambda a, b: a.merge(b), plans)
+    out = os.path.join(TUNED_DIR, f"bench_{backend}.json")
+    save_tuned(merged, out)
+    print(f"[tune] bench cache: {len(merged)} entries -> {out}")
+
+
+def tune_custom(args) -> None:
+    from repro.tune import save_tuned, tune_qnet
+
+    backend = jax.default_backend()
+    plans = []
+    for model in args.models.split(","):
+        qnet = _build_qnet(model.strip(), args.hw, args.bits,
+                           args.num_classes)
+        plans.append(tune_qnet(qnet, batch=args.batch, repeats=args.repeats,
+                               seed=args.seed, verbose=args.verbose))
+    merged = functools.reduce(lambda a, b: a.merge(b), plans)
+    out = args.out or os.path.join(
+        TUNED_DIR, f"custom_{backend}.json")
+    save_tuned(merged, out)
+    print(f"[tune] {args.models}: {len(merged)} entries -> {out}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="python -m repro.tune")
+    ap.add_argument("--golden", action="store_true",
+                    help="tune the 4 frozen golden-fixture nets")
+    ap.add_argument("--bench", action="store_true",
+                    help="tune the benchmark nets into one merged cache")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated models for an ad-hoc tune")
+    ap.add_argument("--hw", type=int, default=48)
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--num-classes", type=int, default=1000)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.golden:
+        args_g = argparse.Namespace(**{**vars(args), "batch": 2})
+        tune_golden(args_g)  # golden fixtures serve batch 2
+    if args.bench:
+        tune_bench(args)
+    if args.models:
+        tune_custom(args)
+    if not (args.golden or args.bench or args.models):
+        ap.error("pick at least one of --golden / --bench / --models")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,361 @@
+"""Route autotuner: measured per-op kernel selection (DeepDive co-design).
+
+The paper's CU architecture is specialized per operator class *and* per
+layer shape; the compiled analogue is that every op in a `CUPlan` has
+several bit-exact routes (reference integer XLA ops, the exactness-gated
+f32 formulations, the Pallas pointwise/depthwise kernels at several tile
+sizes, and the fused-IRB kernel for canonical Body blocks) whose relative
+speed depends on shape and backend. This module *measures* the choice
+instead of hard-coding it:
+
+  for each op (keyed by kind/shape/act_bits/backend):
+      run every eligible candidate once on real intermediate activations
+      -> any candidate that drifts one LSB from the reference op output is
+         DISQUALIFIED (recorded, never timed, never selectable)
+      -> time the survivors (best-of-N wall clock, injectable for tests)
+      -> the fastest bit-exact candidate becomes the cache entry
+
+Block-level, each fusable IRB additionally races the fused Pallas kernel
+against the composite of the per-op winners. The result is a `TunedPlan`
+(see `repro.tune.cache`) that `prepare_qnet` / `compile_stages` consume;
+the whole tuned network is verified bit-exact against `cu.run_qnet` before
+the plan is returned — a tuner bug can fail loudly but never emit a plan
+that changes a logit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compiler as CC
+from repro.core import cu
+from repro.core import graph as G
+from repro.core.qnet import QNet
+from repro.kernels import ops as K
+from repro.tune.cache import (
+    DW_SHIFTS, FUSED_IRB, INT_F32, INT_REF, PALLAS_DW, PALLAS_PW, PER_OP,
+    RouteChoice, TunedPlan, irb_key, op_key,
+)
+
+# small tile sweeps for the Pallas kernels (the kernels clamp each block to
+# the largest divisor that fits, so every config compiles for every shape)
+PW_TILE_SWEEP: Tuple[Tuple[int, int, int], ...] = (
+    (128, 128, 128), (64, 64, 128), (256, 128, 64))
+DW_BLOCK_H_SWEEP: Tuple[int, ...] = (4, 8, 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One runnable route candidate: `fn(x_q) -> y_q` for the full op."""
+
+    route: str
+    params: Dict[str, int]
+    fn: Callable[[jnp.ndarray], jnp.ndarray]
+
+    @property
+    def label(self) -> str:
+        if not self.params:
+            return self.route
+        inner = ",".join(f"{k}={v}" for k, v in sorted(self.params.items()))
+        return f"{self.route}[{inner}]"
+
+
+def wall_measure(repeats: int = 3):
+    """Best-of-N wall-clock timer (the default `measure`).
+
+    One untimed call first — it pays XLA compilation, so timing never
+    includes a trace. Tests inject a deterministic fake instead."""
+
+    def measure(fn, x, candidate: Optional[Candidate] = None) -> float:
+        jax.block_until_ready(fn(x))
+        best = float("inf")
+        for _ in range(max(1, repeats)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    return measure
+
+
+def op_candidates(pop: cu.PreparedQOp, *, interpret: Optional[bool] = None,
+                  include_pallas: bool = True) -> List[Candidate]:
+    """Bit-exact-eligible candidate routes for one prepared op.
+
+    Eligibility is structural here (e.g. `int_f32` only under the 2^24
+    accumulation bound); the tuner still *verifies* every candidate's
+    output against the reference before it may win."""
+    op = pop.spec
+    if op.act == G.HSIGMOID:
+        return []  # the gate runs the float-hsigmoid reference path only
+
+    def routed(name: str):
+        return lambda x: cu._run_qop(x, pop, False, route=(name, {}))
+
+    cands = [Candidate(INT_REF, {}, routed(INT_REF))]
+    if op.kind == G.DW:
+        cands.append(Candidate(DW_SHIFTS, {}, routed(DW_SHIFTS)))
+        if include_pallas:
+            for bh in DW_BLOCK_H_SWEEP:
+                params = {"block_h": bh}
+                cands.append(Candidate(
+                    PALLAS_DW, params,
+                    lambda x, p=dict(params): K.run_dw_qop(
+                        x, pop, interpret=interpret, **p)))
+    elif op.kind in (G.PW, G.DENSE):
+        if pop.f32_exact:
+            cands.append(Candidate(INT_F32, {}, routed(INT_F32)))
+        if include_pallas:
+            for bm, bn, bk in PW_TILE_SWEEP:
+                params = {"block_m": bm, "block_n": bn, "block_k": bk}
+                cands.append(Candidate(
+                    PALLAS_PW, params,
+                    lambda x, p=dict(params): K.run_pw_qop(
+                        x, pop, interpret=interpret, **p)))
+    elif op.kind == G.CONV:
+        if pop.f32_exact:
+            cands.append(Candidate(INT_F32, {}, routed(INT_F32)))
+    return cands
+
+
+def default_route(pop: cu.PreparedQOp, backend: str) -> str:
+    """The route today's heuristics would run for this op on `backend`
+    (what `cu._accumulate` / the TPU `op_kernels` path picks)."""
+    op = pop.spec
+    if op.kind == G.DW:
+        return PALLAS_DW if backend == "tpu" else DW_SHIFTS
+    if op.kind in (G.PW, G.DENSE):
+        if backend == "tpu":
+            return PALLAS_PW
+        return INT_F32 if pop.f32_exact else INT_REF
+    return INT_F32 if pop.f32_exact else INT_REF  # CONV
+
+
+def _select(cands: Sequence[Candidate], x: jnp.ndarray, ref: np.ndarray,
+            measure, default: Optional[str] = None,
+            margin: float = 0.1) -> Optional[RouteChoice]:
+    """Verify-then-time every candidate; return the fastest exact one.
+
+    Exactness is the hard gate: a candidate whose output differs from the
+    reference in any element (or that fails to run) is disqualified before
+    it is ever timed — a drifting route can never be preferred, however
+    fast. Ties break on the candidate label, so selection is deterministic
+    under a deterministic timer.
+
+    Candidates are verified AND timed under `jax.jit`: serving always runs
+    a route inside a jitted stage trace, so eager dispatch overhead must
+    not influence the ranking (and the jitted output is the contract that
+    matters — the hsigmoid requant lesson).
+
+    `default` names the route today's heuristics would pick; a challenger
+    replaces it only by beating it by more than `margin` (isolated per-op
+    timings flatter routes that XLA cannot fuse across op boundaries in a
+    real stage trace, and wall clocks are noisy — within the margin, the
+    proven in-context default is the better bet)."""
+    timed: List[Tuple[float, Candidate]] = []
+    disqualified: List[str] = []
+    for c in cands:
+        fn = jax.jit(c.fn)
+        try:
+            out = np.asarray(jax.block_until_ready(fn(x)))
+        except Exception:  # noqa: BLE001 — a route that cannot run loses
+            disqualified.append(c.label)
+            continue
+        if out.shape != ref.shape or not np.array_equal(out, ref):
+            disqualified.append(c.label)
+            continue
+        timed.append((float(measure(fn, x, c)), c))
+    if not timed:
+        return None
+    timed.sort(key=lambda tc: (tc[0], tc[1].label))
+    us_ref = next((t * 1e6 for t, c in timed if c.route == INT_REF), None)
+    best_t, best = timed[0]
+    if default is not None and best.route != default:
+        default_timed = [(t, c) for t, c in timed if c.route == default]
+        if default_timed and best_t > default_timed[0][0] * (1.0 - margin):
+            best_t, best = default_timed[0]
+    return RouteChoice.make(
+        best.route, best.params, us=best_t * 1e6, us_ref=us_ref,
+        n_candidates=len(cands), disqualified=tuple(disqualified))
+
+
+def tune_qnet(
+    qnet: QNet,
+    plan: Optional[CC.CUPlan] = None,
+    *,
+    batch: int = 8,
+    input_bits: int = 8,
+    seed: int = 0,
+    repeats: int = 3,
+    measure=None,
+    candidates_fn=None,
+    margin: float = 0.1,
+    include_pallas: bool = True,
+    interpret: Optional[bool] = None,
+    backend: Optional[str] = None,
+    verify_end_to_end: bool = True,
+    verbose: bool = False,
+) -> TunedPlan:
+    """Tune every op (and fusable IRB block) of `qnet`; return a TunedPlan.
+
+    Walks the network with the *reference* interpreter so each candidate is
+    verified and timed on the true intermediate activations of its layer.
+    `measure(fn, x, candidate) -> seconds` and `candidates_fn(prepared_op)
+    -> [Candidate]` are injectable (deterministic fakes in tests).
+    `margin` is the selection hysteresis: a challenger route replaces the
+    heuristic default only by beating it by more than this fraction.
+    `verify_end_to_end` re-runs the whole net through the resolved plan and
+    raises on any logit drift — the tuner never returns a plan it has not
+    proven bit-exact.
+    """
+    if isinstance(qnet, cu.PreparedQNet):
+        qnet = qnet.qnet
+    backend = backend or jax.default_backend()
+    plan = plan if plan is not None else CC.compile_net(qnet.spec)
+    pq = cu.prepare_qnet(qnet, input_bits=input_bits)
+    measure = measure or wall_measure(repeats)
+    if candidates_fn is None:
+        def candidates_fn(pop):
+            return op_candidates(pop, interpret=interpret,
+                                 include_pallas=include_pallas)
+    in_hw_by_op = {op.name: in_hw
+                   for _, _, op, in_hw in plan.op_descriptors()}
+    block_in_hw: Dict[str, Optional[int]] = {}
+    for _, block, op, in_hw in plan.op_descriptors():
+        block_in_hw.setdefault(block.name, in_hw)
+
+    spec = qnet.spec
+    x = jax.random.uniform(
+        jax.random.PRNGKey(seed),
+        (batch, spec.input_hw, spec.input_hw, spec.input_ch),
+        minval=-1, maxval=1)
+    in_s, in_z = cu.input_qparams(qnet)
+    y = cu.quantize_input(x, in_s, in_z, input_bits)
+
+    entries: Dict[str, RouteChoice] = {}
+    s, z = in_s, in_z
+    for block in spec.blocks:
+        x_block, s_block, z_block = y, s, z
+        block_routes: Dict[str, Tuple[str, Dict[str, int]]] = {}
+        for op in block.ops:
+            qop = qnet.ops[op.name]  # host reference: the ground truth
+            pop = pq.ops[op.name]
+            ref = np.asarray(jax.block_until_ready(
+                cu._run_qop(y, qop, False)))
+            cands = candidates_fn(pop)
+            if cands:
+                key = op_key(op, in_hw_by_op[op.name], backend)
+                if key in entries:
+                    # an identical-shape op was already measured (repeated
+                    # Body blocks): shape keys exist precisely so tuning
+                    # cost scales with unique shapes, and re-measuring
+                    # would let wall-clock noise flip the recorded winner
+                    choice = entries[key]
+                else:
+                    choice = _select(cands, y, ref, measure,
+                                     default=default_route(pop, backend),
+                                     margin=margin)
+                if choice is not None:
+                    entries[key] = choice
+                    block_routes[op.name] = (choice.route,
+                                             choice.params_dict)
+                    if verbose:
+                        print(f"[tune] {key} -> {choice.route}"
+                              f"{dict(choice.params) or ''} "
+                              f"{choice.us:.1f}us", file=sys.stderr)
+            y = jnp.asarray(ref)
+            s, z = qop.out_scale, qop.out_zp
+            if block.se is not None and block.se_after == op.name:
+                # SE branch runs the reference path (not tuned) — mirror
+                # cu.run_block exactly so downstream activations are true
+                sq = qnet.ops[block.se.squeeze.name]
+                ex = qnet.ops[block.se.excite.name]
+                pooled = jnp.round(jnp.mean(
+                    y.astype(jnp.float32), axis=(1, 2))).astype(jnp.int32)
+                gate_q = cu._run_qop(cu._run_qop(pooled, sq, False), ex, False)
+                y = jnp.round(
+                    y.astype(jnp.float32)
+                    * gate_q[:, None, None, :].astype(jnp.float32)
+                    * ex.out_scale
+                ).astype(jnp.int32)
+        if block.residual:
+            y_s, y_z = qnet.res_q[block.name]
+            qmax = 2 ** block.ops[-1].act_bits - 1
+            y = cu._residual_add(
+                x_block, s_block, z_block, y, s, z, y_s, y_z, qmax)
+            s, z = y_s, y_z
+        # block-level: race the fused-IRB kernel against the composite of
+        # the per-op winners (both verified against the reference output)
+        if K.fusable_irb(block):
+            bkey = irb_key(block, block_in_hw[block.name], backend)
+            if bkey in entries:
+                continue  # identical-shape block already raced
+            ref_block = np.asarray(y)
+            pq_routed = dataclasses.replace(pq, routes=block_routes)
+
+            def per_op_fn(xb, _b=block, _s=s_block, _z=z_block,
+                          _q=pq_routed):
+                return cu.run_block(xb, _b, _q, _s, _z, False,
+                                    interpret=interpret)[0]
+
+            def fused_fn(xb, _b=block, _s=s_block, _z=z_block):
+                return K.run_irb_block(xb, _b, pq, _s, _z,
+                                       interpret=interpret)[0]
+
+            choice = _select(
+                [Candidate(PER_OP, {}, per_op_fn),
+                 Candidate(FUSED_IRB, {}, fused_fn)],
+                x_block, ref_block, measure,
+                default=FUSED_IRB if backend == "tpu" else PER_OP,
+                margin=margin)
+            if choice is not None:
+                entries[bkey] = choice
+        if block.avgpool:
+            y = jnp.round(jnp.mean(
+                y.astype(jnp.float32), axis=(1, 2))).astype(jnp.int32)
+
+    tuned = TunedPlan(
+        backend=backend,
+        nets=(spec.name,),
+        tuned_batch=batch,
+        entries=entries,
+        meta={"jax": jax.__version__, "input_hw": spec.input_hw,
+              "input_bits": input_bits, "seed": seed,
+              "fixed_point": False},
+    )
+
+    if verify_end_to_end:
+        ref_logits = np.asarray(cu.run_qnet(qnet, x, input_bits=input_bits))
+        pq_tuned = cu.prepare_qnet(qnet, input_bits=input_bits, tuned=tuned)
+        got = np.asarray(cu.run_qnet(pq_tuned, x, input_bits=input_bits))
+        if not np.array_equal(got, ref_logits):
+            raise RuntimeError(
+                "tuned plan drifted from run_qnet on the monolithic route — "
+                "refusing to emit it")
+        # the stage-executor route additionally exercises fused-IRB choices
+        from repro.serve.vision.stages import compile_stages
+        ys = x
+        for stage in compile_stages(qnet, plan, tuned=tuned):
+            ys = stage(ys)
+        if not np.array_equal(np.asarray(ys), ref_logits):
+            raise RuntimeError(
+                "tuned plan drifted from run_qnet on the stage-executor "
+                "route — refusing to emit it")
+    return tuned
+
+
+__all__ = [
+    "Candidate",
+    "PW_TILE_SWEEP",
+    "DW_BLOCK_H_SWEEP",
+    "default_route",
+    "wall_measure",
+    "op_candidates",
+    "tune_qnet",
+]

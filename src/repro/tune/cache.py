@@ -1,0 +1,289 @@
+"""Tuning cache: measured per-op route selections as a committed artifact.
+
+A `TunedPlan` is the output of the route autotuner (`repro.tune.autotune`):
+for every operator in a `CUPlan` — keyed by op kind, input shape, act bits
+and backend, NOT by op name — it records which bit-exact route won the
+measurement (reference integer ops, the exactness-gated f32 formulations,
+the Pallas pointwise/depthwise kernels at a specific tile size, or the
+fused-IRB kernel at the block level) and the timings that justified the
+choice.
+
+Shape-based keys make the cache a *portable* artifact: two nets sharing an
+op shape resolve to the same entry, and an op with no entry simply falls
+back to the default (heuristic) route — a cache can be partial, stale, or
+empty without ever being wrong. Backend is part of the key, so a CPU cache
+consulted on TPU resolves nothing and the TPU defaults apply.
+
+The JSON files live under `experiments/tuned/` and are committed, so CI and
+the benchmarks exercise the tuned path deterministically instead of
+re-measuring on every run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Optional, Set, Tuple
+
+from repro.core import compiler as CC
+from repro.core import graph as G
+
+CACHE_VERSION = 1
+
+# route identifiers understood by the routed executor (core.cu._run_qop)
+INT_REF = "int_ref"  # reference XLA integer ops (conv/dot_general, s32)
+INT_F32 = "int_f32"  # exactness-gated f32 formulation (2^24 bound)
+DW_SHIFTS = "dw_shifts"  # K x K unrolled shifted multiplies (depthwise)
+PALLAS_PW = "pallas_pw"  # pointwise-CU Pallas kernel (tile params)
+PALLAS_DW = "pallas_dw"  # row-tiled depthwise Pallas kernel (block_h)
+FUSED_IRB = "fused_irb"  # whole-block fused Body-CU kernel (block entry)
+PER_OP = "per_op"  # block entry: keep the per-op selections
+
+
+def op_key(op: G.OpSpec, in_hw: Optional[int], backend: str) -> str:
+    """Cache key for one operator: kind + full shape + act bits + backend.
+
+    `in_hw` is the op's input spatial size (0 once collapsed), which
+    together with (in_ch, out_ch, kernel, stride) pins the exact workload
+    the timing was measured on."""
+    hw = 0 if in_hw is None else int(in_hw)
+    return (f"{op.kind}:hw{hw}:cin{op.in_ch}:cout{op.out_ch}"
+            f":k{op.kernel}:s{op.stride}:a{op.act_bits}:{backend}")
+
+
+def irb_key(block: G.BlockSpec, in_hw: Optional[int], backend: str) -> str:
+    """Cache key for a whole fusable IRB (expand -> dw -> project) block."""
+    e, d, p = block.ops
+    hw = 0 if in_hw is None else int(in_hw)
+    return (f"irb:hw{hw}:c{e.in_ch}x{e.out_ch}x{p.out_ch}"
+            f":k{d.kernel}:s{d.stride}:a{p.act_bits}"
+            f":r{int(block.residual)}:{backend}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteChoice:
+    """One measured selection: the winning route and the evidence."""
+
+    route: str
+    params: Tuple[Tuple[str, int], ...] = ()  # sorted (name, value) pairs
+    us: float = 0.0  # best measured wall time of the winner
+    us_ref: Optional[float] = None  # the reference route's time, if timed
+    n_candidates: int = 0
+    disqualified: Tuple[str, ...] = ()  # candidates that drifted vs reference
+
+    @property
+    def params_dict(self) -> Dict[str, int]:
+        return dict(self.params)
+
+    @staticmethod
+    def make(route: str, params: Optional[Dict[str, int]] = None,
+             **kw) -> "RouteChoice":
+        items = tuple(sorted((params or {}).items()))
+        return RouteChoice(route=route, params=items, **kw)
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["params"] = dict(self.params)
+        d["disqualified"] = list(self.disqualified)
+        return d
+
+    @staticmethod
+    def from_json(d: Dict) -> "RouteChoice":
+        return RouteChoice(
+            route=d["route"],
+            params=tuple(sorted(
+                (str(k), int(v)) for k, v in (d.get("params") or {}).items())),
+            us=float(d.get("us", 0.0)),
+            us_ref=(None if d.get("us_ref") is None else float(d["us_ref"])),
+            n_candidates=int(d.get("n_candidates", 0)),
+            disqualified=tuple(d.get("disqualified", ())),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedPlan:
+    """Measured per-op (and per-fusable-block) route selections.
+
+    `entries` maps `op_key`/`irb_key` strings to the winning `RouteChoice`.
+    `resolve` projects the shape-keyed cache onto a concrete net.
+    """
+
+    backend: str
+    nets: Tuple[str, ...]
+    tuned_batch: int
+    entries: Dict[str, RouteChoice]
+    meta: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    # ------------------------------------------------------------------
+    # projection onto a concrete net
+    # ------------------------------------------------------------------
+
+    def resolve(
+        self, qnet, plan: Optional[CC.CUPlan] = None,
+        backend: Optional[str] = None,
+    ) -> Tuple[Dict[str, Tuple[str, Dict[str, int]]], Set[str]]:
+        """Project the cache onto `qnet` (anything with a `.spec` NetSpec).
+
+        Returns (op_routes, fused_blocks):
+          * op_routes: op name -> (route, params) for every op with a
+            matching cache entry on this backend,
+          * fused_blocks: names of fusable IRB blocks whose block-level
+            entry selected the fused kernel.
+        Ops/blocks without entries are absent — callers fall back to the
+        default route. Entries recorded on a different backend never match
+        (the backend is part of the key)."""
+        import jax
+
+        from repro.kernels.ops import fusable_irb
+
+        spec = qnet.spec if hasattr(qnet, "spec") else qnet
+        if plan is None:
+            plan = CC.compile_net(spec)
+        backend = backend or jax.default_backend()
+        op_routes: Dict[str, Tuple[str, Dict[str, int]]] = {}
+        block_in_hw: Dict[str, Optional[int]] = {}
+        for _, block, op, in_hw in plan.op_descriptors():
+            block_in_hw.setdefault(block.name, in_hw)
+            entry = self.entries.get(op_key(op, in_hw, backend))
+            if entry is not None:
+                op_routes[op.name] = (entry.route, entry.params_dict)
+        fused: Set[str] = set()
+        for block in spec.blocks:
+            if not fusable_irb(block):
+                continue
+            entry = self.entries.get(
+                irb_key(block, block_in_hw.get(block.name), backend))
+            if entry is not None and entry.route == FUSED_IRB:
+                fused.add(block.name)
+        return op_routes, fused
+
+    def resolve_with_defaults(
+        self, qnet, plan: Optional[CC.CUPlan] = None,
+        backend: Optional[str] = None, *,
+        op_kernels: bool = False, body_fast_path: bool = False,
+    ) -> Tuple[Dict[str, Tuple[str, Dict[str, int]]], Set[str]]:
+        """`resolve`, then fill cache MISSES with the heuristic default.
+
+        This is the 'ops with no cache entry keep today's defaults'
+        contract for stage compilation: when the heuristics would run the
+        per-op Pallas kernels (`op_kernels` resolved on, i.e. TPU),
+        uncovered DW/PW/DENSE ops get the default-tile Pallas route
+        instead of silently degrading to the XLA reference formulation;
+        when `body_fast_path` is on, fusable IRB blocks with no block
+        entry at all keep the fused kernel (a block whose entry says
+        `per_op` was measured and stays per-op). Off-TPU the defaults are
+        exactly what `cu.run_block` does for an unrouted op, so no fill
+        is needed."""
+        import jax
+
+        from repro.kernels.ops import fusable_irb
+
+        spec = qnet.spec if hasattr(qnet, "spec") else qnet
+        if plan is None:
+            plan = CC.compile_net(spec)
+        backend = backend or jax.default_backend()
+        op_routes, fused = self.resolve(spec, plan, backend=backend)
+        block_in_hw: Dict[str, Optional[int]] = {}
+        for _, block, op, in_hw in plan.op_descriptors():
+            block_in_hw.setdefault(block.name, in_hw)
+            if not op_kernels or op.name in op_routes:
+                continue
+            if op.act == G.HSIGMOID:
+                continue  # the gate stays on the reference path
+            if op.kind == G.DW:
+                op_routes[op.name] = (PALLAS_DW, {})
+            elif op.kind in (G.PW, G.DENSE):
+                op_routes[op.name] = (PALLAS_PW, {})
+        if body_fast_path:
+            for block in spec.blocks:
+                if not fusable_irb(block) or block.name in fused:
+                    continue
+                if irb_key(block, block_in_hw.get(block.name),
+                           backend) not in self.entries:
+                    fused.add(block.name)
+        return op_routes, fused
+
+    def coverage(self, qnet, plan: Optional[CC.CUPlan] = None,
+                 backend: Optional[str] = None) -> float:
+        """Fraction of this net's tunable ops with a cache entry."""
+        spec = qnet.spec if hasattr(qnet, "spec") else qnet
+        if plan is None:
+            plan = CC.compile_net(spec)
+        op_routes, _ = self.resolve(spec, plan, backend=backend)
+        tunable = [op for _, _, op, _ in plan.op_descriptors()
+                   if op.act != G.HSIGMOID]
+        return len(op_routes) / len(tunable) if tunable else 0.0
+
+    # ------------------------------------------------------------------
+    # merge / persist
+    # ------------------------------------------------------------------
+
+    def merge(self, other: "TunedPlan") -> "TunedPlan":
+        """Union of two caches; on a key collision the faster entry wins."""
+        if self.backend != other.backend:
+            raise ValueError(
+                f"cannot merge caches for different backends: "
+                f"{self.backend!r} vs {other.backend!r}")
+        entries = dict(self.entries)
+        for key, choice in other.entries.items():
+            if key not in entries or choice.us < entries[key].us:
+                entries[key] = choice
+        return TunedPlan(
+            backend=self.backend,
+            nets=tuple(sorted(set(self.nets) | set(other.nets))),
+            tuned_batch=self.tuned_batch,
+            entries=entries,
+            meta={**self.meta, **other.meta},
+        )
+
+    def to_json(self) -> Dict:
+        return {
+            "version": CACHE_VERSION,
+            "backend": self.backend,
+            "nets": list(self.nets),
+            "tuned_batch": self.tuned_batch,
+            "meta": dict(self.meta),
+            "entries": {k: self.entries[k].to_json()
+                        for k in sorted(self.entries)},
+        }
+
+    @staticmethod
+    def from_json(d: Dict) -> "TunedPlan":
+        version = d.get("version")
+        if version != CACHE_VERSION:
+            raise ValueError(
+                f"tuning cache version {version!r} != {CACHE_VERSION} — "
+                f"regenerate with `python -m repro.tune`")
+        return TunedPlan(
+            backend=d["backend"],
+            nets=tuple(d.get("nets", ())),
+            tuned_batch=int(d.get("tuned_batch", 0)),
+            entries={k: RouteChoice.from_json(v)
+                     for k, v in d.get("entries", {}).items()},
+            meta=dict(d.get("meta", {})),
+        )
+
+
+def save_tuned(plan: TunedPlan, path: str) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(plan.to_json(), f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def load_tuned(path: str) -> TunedPlan:
+    with open(path) as f:
+        return TunedPlan.from_json(json.load(f))
+
+
+__all__ = [
+    "CACHE_VERSION",
+    "INT_REF", "INT_F32", "DW_SHIFTS", "PALLAS_PW", "PALLAS_DW",
+    "FUSED_IRB", "PER_OP",
+    "op_key", "irb_key",
+    "RouteChoice", "TunedPlan",
+    "save_tuned", "load_tuned",
+]

@@ -1,6 +1,16 @@
 """Regenerate the frozen golden conformance fixtures under tests/golden/.
 
-    PYTHONPATH=src python -m tests.regen_golden
+    PYTHONPATH=src python -m tests.regen_golden            # rewrite fixtures
+    PYTHONPATH=src python -m tests.regen_golden --check    # no-write drift CI
+
+`--check` recomputes every fixture's golden vectors IN MEMORY — from the
+frozen `.qnet` and the stored input batch, through the reference
+interpreter — and diffs them against the committed `.npz`, writing
+nothing. Any mismatch (integer-datapath drift) prints a per-stage delta
+summary and exits non-zero; CI runs this as its own step. The `.qnet`
+itself is the frozen input of the check, not recomputed: float calibration
+legitimately varies across BLAS builds, while the integer datapath must be
+bit-stable everywhere — which is exactly what this gate pins.
 
 Each case freezes BOTH the quantized network and the golden vectors:
 
@@ -75,6 +85,61 @@ def fixture_paths(model: str, bits: int):
     return base + ".qnet", base + ".npz"
 
 
+def check() -> int:
+    """Recompute fixtures in memory and diff against tests/golden/.
+
+    Returns the number of drifted/missing cases (0 == green)."""
+    from repro.core import qnet as Q
+
+    failures = 0
+    for model, bits in CASES:
+        qnet_path, npz_path = fixture_paths(model, bits)
+        tag = f"{model} act{bits}"
+        if not (os.path.exists(qnet_path) and os.path.exists(npz_path)):
+            print(f"[golden-check] {tag}: MISSING fixture files")
+            failures += 1
+            continue
+        qnet = Q.load_qnet(qnet_path, build_net(model, bits))
+        fix = np.load(npz_path)
+        cus, acts, logits = golden_vectors(qnet, fix["input"])
+        bad = []
+        n_stored = sum(1 for k in fix.files if k.startswith("stage"))
+        if n_stored != len(cus):
+            bad.append(f"stage count {len(cus)} != stored {n_stored}")
+        for i, (cu_name, act) in enumerate(zip(cus, acts)):
+            key = f"stage{i}_{cu_name}"
+            if key not in fix.files:
+                bad.append(f"{key}: absent from committed npz")
+                continue
+            stored = fix[key].astype(np.int32)
+            if act.shape != stored.shape:
+                bad.append(f"{key}: shape {act.shape} != stored "
+                           f"{stored.shape}")
+            elif not np.array_equal(act, stored):
+                n = int(np.sum(act != stored))
+                d = int(np.max(np.abs(act - stored)))
+                bad.append(f"{key}: {n} elems differ (max |delta| {d} LSB)")
+        if logits.shape != fix["logits"].shape:
+            bad.append(f"logits: shape {logits.shape} != stored "
+                       f"{fix['logits'].shape}")
+        elif not np.array_equal(logits, fix["logits"]):
+            n = int(np.sum(logits != fix["logits"]))
+            d = float(np.max(np.abs(logits - fix["logits"])))
+            bad.append(f"logits: {n} elems differ (max |delta| {d:.3g})")
+        if bad:
+            failures += 1
+            print(f"[golden-check] {tag}: DRIFT")
+            for line in bad:
+                print(f"  {line}")
+        else:
+            print(f"[golden-check] {tag}: ok ({len(cus)} stages + logits)")
+    if failures:
+        print(f"[golden-check] FAILED: {failures}/{len(CASES)} cases "
+              f"drifted — if the semantics change is intentional, "
+              f"regenerate with `python -m tests.regen_golden`")
+    return failures
+
+
 def main() -> None:
     os.makedirs(GOLDEN_DIR, exist_ok=True)
     rng_img = jax.random.PRNGKey(7)
@@ -97,4 +162,14 @@ def main() -> None:
 
 
 if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="no-write mode: recompute fixtures in memory and "
+                         "diff against tests/golden/ (exit 1 on drift)")
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(1 if check() else 0)
     main()

@@ -1,0 +1,335 @@
+"""Route autotuner: cache round-trip, deterministic selection, exactness
+disqualification, and tuned-vs-default stage-executor parity on the frozen
+golden fixtures.
+
+The timing side is injectable (`measure(fn, x, candidate)`), so selection
+logic is tested deterministically with a fake timer; the committed caches
+under `experiments/tuned/` are exercised against the golden vectors so CI
+runs the tuned serving path without re-measuring anything.
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compiler as CC, cu, graph as G, qnet as Q
+from repro.models.layers import make_calibrated_qnet
+from repro.serve.vision import VisionEngine, compile_stages
+from repro.tune import (
+    Candidate,
+    RouteChoice,
+    TunedPlan,
+    load_tuned,
+    op_candidates,
+    op_key,
+    save_tuned,
+    tune_qnet,
+)
+from tests.regen_golden import CASES, build_net, fixture_paths
+
+TUNED_DIR = os.path.join(os.path.dirname(__file__), "..",
+                         "experiments", "tuned")
+
+
+def _tiny_net() -> G.NetSpec:
+    """Stem conv + one residual IRB + tail + classifier: every op kind and
+    a fusable Body block, small enough to tune in seconds."""
+    blocks = (
+        G.BlockSpec("stem", (
+            G.OpSpec("stem/conv", G.CONV, 3, 8, 3, 2, G.RELU6, 8, 4),)),
+        G.BlockSpec("b1", (
+            G.OpSpec("b1/expand", G.PW, 8, 16, 1, 1, G.RELU6, 4, 4),
+            G.OpSpec("b1/dw", G.DW, 16, 16, 3, 1, G.RELU6, 4, 4),
+            G.OpSpec("b1/project", G.PW, 16, 8, 1, 1, G.NONE, 4, 4),
+        ), residual=True),
+        G.BlockSpec("tail", (
+            G.OpSpec("tail/pw", G.PW, 8, 16, 1, 1, G.RELU6, 4, 4),),
+            avgpool=True),
+        G.BlockSpec("classifier", (
+            G.OpSpec("classifier/fc", G.DENSE, 16, 7, 1, 1, G.NONE, 4, 4),)),
+    )
+    return G.NetSpec(name="tiny", blocks=blocks, input_hw=16, input_ch=3,
+                     num_classes=7)
+
+
+@pytest.fixture(scope="module")
+def tiny_qnet():
+    return make_calibrated_qnet(_tiny_net())
+
+
+def _fake_measure(times):
+    """Deterministic timer: seconds per route name (default 1.0)."""
+
+    def measure(fn, x, candidate=None):
+        route = candidate.route if candidate is not None else None
+        return times.get(route, 1.0)
+
+    return measure
+
+
+# ---------------------------------------------------------------------------
+# cache round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_cache_roundtrip(tmp_path):
+    plan = TunedPlan(
+        backend="cpu", nets=("tiny",), tuned_batch=4,
+        entries={
+            "dw:hw8:cin16:cout16:k3:s1:a4:cpu": RouteChoice.make(
+                "dw_shifts", us=12.5, us_ref=600.0, n_candidates=5),
+            "pw:hw8:cin8:cout16:k1:s1:a4:cpu": RouteChoice.make(
+                "pallas_pw", {"block_m": 64, "block_n": 128, "block_k": 128},
+                us=20.0, n_candidates=5, disqualified=("evil",)),
+        },
+        meta={"jax": jax.__version__})
+    path = tmp_path / "cache.json"
+    save_tuned(plan, str(path))
+    loaded = load_tuned(str(path))
+    assert loaded == plan
+    assert loaded.entries[
+        "pw:hw8:cin8:cout16:k1:s1:a4:cpu"].params_dict == {
+            "block_m": 64, "block_n": 128, "block_k": 128}
+
+
+def test_cache_version_mismatch_raises(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text('{"version": 999, "backend": "cpu"}')
+    with pytest.raises(ValueError, match="version"):
+        load_tuned(str(path))
+
+
+def test_merge_prefers_faster_entry():
+    key = "dw:hw8:cin16:cout16:k3:s1:a4:cpu"
+    a = TunedPlan("cpu", ("a",), 4,
+                  {key: RouteChoice.make("int_ref", us=100.0)})
+    b = TunedPlan("cpu", ("b",), 4,
+                  {key: RouteChoice.make("dw_shifts", us=10.0)})
+    merged = a.merge(b)
+    assert merged.entries[key].route == "dw_shifts"
+    assert merged.nets == ("a", "b")
+    with pytest.raises(ValueError):
+        a.merge(TunedPlan("tpu", ("c",), 4, {}))
+
+
+# ---------------------------------------------------------------------------
+# deterministic selection under a fake timer
+# ---------------------------------------------------------------------------
+
+
+def test_selection_deterministic_under_fake_timer(tiny_qnet):
+    times = {"int_ref": 5.0, "dw_shifts": 0.5, "int_f32": 0.25,
+             "pallas_pw": 9.0, "pallas_dw": 9.0,
+             "per_op": 1.0, "fused_irb": 2.0}
+    plans = [tune_qnet(tiny_qnet, batch=2, measure=_fake_measure(times))
+             for _ in range(2)]
+    assert plans[0] == plans[1]
+    routes = {k: v.route for k, v in plans[0].entries.items()}
+    # the fake timer fully determines the winners
+    for key, route in routes.items():
+        if key.startswith("dw:"):
+            assert route == "dw_shifts"
+        elif key.startswith("irb:"):
+            assert route == "per_op"  # per_op (1.0) beats fused_irb (2.0)
+        elif key.startswith(("pw:", "dense:")):
+            assert route in ("int_f32", "int_ref")  # f32 only when exact
+
+
+def test_fused_irb_selected_when_fastest(tiny_qnet):
+    times = {"per_op": 5.0, "fused_irb": 0.5}
+    plan = tune_qnet(tiny_qnet, batch=2, measure=_fake_measure(times))
+    irb_entries = {k: v for k, v in plan.entries.items()
+                   if k.startswith("irb:")}
+    assert irb_entries and all(
+        v.route == "fused_irb" for v in irb_entries.values())
+    # the stage executors honor the block-level choice and stay bit-exact
+    x = jnp.asarray(np.random.default_rng(0).uniform(
+        -1, 1, (2, 16, 16, 3)).astype(np.float32))
+    ref = np.asarray(cu.run_qnet(tiny_qnet, x))
+    y = x
+    for stage in compile_stages(tiny_qnet, tuned=plan):
+        y = stage(y)
+    np.testing.assert_array_equal(np.asarray(y), ref)
+
+
+# ---------------------------------------------------------------------------
+# exactness disqualification
+# ---------------------------------------------------------------------------
+
+
+def test_wrong_candidate_never_selected(tiny_qnet):
+    """A deliberately-drifting route that 'times' fastest must be
+    disqualified at verification, never selected."""
+
+    def evil_candidates(pop):
+        cands = op_candidates(pop)
+        if cands:
+            base = cands[0].fn
+            cands.append(Candidate(
+                "evil", {}, lambda x, f=base: f(x) + jnp.int32(1)))
+        return cands
+
+    times = {"evil": 0.0}  # fastest by far, if it were ever timed
+    plan = tune_qnet(tiny_qnet, batch=2, measure=_fake_measure(times),
+                     candidates_fn=evil_candidates)
+    assert plan.entries
+    for key, choice in plan.entries.items():
+        assert choice.route != "evil", key
+        if not key.startswith("irb:"):
+            assert "evil" in choice.disqualified, key
+
+
+def test_unrunnable_candidate_is_disqualified(tiny_qnet):
+    def broken_candidates(pop):
+        cands = op_candidates(pop)
+        if cands:
+            def boom(x):
+                raise RuntimeError("broken route")
+            cands.append(Candidate("broken", {}, boom))
+        return cands
+
+    plan = tune_qnet(tiny_qnet, batch=2,
+                     measure=_fake_measure({"broken": 0.0}),
+                     candidates_fn=broken_candidates)
+    for key, choice in plan.entries.items():
+        assert choice.route != "broken", key
+
+
+# ---------------------------------------------------------------------------
+# resolve / fallback semantics
+# ---------------------------------------------------------------------------
+
+
+def test_empty_cache_resolves_nothing_and_serves_default(tiny_qnet):
+    empty = TunedPlan("cpu", ("tiny",), 2, {})
+    op_routes, fused = empty.resolve(tiny_qnet)
+    assert op_routes == {} and fused == set()
+    x = jnp.asarray(np.random.default_rng(1).uniform(
+        -1, 1, (2, 16, 16, 3)).astype(np.float32))
+    ref = np.asarray(cu.run_qnet(tiny_qnet, x))
+    y = x
+    for stage in compile_stages(tiny_qnet, tuned=empty):
+        y = stage(y)
+    np.testing.assert_array_equal(np.asarray(y), ref)
+
+
+def test_resolve_with_defaults_fills_misses_with_heuristics(tiny_qnet):
+    """A partial cache must never degrade a route below the non-tuned
+    heuristics: on TPU (op_kernels/body_fast_path on) uncovered ops keep
+    the default-tile Pallas routes and uncovered fusable blocks keep the
+    fused kernel; the one covered op keeps its measured route."""
+    plan = CC.compile_net(tiny_qnet.spec)
+    descs = plan.op_descriptors()
+    _, _, dw_op, dw_hw = next(d for d in descs if d[2].kind == G.DW)
+    cache = TunedPlan("tpu", ("tiny",), 2, {
+        op_key(dw_op, dw_hw, "tpu"): RouteChoice.make("dw_shifts", us=1.0)})
+    op_routes, fused = cache.resolve_with_defaults(
+        tiny_qnet, plan, backend="tpu", op_kernels=True,
+        body_fast_path=True)
+    assert op_routes[dw_op.name] == ("dw_shifts", {})
+    for _, _, op, _ in descs:
+        if op.name != dw_op.name and op.kind in (G.PW, G.DENSE):
+            assert op_routes[op.name] == ("pallas_pw", {})
+    assert "b1" in fused  # fusable, no block entry -> heuristic fused
+    # off-TPU (heuristics off) nothing is filled: cu defaults apply
+    op_routes_cpu, fused_cpu = cache.resolve_with_defaults(
+        tiny_qnet, plan, backend="cpu")
+    assert op_routes_cpu == {} and fused_cpu == set()
+
+
+def test_foreign_backend_cache_resolves_nothing(tiny_qnet):
+    plan = CC.compile_net(tiny_qnet.spec)
+    descs = plan.op_descriptors()
+    _, _, op, in_hw = next(d for d in descs if d[2].kind == G.DW)
+    foreign = TunedPlan("tpu", ("tiny",), 2, {
+        op_key(op, in_hw, "tpu"): RouteChoice.make("dw_shifts", us=1.0)})
+    op_routes, _ = foreign.resolve(tiny_qnet, plan, backend="cpu")
+    assert op_routes == {}
+
+
+def test_tuned_refuses_fixed_point_and_unprepared(tiny_qnet):
+    plan = TunedPlan("cpu", ("tiny",), 2, {})
+    with pytest.raises(ValueError, match="fixed_point"):
+        compile_stages(tiny_qnet, tuned=plan, fixed_point=True)
+    with pytest.raises(ValueError, match="prepare"):
+        compile_stages(tiny_qnet, tuned=plan, prepare=False)
+
+
+def test_plan_carries_tuned_to_stage_compiler(tiny_qnet):
+    """compile_net(tuned=...) rides the plan into compile_stages."""
+    tuned = tune_qnet(tiny_qnet, batch=2,
+                      measure=_fake_measure({"dw_shifts": 0.1}))
+    plan = CC.compile_net(tiny_qnet.spec, tuned=tuned)
+    stages = compile_stages(tiny_qnet, plan)
+    assert all(s._tuned for s in stages)
+
+
+# ---------------------------------------------------------------------------
+# committed caches: tuned-vs-default parity on the frozen goldens
+# ---------------------------------------------------------------------------
+
+
+def _golden_cache_path(model: str, bits: int) -> str:
+    return os.path.join(TUNED_DIR, f"{model}_act{bits}_cpu.json")
+
+
+@pytest.fixture(scope="module", params=CASES,
+                ids=lambda c: f"{c[0]}_act{c[1]}")
+def golden_case(request):
+    model, bits = request.param
+    cache_path = _golden_cache_path(model, bits)
+    if jax.default_backend() != "cpu":
+        pytest.skip("committed caches are CPU-tuned")
+    if not os.path.exists(cache_path):
+        pytest.skip(f"no committed cache {cache_path}")
+    qnet_path, npz_path = fixture_paths(model, bits)
+    qnet = Q.load_qnet(qnet_path, build_net(model, bits))
+    fix = np.load(npz_path)
+    return qnet, fix, load_tuned(cache_path)
+
+
+def test_committed_cache_covers_golden_net(golden_case):
+    qnet, fix, tuned = golden_case
+    assert tuned.coverage(qnet) == 1.0  # tuned on exactly this net
+
+
+def test_tuned_prepared_run_qnet_matches_golden(golden_case):
+    qnet, fix, tuned = golden_case
+    pq = cu.prepare_qnet(qnet, tuned=tuned)
+    assert pq.routes  # the tuned routes actually resolved
+    got = np.asarray(cu.run_qnet(pq, jnp.asarray(fix["input"])))
+    np.testing.assert_array_equal(got, fix["logits"])
+
+
+def test_tuned_stage_executors_match_golden_per_stage(golden_case):
+    qnet, fix, tuned = golden_case
+    stages = compile_stages(qnet, tuned=tuned)
+    acts = [fix[k] for k in sorted(f for f in fix.files
+                                   if f.startswith("stage"))]
+    y = jnp.asarray(fix["input"])
+    for i, stage in enumerate(stages):
+        y = stage(y)
+        if i < len(stages) - 1:
+            np.testing.assert_array_equal(
+                np.asarray(y), acts[i].astype(np.int32),
+                err_msg=stage.spec.cu)
+    np.testing.assert_array_equal(np.asarray(y), fix["logits"])
+
+
+def test_tuned_engine_parity_with_default_engine(golden_case):
+    """Stage-executor parity tuned-vs-default: identical logits for the
+    same requests through both engines."""
+    qnet, fix, tuned = golden_case
+    x = fix["input"]
+    default_eng = VisionEngine(qnet, buckets=(x.shape[0],))
+    tuned_eng = VisionEngine(qnet, buckets=(x.shape[0],), tuned=tuned)
+    rids_d = [default_eng.submit(img) for img in x]
+    rids_t = [tuned_eng.submit(img) for img in x]
+    res_d, res_t = default_eng.run(), tuned_eng.run()
+    got_d = np.stack([res_d[r].logits for r in rids_d])
+    got_t = np.stack([res_t[r].logits for r in rids_t])
+    np.testing.assert_array_equal(got_t, got_d)
+    np.testing.assert_array_equal(got_t, fix["logits"])

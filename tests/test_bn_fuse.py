@@ -1,6 +1,5 @@
 """BN fusing (Eqs. 3-6): exactness + the ~4% op-reduction claim."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -23,22 +22,26 @@ def test_bn_fuse_exact(kind):
     key = jax.random.PRNGKey(0)
     if kind == "conv":
         w = jax.random.normal(key, (3, 3, 8, 16))
-        apply = lambda x, w, b: layers.conv2d(x, w) + b
+        def apply(x, w, b):
+            return layers.conv2d(x, w) + b
         x = jax.random.normal(key, (2, 6, 6, 8))
         c = 16
     elif kind == "dw":
         w = jax.random.normal(key, (3, 3, 1, 8))
-        apply = lambda x, w, b: layers.depthwise_conv2d(x, w) + b
+        def apply(x, w, b):
+            return layers.depthwise_conv2d(x, w) + b
         x = jax.random.normal(key, (2, 6, 6, 8))
         c = 8
     elif kind == "pw":
         w = jax.random.normal(key, (8, 16))
-        apply = lambda x, w, b: layers.pointwise_conv2d(x, w) + b
+        def apply(x, w, b):
+            return layers.pointwise_conv2d(x, w) + b
         x = jax.random.normal(key, (2, 6, 6, 8))
         c = 16
     else:
         w = jax.random.normal(key, (8, 16))
-        apply = lambda x, w, b: x @ w + b
+        def apply(x, w, b):
+            return x @ w + b
         x = jax.random.normal(key, (4, 8))
         c = 16
     b = jax.random.normal(key, (c,))

@@ -1,5 +1,4 @@
 """Flash-decode attention Pallas kernel vs oracle (GQA grouping + int8 KV)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

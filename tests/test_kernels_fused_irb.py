@@ -13,11 +13,13 @@ def _mk(c, e, co, seed=0):
     w1 = jnp.asarray(rng.integers(-7, 8, (c, e)), jnp.int32)
     w2 = jnp.asarray(rng.integers(-7, 8, (3, 3, e)), jnp.int32)
     w3 = jnp.asarray(rng.integers(-7, 8, (e, co)), jnp.int32)
-    mk = lambda n, z=False: (
-        jnp.asarray(rng.uniform(0.001, 0.01, n), jnp.float32),
-        jnp.zeros(n, jnp.float32) if z else jnp.asarray(rng.uniform(0, 1, n), jnp.float32),
-        jnp.asarray(rng.integers(-2, 3, n), jnp.int32),
-    )
+    def mk(n, z=False):
+        return (
+            jnp.asarray(rng.uniform(0.001, 0.01, n), jnp.float32),
+            jnp.zeros(n, jnp.float32) if z
+            else jnp.asarray(rng.uniform(0, 1, n), jnp.float32),
+            jnp.asarray(rng.integers(-2, 3, n), jnp.int32),
+        )
     return w1, w2, w3, mk(e), mk(e, True), mk(co, True)
 
 

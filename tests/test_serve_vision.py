@@ -293,7 +293,7 @@ def test_edf_orders_batches(mnv2_qnet):
     eng = VisionEngine(mnv2_qnet, buckets=(2,))
     img = _images(1)[0]
     now = time.perf_counter()
-    loose = eng.submit(img, deadline_s=now + 1000)
+    eng.submit(img, deadline_s=now + 1000)  # loose deadline
     tight = eng.submit(img, deadline_s=now + 100)
     nodeadline = eng.submit(img)
     results = eng.run()
