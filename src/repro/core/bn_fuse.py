@@ -22,13 +22,42 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 
 
+# the one epsilon every BN formulation shares: batch-stats normalization
+# (models/layers.py float pre-training), running-stat folding, and Eq. 4
+# fusion must all divide by the same (sigma^2 + eps)^(1/2) or the float
+# phase trains a subtly different network than fusion deploys
+BN_EPS = 1e-5
+
+
 @dataclasses.dataclass
 class BNParams:
     gamma: jnp.ndarray  # BN weight
     beta: jnp.ndarray  # BN bias (xi in the paper)
     mean: jnp.ndarray  # running mu
     var: jnp.ndarray  # running sigma^2
-    eps: float = 1e-5
+    eps: float = BN_EPS
+
+    @classmethod
+    def from_tree(cls, tree, eps: float = BN_EPS) -> "BNParams":
+        """Build from the {'gamma','beta','mean','var'} dict leaves a
+        parameter pytree carries (the training-side storage format)."""
+        return cls(gamma=tree["gamma"], beta=tree["beta"],
+                   mean=tree["mean"], var=tree["var"], eps=eps)
+
+    def as_tree(self):
+        """Inverse of `from_tree` (eps is a constant, not a leaf)."""
+        return {"gamma": self.gamma, "beta": self.beta,
+                "mean": self.mean, "var": self.var}
+
+    @staticmethod
+    def init_tree(channels: int, dtype=jnp.float32):
+        """Identity-BN leaves for a fresh op: gamma=1, beta=0, N(0,1) stats."""
+        return {
+            "gamma": jnp.ones((channels,), dtype),
+            "beta": jnp.zeros((channels,), dtype),
+            "mean": jnp.zeros((channels,), dtype),
+            "var": jnp.ones((channels,), dtype),
+        }
 
 
 def fuse_bn(
@@ -66,4 +95,4 @@ def bn_op_count(num_channels: int, spatial: int) -> int:
     return 2 * num_channels * spatial
 
 
-__all__ = ["BNParams", "fuse_bn", "bn_apply", "bn_op_count"]
+__all__ = ["BN_EPS", "BNParams", "fuse_bn", "bn_apply", "bn_op_count"]

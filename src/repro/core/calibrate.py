@@ -30,9 +30,10 @@ class ActObserver:
     momentum: Optional[float] = None  # None = true min/max; else EMA
 
     @staticmethod
-    def init(shape=()) -> "ActObserver":
+    def init(shape=(), momentum: Optional[float] = None) -> "ActObserver":
         return ActObserver(
-            min_val=jnp.full(shape, jnp.inf), max_val=jnp.full(shape, -jnp.inf)
+            min_val=jnp.full(shape, jnp.inf), max_val=jnp.full(shape, -jnp.inf),
+            momentum=momentum,
         )
 
     def update(self, x: jnp.ndarray, cfg: QuantConfig) -> "ActObserver":
@@ -71,10 +72,18 @@ def calibrate(
     params,
     batches: Iterable,
     act_cfg: QuantConfig,
+    observers: Optional[Dict[str, ActObserver]] = None,
+    momentum: Optional[float] = None,
 ) -> Dict[str, ActObserver]:
     """Run `apply_fn(params, batch)` over batches; it must return a dict of
-    named intermediate activations. Returns per-name observers."""
-    observers: Dict[str, ActObserver] = {}
+    named intermediate activations. Returns per-name observers.
+
+    `observers` continues a previous calibration round instead of starting
+    fresh, and `momentum` seeds new observers as EMA trackers — together
+    they are the *online* quantization mode: the QAT trainer re-drives
+    calibration every epoch and the ranges follow the shifting activations
+    rather than being pinned to the first epoch's extremes."""
+    observers = dict(observers) if observers else {}
     for batch in batches:
         acts = apply_fn(params, batch)
         for name, x in acts.items():
@@ -83,7 +92,7 @@ def calibrate(
                 shape = () if act_cfg.channel_axis is None else (
                     x.shape[act_cfg.channel_axis],
                 )
-                obs = ActObserver.init(shape)
+                obs = ActObserver.init(shape, momentum=momentum)
             observers[name] = obs.update(x, act_cfg)
     return observers
 

@@ -184,11 +184,33 @@ class NetSpec:
         return total
 
 
+def with_act_bits(net: NetSpec, act_bits: int) -> NetSpec:
+    """The same network at a different activation bit-width.
+
+    Rewrites `act_bits` on every plain convolutional operator — the knob the
+    QAT anneal schedule turns (train at 8-bit activations first, then step
+    down to the deployment BW, per the paper's UInt4 recipe). Weight
+    bit-widths and SE gates are left untouched: the gate output range is
+    exactly [0, 1] regardless of BW, and `SESpec` derives both widths from
+    one field. Op names (and therefore param trees) are unchanged, so one
+    set of float params serves every anneal stage.
+    """
+    blocks = tuple(
+        dataclasses.replace(
+            b, ops=tuple(dataclasses.replace(op, act_bits=act_bits)
+                         for op in b.ops))
+        for b in net.blocks
+    )
+    return dataclasses.replace(
+        net, name=f"{net.name}_act{act_bits}", blocks=blocks)
+
+
 __all__ = [
     "OpSpec",
     "SESpec",
     "BlockSpec",
     "NetSpec",
+    "with_act_bits",
     "CONV",
     "DW",
     "PW",

@@ -172,9 +172,52 @@ def _quantize_op(qops, params, op: G.OpSpec, in_scale, in_zp, observers):
 # ---------------------------------------------------------------------------
 
 
-def save_qnet(qnet: QNet, path: str) -> None:
+def build_netspec(build: Dict) -> G.NetSpec:
+    """Rebuild a NetSpec from a `.qnet` build record (see `save_qnet`).
+
+    The record names the model family plus its builder knobs, so a frozen
+    artifact is self-describing: `load_qnet(path)` with no NetSpec in hand
+    reconstructs the graph the weights were quantized against. An
+    `act_bits` entry differing from the weight BW is applied through
+    `graph.with_act_bits` after the family builder runs (the builders
+    derive both widths from one `bits` knob)."""
+    kind = build.get("model")
+    kw = {k: v for k, v in build.items() if k not in ("model", "act_bits")}
+    if kind == "mobilenet_v2":
+        from repro.models import mobilenet_v2 as mnv2
+        net = mnv2.build(**kw)
+    elif kind == "efficientnet_compact":
+        from repro.models import efficientnet as effn
+        net = effn.build_compact(**kw)
+    else:
+        raise ValueError(f"unknown model family in build record: {kind!r}")
+    act_bits = build.get("act_bits")
+    if act_bits is not None and act_bits != build.get("bits"):
+        net = G.with_act_bits(net, act_bits)
+    return net
+
+
+def read_qnet_meta(path: str) -> Dict:
+    """The artifact's JSON header (ops/res_q/build/provenance) without the
+    weight payload — what CI's artifact-schema gate inspects."""
+    with open(path, "rb") as f:
+        n = int.from_bytes(f.read(8), "little")
+        return json.loads(f.read(n).decode())
+
+
+def save_qnet(qnet: QNet, path: str, build: Optional[Dict] = None,
+              provenance: Optional[Dict] = None) -> None:
+    """Serialize the deployment artifact.
+
+    `build` (model family + builder kwargs, see `build_netspec`) makes the
+    artifact loadable with `load_qnet(path)` alone; `provenance` is free-form
+    training metadata (steps, seeds, calibration recipe) carried verbatim."""
     arrays = {}
     meta = {"net": qnet.spec.name, "ops": {}}
+    if build is not None:
+        meta["build"] = dict(build)
+    if provenance is not None:
+        meta["provenance"] = dict(provenance)
     for name, q in qnet.ops.items():
         key = name.replace("/", "__")
         arrays[f"{key}.w_q"] = q.w_q
@@ -201,11 +244,19 @@ def save_qnet(qnet: QNet, path: str) -> None:
         f.write(buf.getvalue())
 
 
-def load_qnet(path: str, net: G.NetSpec) -> QNet:
+def load_qnet(path: str, net: Optional[G.NetSpec] = None) -> QNet:
+    """Load a serialized QNet. `net=None` rebuilds the NetSpec from the
+    artifact's own build record (artifacts written by the export pipeline);
+    passing a NetSpec keeps working for record-less fixtures."""
     with open(path, "rb") as f:
         n = int.from_bytes(f.read(8), "little")
         meta = json.loads(f.read(n).decode())
         arrays = np.load(io.BytesIO(f.read()))
+    if net is None:
+        if "build" not in meta:
+            raise ValueError(
+                f"{path} carries no build record; pass the NetSpec explicitly")
+        net = build_netspec(meta["build"])
     qops = {}
     specs = {op.name: op for _, op in net.all_ops()}
     for name, m in meta["ops"].items():
@@ -229,4 +280,5 @@ def load_qnet(path: str, net: G.NetSpec) -> QNet:
     return QNet(net, qops, res_q)
 
 
-__all__ = ["QOp", "QNet", "quantize_net", "save_qnet", "load_qnet"]
+__all__ = ["QOp", "QNet", "quantize_net", "save_qnet", "load_qnet",
+           "build_netspec", "read_qnet_meta"]

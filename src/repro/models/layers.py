@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import graph as G
+from repro.core.bn_fuse import BN_EPS, BNParams, fuse_bn
 from repro.core.quant import QuantConfig, fake_quant_minmax
 
 # ---------------------------------------------------------------------------
@@ -75,7 +76,9 @@ def global_avg_pool(x):
 # ---------------------------------------------------------------------------
 
 
-def init_op_params(key, op: G.OpSpec, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+def init_op_params(
+    key, op: G.OpSpec, dtype=jnp.float32, bn: bool = False
+) -> Dict[str, jnp.ndarray]:
     shape = op.weight_shape()
     fan_in = op.kernel * op.kernel * (op.in_ch if op.kind != G.DW else 1)
     if op.kind == G.DENSE:
@@ -83,15 +86,48 @@ def init_op_params(key, op: G.OpSpec, dtype=jnp.float32) -> Dict[str, jnp.ndarra
     std = (2.0 / max(fan_in, 1)) ** 0.5
     w = std * jax.random.normal(key, shape, dtype)
     b = jnp.zeros((op.out_ch,), dtype)
-    return {"w": w, "b": b}
+    p = {"w": w, "b": b}
+    if bn:
+        p["bn"] = BNParams.init_tree(op.out_ch, dtype)
+    return p
 
 
-def init_params(key, net: G.NetSpec, dtype=jnp.float32):
+def init_params(key, net: G.NetSpec, dtype=jnp.float32, bn: bool = False):
+    """Parameter tree keyed by op name.
+
+    `bn=True` attaches BatchNorm leaves ({'gamma','beta','mean','var'}) to
+    every convolutional operator (not the classifier, not the SE gate convs
+    — matching where real DSCNNs place BN). Training normalizes with batch
+    statistics; QAT and inference fold the running stats into (w, b) on the
+    fly (Sec. 3.1 'BN-fused training'); `fuse_bn_params` folds permanently.
+    """
+    se_names = set()
+    for b in net.blocks:
+        if b.se is not None:
+            se_names.update((b.se.squeeze.name, b.se.excite.name))
     params = {}
     for _, op in net.all_ops():
         key, sub = jax.random.split(key)
-        params[op.name] = init_op_params(sub, op, dtype)
+        op_bn = bn and op.kind != G.DENSE and op.name not in se_names
+        params[op.name] = init_op_params(sub, op, dtype, bn=op_bn)
     return params
+
+
+def fuse_bn_params(params):
+    """Permanently fold every op's BN leaves into (w, b) — Eqs. 4-6.
+
+    Returns a BN-free tree with the same op keys; ops without BN pass
+    through untouched. This is the float-pretrain -> QAT boundary of the
+    training pipeline (and the shape of every exported/quantized net)."""
+    fused = {}
+    for name, p in params.items():
+        if "bn" in p:
+            w, b = fuse_bn(p["w"], p["b"], BNParams.from_tree(p["bn"]),
+                           out_axis=-1)
+            fused[name] = {"w": w, "b": b}
+        else:
+            fused[name] = dict(p)
+    return fused
 
 
 # ---------------------------------------------------------------------------
@@ -104,8 +140,14 @@ def weight_channel_axis(op: G.OpSpec) -> int:
     return -1
 
 
-def _apply_op(x, op: G.OpSpec, p, *, qat: bool):
+def _apply_op(x, op: G.OpSpec, p, *, qat: bool, bn_stats=None):
     w, b = p["w"], p["b"]
+    use_batch_stats = bn_stats is not None and "bn" in p
+    if "bn" in p and not use_batch_stats:
+        # BN-fused execution (QAT + float eval): fold the running stats
+        # into the operator so fake-quant sees the deployed weights (the
+        # paper's 'training with fused BN', Sec. 3.1).
+        w, b = fuse_bn(w, b, BNParams.from_tree(p["bn"]), out_axis=-1)
     if qat:
         # per-output-channel symmetric weight fake-quant at the op's BW
         w = fake_quant_minmax(
@@ -122,6 +164,19 @@ def _apply_op(x, op: G.OpSpec, p, *, qat: bool):
     else:
         raise ValueError(op.kind)
     y = y + b.astype(y.dtype)
+    if use_batch_stats:
+        # float pre-training: normalize with THIS batch's moments and hand
+        # them to the train step, which maintains the running stats (EMA)
+        # outside the gradient tape.
+        axes = tuple(range(y.ndim - 1))
+        mean = jnp.mean(y, axis=axes)
+        var = jnp.var(y, axis=axes)
+        bn = p["bn"]
+        y = (y - mean) * jax.lax.rsqrt(var + BN_EPS) * bn["gamma"] + bn["beta"]
+        bn_stats[op.name] = {
+            "mean": jax.lax.stop_gradient(mean),
+            "var": jax.lax.stop_gradient(var),
+        }
     y = apply_act(y, op.act)
     if qat and op.act != G.NONE:
         # online activation quantization at the op's activation bit-width
@@ -129,10 +184,10 @@ def _apply_op(x, op: G.OpSpec, p, *, qat: bool):
     return y
 
 
-def _apply_block(x, block: G.BlockSpec, params, *, qat, capture):
+def _apply_block(x, block: G.BlockSpec, params, *, qat, capture, bn_stats):
     y = x
     for op in block.ops:
-        y = _apply_op(y, op, params[op.name], qat=qat)
+        y = _apply_op(y, op, params[op.name], qat=qat, bn_stats=bn_stats)
         if capture is not None:
             capture[op.name] = y
         if block.se is not None and block.se_after == op.name:
@@ -164,12 +219,19 @@ def forward(
     *,
     qat: bool = False,
     capture: bool = False,
+    bn_stats: Optional[Dict[str, Dict[str, jnp.ndarray]]] = None,
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
-    """Run the network. Returns (logits, activations|None)."""
+    """Run the network. Returns (logits, activations|None).
+
+    `bn_stats`: pass a dict to run BN ops on *batch* statistics (float
+    pre-training mode) — it is filled with each op's batch moments so the
+    caller can update the running stats. With `bn_stats=None`, BN ops fold
+    their running stats into the weights (QAT / inference mode)."""
     acts: Optional[Dict[str, jnp.ndarray]] = {} if capture else None
     y = x
     for block in net.blocks:
-        y = _apply_block(y, block, params, qat=qat, capture=acts)
+        y = _apply_block(y, block, params, qat=qat, capture=acts,
+                         bn_stats=bn_stats)
     return y, acts
 
 
@@ -208,6 +270,7 @@ __all__ = [
     "apply_act",
     "global_avg_pool",
     "init_params",
+    "fuse_bn_params",
     "forward",
     "make_calibrated_qnet",
 ]

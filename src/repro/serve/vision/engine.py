@@ -139,6 +139,18 @@ class VisionEngine:
     no cache entry keep the defaults; see `compile_stages`).
     """
 
+    @classmethod
+    def from_artifact(cls, path: str, net: Optional[G.NetSpec] = None,
+                      **kwargs) -> "VisionEngine":
+        """Serve a frozen `.qnet` deployment artifact straight from disk.
+
+        Artifacts written by the training export pipeline
+        (`repro.train.vision.export`) carry their own build record, so no
+        NetSpec is needed; record-less fixtures pass `net=` explicitly.
+        All engine knobs (`buckets`, `mesh`, `tuned`, ...) pass through."""
+        from repro.core.qnet import load_qnet
+        return cls(load_qnet(path, net), **kwargs)
+
     def __init__(
         self,
         qnet: QNet,

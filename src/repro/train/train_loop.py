@@ -33,41 +33,70 @@ def _split_microbatches(batch, n: int):
 
 
 def make_train_step(
-    cfg: LMConfig,
+    cfg: Optional[LMConfig],
     opt_cfg: O.AdamWConfig,
     grad_accum: int = 1,
     loss_fn: Optional[Callable] = None,
     compress: bool = False,
     accum_dtype=F32,
+    has_aux: bool = False,
 ):
-    loss_fn = loss_fn or (lambda p, b: M.loss_fn(p, cfg, b))
+    """`cfg=None` is allowed when `loss_fn` is given — the vision QAT
+    pipeline reuses this exact accumulation/update path with its own loss.
+    `has_aux` declares a `loss_fn -> (loss, aux)` signature; the aux tree is
+    microbatch-averaged and returned in metrics['aux'] (the BN running-stat
+    moments ride here)."""
+    if loss_fn is None:
+        if cfg is None:
+            raise ValueError("need an LMConfig or an explicit loss_fn")
+        loss_fn = lambda p, b: M.loss_fn(p, cfg, b)  # noqa: E731
+    unroll = getattr(cfg, "scan_unroll", 1) if cfg is not None else 1
+
+    def value_grad(params, mb):
+        out, grads = jax.value_and_grad(loss_fn, has_aux=has_aux)(params, mb)
+        loss, aux = out if has_aux else (out, None)
+        return loss, aux, grads
 
     def grads_of(params, batch):
         if grad_accum == 1:
-            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-            return loss, grads
+            return value_grad(params, batch)
 
         micro = _split_microbatches(batch, grad_accum)
 
         def body(carry, mb):
-            acc, loss_acc = carry
-            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            acc, loss_acc, aux_acc = carry
+            loss, aux, grads = value_grad(params, mb)
             acc = jax.tree.map(lambda a, g: a + g.astype(accum_dtype), acc, grads)
-            return (acc, loss_acc + loss), None
+            if has_aux:
+                aux_acc = jax.tree.map(lambda a, x: a + x, aux_acc, aux)
+            return (acc, loss_acc + loss, aux_acc), None
 
         zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
-        (gacc, loss_sum), _ = jax.lax.scan(
-            body, (zeros, jnp.zeros((), F32)), micro, unroll=cfg.scan_unroll)
+        aux0 = None
+        if has_aux:
+            # abstract shape probe: the aux tree structure comes from the
+            # loss itself; eval_shape never executes the forward/backward
+            aux_shape = jax.eval_shape(
+                lambda p, b: value_grad(p, b)[1], params,
+                jax.tree.map(lambda m: m[0], micro))
+            aux0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                aux_shape)
+        (gacc, loss_sum, aux_sum), _ = jax.lax.scan(
+            body, (zeros, jnp.zeros((), F32), aux0), micro, unroll=unroll)
         inv = 1.0 / grad_accum
-        return loss_sum * inv, jax.tree.map(lambda g: g * inv, gacc)
+        aux_mean = (jax.tree.map(lambda a: a * inv, aux_sum)
+                    if has_aux else None)
+        return loss_sum * inv, aux_mean, jax.tree.map(lambda g: g * inv, gacc)
 
     def train_step(params, opt_state, batch, err_state=None):
-        loss, grads = grads_of(params, batch)
+        loss, aux, grads = grads_of(params, batch)
         if compress:
             grads, err_state = GC.compress_tree(grads, err_state)
         params, opt_state, metrics = O.apply_updates(
             params, grads, opt_state, opt_cfg)
         metrics = dict(metrics, loss=loss)
+        if has_aux:
+            metrics["aux"] = aux
         if compress:
             return params, opt_state, err_state, metrics
         return params, opt_state, metrics

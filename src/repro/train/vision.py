@@ -1,0 +1,692 @@
+"""FPGA-aware QAT vision training: train -> online-quantize -> export (Fig. 1).
+
+The paper's front end, end to end, over the repo's existing pieces:
+
+  1. **Float pre-training** with BatchNorm on batch statistics
+     (`models/layers.forward(bn_stats=...)`), running stats maintained by
+     the train step; microbatched grad accumulation and AdamW are the SAME
+     `train/train_loop.make_train_step` + `train/optimizer` machinery the LM
+     configs use.
+  2. **BN fusion** at the float -> QAT boundary (`layers.fuse_bn_params`,
+     Eqs. 4-6): QAT fake-quant sees the deployed weights.
+  3. **QAT with online quantization**: fake-quantized forward at the target
+     bit-widths, with an optional activation-bit anneal (8 -> 4, the
+     paper's UInt4 recipe, via `graph.with_act_bits`); every
+     `calibrate_every` steps the held-out calibration stream is driven
+     through `core/calibrate.ActObserver` (EMA mode) and the ReLU6-fused
+     qparams are re-derived — the per-epoch 'online quantization' loop.
+     The observers are CHECKPOINTED TRAINING STATE: once every one has
+     seen a round (`observers_ready`), their EMA-tracked ranges become the
+     exported artifact's activation quantizers — bitwise reproducible
+     across restart like the parameters themselves.
+  4. **Checkpoint/restart**: periodic async checkpoints through
+     `train/checkpoint.py`; restarting from any checkpoint continues the
+     parameter stream bitwise (deterministic counter-based data + donated
+     jitted step), across the BN-fusion boundary too.
+  5. **Export**: calibrate -> `quantize_net` -> prove the frozen artifact
+     bit-exact through the reference interpreter, `prepare_qnet`, the
+     jitted stage executors, and a (tuned) `VisionEngine` — only then write
+     the `.qnet` (with a build record + training provenance) to disk.
+
+`tests/regen_golden.py` derives the golden conformance fixtures through
+`stage_vectors` below, so the frozen test vectors and the training export
+share one code path by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compiler as CC
+from repro.core import cu
+from repro.core import graph as G
+from repro.core import qnet as Q
+from repro.core.calibrate import ActObserver, calibrate, relu6_fused_qparams
+from repro.core.quant import QuantConfig
+from repro.data.pipeline import image_batch
+from repro.models import layers
+from repro.train import checkpoint as CKPT
+from repro.train import optimizer as O
+from repro.train.train_loop import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# configuration + phase schedule
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionTrainConfig:
+    """One deterministic training run — every derived quantity (phase
+    boundaries, data stream, calibration stream) is a pure function of this
+    config, which is what makes checkpoint restart bitwise and the export
+    reproducible."""
+
+    model: str = "mobilenet_v2"  # mobilenet_v2 | efficientnet_compact
+    alpha: float = 0.35  # mobilenet width multiplier
+    input_hw: int = 16
+    num_classes: int = 4
+    bits: int = 4  # weight BW
+    act_bits: int = 4  # deployment activation BW
+    anneal_from: Optional[int] = None  # e.g. 8: first half of QAT at 8b acts
+    bn: bool = True  # float phase trains with BatchNorm, fused before QAT
+    float_steps: int = 40
+    qat_steps: int = 20
+    batch: int = 32
+    grad_accum: int = 1
+    lr: float = 2e-3
+    qat_lr: float = 5e-4
+    weight_decay: float = 0.0
+    warmup_steps: int = 5
+    bn_momentum: float = 0.9
+    seed: int = 0  # param init
+    data_seed: int = 0  # training stream
+    calib_seed: int = 1  # held-out calibration stream (disjoint from data)
+    calib_batches: int = 4
+    calib_momentum: Optional[float] = 0.9  # EMA observers for online quant
+    calibrate_every: int = 0  # QAT steps between online-quant rounds; 0=off
+    ckpt_every: int = 0  # global steps between checkpoints; 0 = off
+    ckpt_keep: int = 3
+
+    @property
+    def total_steps(self) -> int:
+        return self.float_steps + self.qat_steps
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    name: str
+    start: int  # first global step of this phase
+    stop: int  # one past the last
+    qat: bool
+    act_bits: int
+    lr: float
+
+
+def build_net(cfg: VisionTrainConfig, act_bits: Optional[int] = None) -> G.NetSpec:
+    """The deployment NetSpec (weight BW = cfg.bits, activation BW =
+    cfg.act_bits); `act_bits` overrides the activation BW for anneal
+    phases. ONE dispatch for both directions: the spec trained against is
+    by construction the spec `load_qnet(path)` rebuilds from the
+    artifact's build record — the record cannot drift from the builder
+    call."""
+    rec = build_record(cfg)
+    if act_bits is not None:
+        rec["act_bits"] = act_bits
+    return Q.build_netspec(rec)
+
+
+def build_record(cfg: VisionTrainConfig) -> Dict[str, Any]:
+    """The artifact's self-description (`core.qnet.build_netspec` inverse).
+
+    `act_bits` rides the record so a config deploying at a different
+    activation BW than its weight BW (e.g. bits=4, act_bits=8) rebuilds
+    the exact trained spec from the file alone."""
+    rec: Dict[str, Any] = {"model": cfg.model, "input_hw": cfg.input_hw,
+                           "bits": cfg.bits, "num_classes": cfg.num_classes,
+                           "act_bits": cfg.act_bits}
+    if cfg.model == "mobilenet_v2":
+        rec["alpha"] = cfg.alpha
+    return rec
+
+
+def phase_schedule(cfg: VisionTrainConfig) -> Tuple[Phase, ...]:
+    phases: List[Phase] = []
+    if cfg.float_steps:
+        phases.append(Phase("float", 0, cfg.float_steps, False,
+                            cfg.act_bits, cfg.lr))
+    q0 = cfg.float_steps
+    if cfg.qat_steps:
+        if cfg.anneal_from is not None and cfg.anneal_from != cfg.act_bits:
+            n1 = cfg.qat_steps // 2
+            if n1:
+                phases.append(Phase(f"qat_act{cfg.anneal_from}", q0, q0 + n1,
+                                    True, cfg.anneal_from, cfg.qat_lr))
+            phases.append(Phase(f"qat_act{cfg.act_bits}", q0 + n1,
+                                q0 + cfg.qat_steps, True, cfg.act_bits,
+                                cfg.qat_lr))
+        else:
+            phases.append(Phase("qat", q0, q0 + cfg.qat_steps, True,
+                                cfg.act_bits, cfg.qat_lr))
+    if not phases:
+        raise ValueError("config trains for zero steps")
+    return tuple(phases)
+
+
+def phase_at(cfg: VisionTrainConfig, step: int) -> int:
+    """Index of the phase a run with `step` completed steps resumes into."""
+    phases = phase_schedule(cfg)
+    for i, ph in enumerate(phases):
+        if step < ph.stop:
+            return i
+    return len(phases) - 1
+
+
+# ---------------------------------------------------------------------------
+# data + train step
+# ---------------------------------------------------------------------------
+
+
+def train_batch(cfg: VisionTrainConfig, step: int) -> Dict[str, jnp.ndarray]:
+    b = image_batch(cfg.data_seed, step, cfg.batch, cfg.input_hw,
+                    cfg.num_classes)
+    return {"images": jnp.asarray(b["images"]),
+            "labels": jnp.asarray(b["labels"])}
+
+
+def calibration_batches(cfg: VisionTrainConfig) -> List[jnp.ndarray]:
+    """Held-out calibration stream — a seed stream disjoint from training,
+    fixed for the whole run (so export is a pure function of the params)."""
+    return [jnp.asarray(image_batch(cfg.calib_seed, i, cfg.batch,
+                                    cfg.input_hw, cfg.num_classes)["images"])
+            for i in range(cfg.calib_batches)]
+
+
+def make_vision_train_step(
+    net: G.NetSpec,
+    opt_cfg: O.AdamWConfig,
+    *,
+    qat: bool,
+    grad_accum: int = 1,
+    bn_batch: bool = False,
+    bn_momentum: float = 0.9,
+) -> Callable:
+    """Microbatched QAT/float train step over `train_loop.make_train_step`.
+
+    `bn_batch=True` (float pre-training) runs BN on batch statistics and
+    folds the microbatch-averaged moments into the running stats by EMA —
+    after the optimizer update, so the stats never see weight decay."""
+
+    def loss_fn(params, batch):
+        bn_stats: Optional[Dict] = {} if bn_batch else None
+        logits, _ = layers.forward(params, batch["images"], net, qat=qat,
+                                   bn_stats=bn_stats)
+        lp = jax.nn.log_softmax(logits)
+        loss = -jnp.take_along_axis(lp, batch["labels"][:, None], 1).mean()
+        return (loss, bn_stats) if bn_batch else loss
+
+    base = make_train_step(None, opt_cfg, grad_accum=grad_accum,
+                           loss_fn=loss_fn, has_aux=bn_batch)
+    if not bn_batch:
+        return base
+
+    def step(params, opt_state, batch):
+        prev = params  # pre-update running stats (optimizer never owns them)
+        params, opt_state, metrics = base(params, opt_state, batch)
+        moments = metrics.pop("aux")
+        m = bn_momentum
+        params = dict(params)
+        for name, mom in moments.items():
+            old = prev[name]["bn"]
+            p = dict(params[name])
+            p["bn"] = {
+                "gamma": params[name]["bn"]["gamma"],
+                "beta": params[name]["bn"]["beta"],
+                "mean": m * old["mean"] + (1 - m) * mom["mean"],
+                "var": m * old["var"] + (1 - m) * mom["var"],
+            }
+            params[name] = p
+        return params, opt_state, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# online quantization (per-epoch calibration during QAT)
+# ---------------------------------------------------------------------------
+
+
+def observer_keys(net: G.NetSpec) -> Tuple[str, ...]:
+    """Every activation name the capture forward emits, derived from the
+    spec alone (mirrors `layers._apply_block`'s traversal). This is what
+    lets the observer set be part of the checkpoint template: its shape is
+    a pure function of the config, like everything else in the run."""
+    keys: List[str] = []
+    for block in net.blocks:
+        for op in block.ops:
+            keys.append(op.name)
+            if block.se is not None and block.se_after == op.name:
+                keys.append("se_gate")
+        if block.residual:
+            keys.append(block.name + "/residual")
+        if block.avgpool:
+            keys.append(block.name + "/avgpool")
+    return tuple(dict.fromkeys(keys))
+
+
+def init_observers(cfg: VisionTrainConfig) -> Dict[str, ActObserver]:
+    """Untouched (±inf range) EMA observers for every capture key."""
+    return {k: ActObserver.init((), momentum=cfg.calib_momentum)
+            for k in observer_keys(build_net(cfg))}
+
+
+def _obs_tree(observers: Dict[str, ActObserver]):
+    """Checkpointable pytree view (momentum is config, not state)."""
+    return {k: {"mn": o.min_val, "mx": o.max_val}
+            for k, o in observers.items()}
+
+
+def _obs_from_tree(tree, momentum: Optional[float]) -> Dict[str, ActObserver]:
+    return {k: ActObserver(v["mn"], v["mx"], momentum)
+            for k, v in tree.items()}
+
+
+def observers_ready(observers: Dict[str, ActObserver]) -> bool:
+    """True once at least one full calibration round ran: every observer
+    holds a finite range (an untouched observer still sits at ±inf)."""
+    return bool(observers) and all(
+        bool(np.isfinite(np.asarray(o.min_val)).all())
+        and bool(np.isfinite(np.asarray(o.max_val)).all())
+        for o in observers.values())
+
+
+_CFG_MOMENTUM = object()  # sentinel: "use cfg.calib_momentum"
+
+
+def run_calibration(
+    params,
+    net: G.NetSpec,
+    cfg: VisionTrainConfig,
+    observers: Optional[Dict[str, ActObserver]] = None,
+    act_bits: Optional[int] = None,
+    momentum=_CFG_MOMENTUM,
+) -> Tuple[Dict[str, ActObserver], Dict[str, Any]]:
+    """One calibration round: drive the held-out stream through the
+    BN-fused float forward, update the observers, and re-derive the
+    ReLU6-fused activation qparams. Returns (observers, round summary).
+
+    Default momentum comes from the config (the EMA online-quantization
+    mode); `momentum=None` forces true-min/max observers (the from-scratch
+    export recalibration). The ONE calibration recipe every caller —
+    training rounds, export, tests — goes through."""
+    bw = act_bits if act_bits is not None else cfg.act_bits
+    acfg = QuantConfig(bw, symmetric=False, channel_axis=None)
+
+    def apply_fn(p, b):
+        return layers.forward(p, b, net, capture=True)[1]
+
+    m = cfg.calib_momentum if momentum is _CFG_MOMENTUM else momentum
+    observers = calibrate(apply_fn, params, calibration_batches(cfg), acfg,
+                          observers=observers, momentum=m)
+    s6, z6 = relu6_fused_qparams(acfg)
+    summary = {
+        "act_bits": bw,
+        "relu6_scale": float(s6),
+        "relu6_zp": float(z6),
+        "n_observers": len(observers),
+        "ranges": {
+            name: (float(obs.min_val), float(obs.max_val))
+            for name, obs in sorted(observers.items())[:4]
+        },
+    }
+    return observers, summary
+
+
+# ---------------------------------------------------------------------------
+# training orchestrator (checkpoint / restart / preemption)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Any
+    net: G.NetSpec  # deployment spec (final act bits)
+    cfg: VisionTrainConfig
+    step: int  # global steps completed
+    history: Dict[str, Any]
+    observers: Dict[str, ActObserver]
+
+    @property
+    def done(self) -> bool:
+        return self.step >= self.cfg.total_steps
+
+
+def _has_bn(params) -> bool:
+    return any("bn" in p for p in params.values())
+
+
+def _ckpt_extra(ckpt_dir: str, step: int) -> Dict[str, Any]:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f).get("extra", {})
+
+
+def _template(cfg: VisionTrainConfig, fused: bool):
+    """The parameter tree shape at a checkpoint: replays init (+ BN fusion
+    when the checkpoint is past the float -> QAT boundary)."""
+    params = layers.init_params(jax.random.PRNGKey(cfg.seed), build_net(cfg),
+                                bn=cfg.bn)
+    if fused and cfg.bn:
+        params = layers.fuse_bn_params(params)
+    return params
+
+
+def train(
+    cfg: VisionTrainConfig,
+    *,
+    ckpt_dir: Optional[str] = None,
+    resume: bool = False,
+    stop_after: Optional[int] = None,
+    log: Optional[Callable[[str], None]] = None,
+) -> TrainResult:
+    """Run (or resume) the full schedule. `stop_after=k` checkpoints and
+    returns after k global steps — the simulated-preemption hook the
+    restart-continuation tests kill the run with."""
+    say = log or (lambda s: None)
+    if stop_after is not None and not ckpt_dir:
+        # a preemption point without a checkpoint directory would discard
+        # the run while claiming it is resumable — refuse up front
+        raise ValueError("stop_after requires ckpt_dir (nothing would be "
+                         "saved to resume from)")
+    phases = phase_schedule(cfg)
+    history: Dict[str, Any] = {"loss": [], "phases": [], "calibration": []}
+    observers = init_observers(cfg)
+
+    start = 0
+    if resume and ckpt_dir and CKPT.latest_step(ckpt_dir) is not None:
+        start = CKPT.latest_step(ckpt_dir)
+        extra = _ckpt_extra(ckpt_dir, start)
+        template = _template(cfg, fused=extra.get("fused", not cfg.bn))
+        (params, opt_state, obs_tree), _ = CKPT.restore(
+            ckpt_dir, (template, O.init_state(template),
+                       _obs_tree(observers)), step=start)
+        # observer state rides the checkpoint: a resumed run's online-
+        # quantization rounds (and therefore its export quantizers) are
+        # bitwise those of the uninterrupted run
+        observers = _obs_from_tree(obs_tree, cfg.calib_momentum)
+        # the run log rides the manifest, so a resumed run's history (and
+        # the provenance derived from it — loss curve, round counts) spans
+        # the WHOLE run, not just the post-resume tail. JSON round-trips
+        # tuples as lists; consumers treat entries as plain data.
+        history = extra.get("history", history)
+        say(f"[train-vision] resumed at step {start} "
+            f"(phase {phases[phase_at(cfg, start)].name})")
+    else:
+        params = layers.init_params(jax.random.PRNGKey(cfg.seed),
+                                    build_net(cfg), bn=cfg.bn)
+        opt_state = None  # initialized at phase entry
+
+    pending = None  # in-flight async checkpoint writer
+    completed = start  # global steps finished so far
+    stopped = False
+
+    def save_ckpt(step_done: int, loss: float):
+        nonlocal pending
+        if not ckpt_dir:
+            return
+        if pending is not None:
+            pending.join()
+        pending = CKPT.save(
+            ckpt_dir, step_done, (params, opt_state, _obs_tree(observers)),
+            keep=cfg.ckpt_keep, async_=True,
+            extra={"fused": not _has_bn(params), "loss": loss,
+                   # JSON round-trip = deep snapshot: the async writer must
+                   # not see later in-place mutations (and tuples normalize
+                   # to lists, same as they come back at restore)
+                   "history": json.loads(json.dumps(history)),
+                   "phase": phases[min(phase_at(cfg, step_done),
+                                       len(phases) - 1)].name})
+
+    for ph in phases:
+        if stopped or completed >= ph.stop:
+            continue
+        if ph.qat and _has_bn(params):
+            # float -> QAT boundary: fold BN so fake-quant trains the
+            # deployed weights (Sec. 3.1). Changes the tree shape, which is
+            # why checkpoints record whether they are pre- or post-fusion.
+            params = layers.fuse_bn_params(params)
+            say(f"[train-vision] fused BN into weights at step {completed}")
+        net_ph = build_net(cfg, act_bits=ph.act_bits)
+        n_ph = ph.stop - ph.start
+        opt_cfg = O.AdamWConfig(
+            lr=ph.lr, warmup_steps=min(cfg.warmup_steps, max(n_ph // 5, 1)),
+            total_steps=n_ph, weight_decay=cfg.weight_decay)
+        if opt_state is None or completed == ph.start:
+            # fresh optimizer per phase (own schedule; also what keeps the
+            # restored-state step counter aligned within the phase)
+            opt_state = O.init_state(params)
+        step_fn = jax.jit(make_vision_train_step(
+            net_ph, opt_cfg, qat=ph.qat, grad_accum=cfg.grad_accum,
+            bn_batch=(not ph.qat) and cfg.bn and _has_bn(params),
+            bn_momentum=cfg.bn_momentum))
+        if not any(e["name"] == ph.name for e in history["phases"]):
+            # (a resumed run restores the entry with the rest of the log)
+            history["phases"].append(
+                {"name": ph.name, "start": ph.start, "stop": ph.stop,
+                 "act_bits": ph.act_bits, "qat": ph.qat})
+
+        for gs in range(completed, ph.stop):
+            batch = train_batch(cfg, gs)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            history["loss"].append(loss)
+            completed = gs + 1
+            if ph.qat and cfg.calibrate_every and (
+                    (completed - ph.start) % cfg.calibrate_every == 0):
+                observers, summary = run_calibration(
+                    params, net_ph, cfg, observers, act_bits=ph.act_bits)
+                history["calibration"].append(dict(summary, step=completed))
+                say(f"[train-vision] online-quant round at step {completed}: "
+                    f"act{summary['act_bits']} relu6 S="
+                    f"{summary['relu6_scale']:.5f}")
+            if stop_after is not None and completed >= stop_after:
+                save_ckpt(completed, loss)
+                stopped = True
+                say(f"[train-vision] preempted at step {completed} "
+                    f"(checkpointed)")
+                break
+            if cfg.ckpt_every and (completed % cfg.ckpt_every == 0
+                                   or completed == cfg.total_steps):
+                save_ckpt(completed, loss)
+
+    if pending is not None:
+        pending.join()
+    return TrainResult(params=params, net=build_net(cfg), cfg=cfg,
+                       step=completed, history=history, observers=observers)
+
+
+# ---------------------------------------------------------------------------
+# export: calibrate -> quantize -> prove bit-exact -> freeze
+# ---------------------------------------------------------------------------
+
+
+class ExportParityError(AssertionError):
+    """A serving route disagreed with the reference interpreter bitwise."""
+
+
+def stage_vectors(qnet: Q.QNet, x: np.ndarray):
+    """(stage CU names, per-stage integer activations, float logits) from
+    the reference `cu.run_blocks` walk — the semantic ground truth every
+    other route is proven against. The golden conformance fixtures under
+    tests/golden/ are generated through THIS function (tests/regen_golden.py
+    is a thin wrapper), so trained exports and frozen test vectors share one
+    derivation."""
+    plan = CC.compile_net(qnet.spec)
+    sigs = plan.stage_signatures()
+    s, z = cu.input_qparams(qnet)
+    y = cu.quantize_input(jnp.asarray(x), s, z, 8)
+    acts, cus = [], []
+    for sig in sigs:
+        y, s, z = cu.run_blocks(y, sig.blocks, qnet, s, z)
+        acts.append(np.asarray(y))
+        cus.append(sig.cu)
+    logits = (acts[-1].astype(np.float32) + np.float32(z)) * np.float32(s)
+    return cus, acts, logits
+
+
+def _check_equal(name: str, got: np.ndarray, want: np.ndarray,
+                 report: List[str]):
+    got, want = np.asarray(got), np.asarray(want)
+    if got.shape != want.shape:
+        raise ExportParityError(
+            f"{name}: shape {got.shape} != reference {want.shape}")
+    if not np.array_equal(got, want):
+        n = int(np.sum(got != want))
+        d = float(np.max(np.abs(got.astype(np.float64)
+                                - want.astype(np.float64))))
+        raise ExportParityError(
+            f"{name}: {n} elements differ from the reference "
+            f"(max |delta| {d:.3g}); routes proven so far: {report}")
+    report.append(name)
+
+
+def verify_export(qnet: Q.QNet, x: np.ndarray, *, tuned=None) -> Dict[str, Any]:
+    """Prove one input batch bit-exact across every serving route:
+    reference interpreter, `prepare_qnet` fast path, jitted stage
+    executors, and a `VisionEngine` (tuned when a plan is given). Raises
+    `ExportParityError` on the first route that drifts one LSB."""
+    from repro.serve.vision import VisionEngine, compile_stages
+
+    x = np.asarray(x, np.float32)
+    cus, acts, logits = stage_vectors(qnet, x)
+    proven: List[str] = ["reference"]
+
+    pq = cu.prepare_qnet(qnet)
+    _check_equal("prepared", cu.run_qnet(pq, jnp.asarray(x)), logits, proven)
+
+    stages = compile_stages(qnet)
+    y = jnp.asarray(x)
+    for i, st in enumerate(stages):
+        y = st(y)
+        if i < len(stages) - 1:
+            _check_equal(f"stage[{i}:{st.spec.cu}]", y,
+                         acts[i].astype(np.int32), proven)
+    _check_equal("stage-executors", y, logits, proven)
+
+    eng = VisionEngine(qnet, buckets=(x.shape[0],), tuned=tuned)
+    rids = [eng.submit(img) for img in x]
+    res = eng.run()
+    got = np.stack([res[r].logits for r in rids])
+    _check_equal("engine[tuned]" if tuned is not None else "engine",
+                 got, logits, proven)
+
+    return {"routes": proven, "stages": len(cus), "cus": cus,
+            "logits": logits,
+            "tuned_entries": len(tuned) if tuned is not None else 0}
+
+
+def export(
+    params,
+    net: G.NetSpec,
+    cfg: VisionTrainConfig,
+    *,
+    path: Optional[str] = None,
+    observers: Optional[Dict[str, ActObserver]] = None,
+    verify: bool = True,
+    verify_batch: Optional[np.ndarray] = None,
+    tuned=None,
+    tune: bool = False,
+    measure=None,
+    provenance: Optional[Dict[str, Any]] = None,
+) -> Tuple[Q.QNet, Dict[str, Any]]:
+    """Terminal export step: BN-fuse (if still unfused) -> calibrate on the
+    held-out stream -> `quantize_net` -> prove every serving route bit-exact
+    -> freeze to `path`.
+
+    `observers`: pass the run's online-quantization observers
+    (`TrainResult.observers`, once `observers_ready`) to export with the
+    ranges the per-epoch calibration rounds tracked — they are checkpointed
+    training state, so they too are bitwise identical after a restart.
+    `observers=None` recalibrates from scratch on the config's held-out
+    stream with true-min/max observers. Either way the artifact is a pure
+    function of (run state, cfg).
+    `tune=True` autotunes the freshly exported net (`repro.tune.tune_qnet`)
+    and proves the tuned engine too; `tuned=` passes a ready plan instead.
+    The artifact is written only after every proof passes."""
+    if _has_bn(params):
+        params = layers.fuse_bn_params(params)
+    if observers is None:
+        observers, _ = run_calibration(params, net, cfg, momentum=None)
+    qnet = Q.quantize_net(params, net, observers)
+
+    if tune and tuned is None:
+        from repro.tune import tune_qnet
+        tuned = tune_qnet(qnet, batch=min(cfg.batch, 8), repeats=1,
+                          measure=measure,
+                          include_pallas=jax.default_backend() == "tpu")
+
+    report: Dict[str, Any] = {"verified": False}
+    if verify:
+        if verify_batch is None:
+            verify_batch = np.asarray(calibration_batches(cfg)[0])
+        report = verify_export(qnet, verify_batch, tuned=tuned)
+        report["verified"] = True
+
+    if path is not None:
+        prov = {"model": cfg.model, "total_steps": cfg.total_steps,
+                "float_steps": cfg.float_steps, "qat_steps": cfg.qat_steps,
+                "act_bits": cfg.act_bits, "bits": cfg.bits,
+                "anneal_from": cfg.anneal_from, "bn": cfg.bn,
+                "seed": cfg.seed, "data_seed": cfg.data_seed,
+                "calib_seed": cfg.calib_seed,
+                "calib_batches": cfg.calib_batches,
+                "verified_routes": report.get("routes", [])}
+        if provenance:
+            prov.update(provenance)
+        Q.save_qnet(qnet, path, build=build_record(cfg), provenance=prov)
+        report["path"] = path
+        report["artifact_bytes"] = os.path.getsize(path)
+    return qnet, report
+
+
+def train_and_export(
+    cfg: VisionTrainConfig,
+    *,
+    ckpt_dir: Optional[str] = None,
+    resume: bool = False,
+    stop_after: Optional[int] = None,
+    path: Optional[str] = None,
+    verify: bool = True,
+    tune: bool = False,
+    measure=None,
+    log: Optional[Callable[[str], None]] = None,
+) -> Tuple[TrainResult, Optional[Q.QNet], Dict[str, Any]]:
+    """The whole Fig. 1 front end in one call (the launch driver's body)."""
+    result = train(cfg, ckpt_dir=ckpt_dir, resume=resume,
+                   stop_after=stop_after, log=log)
+    if not result.done:
+        return result, None, {"verified": False, "reason": "preempted"}
+    # online-quantization rounds feed the export: once every observer saw a
+    # full calibration round, the EMA-tracked ranges become the artifact's
+    # activation quantizers (else recalibrate from scratch)
+    obs = result.observers if observers_ready(result.observers) else None
+    rounds = len(result.history["calibration"])
+    qnet, report = export(result.params, result.net, cfg, path=path,
+                          observers=obs, verify=verify, tune=tune,
+                          measure=measure,
+                          provenance={"final_loss": result.history["loss"][-1]
+                                      if result.history["loss"] else None,
+                                      "online_quant_rounds": rounds})
+    report["online_quant_rounds"] = rounds
+    report["observers_used"] = obs is not None
+    return result, qnet, report
+
+
+__all__ = [
+    "VisionTrainConfig",
+    "Phase",
+    "TrainResult",
+    "ExportParityError",
+    "build_net",
+    "build_record",
+    "phase_schedule",
+    "phase_at",
+    "train_batch",
+    "calibration_batches",
+    "make_vision_train_step",
+    "observer_keys",
+    "init_observers",
+    "observers_ready",
+    "run_calibration",
+    "train",
+    "stage_vectors",
+    "verify_export",
+    "export",
+    "train_and_export",
+]

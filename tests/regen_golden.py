@@ -27,18 +27,23 @@ Each case freezes BOTH the quantized network and the golden vectors:
 Cases: MobileNetV2 (alpha=0.35) and the compact EfficientNet at act_bits
 {4, 8}, input 32x32, 10 classes, batch 2 — small enough to check in, deep
 enough to cover every op kind (CONV/DW/PW/DENSE, residual, SE, avgpool).
+
+The golden vectors come from `repro.train.vision.stage_vectors` — the
+same derivation the QAT training pipeline's export step proves trained
+artifacts against (this module is a thin wrapper, not a parallel
+implementation; see tests/golden/README.md "Provenance").
 """
 from __future__ import annotations
 
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compiler as CC, cu, qnet as Q
+from repro.core import qnet as Q
 from repro.models import efficientnet as effn, mobilenet_v2 as mnv2
 from repro.models.layers import make_calibrated_qnet
+from repro.train.vision import stage_vectors
 
 HW = 32
 BATCH = 2
@@ -65,19 +70,23 @@ def make_qnet(net, bits: int, seed: int = 0):
 
 
 def golden_vectors(qnet, x: np.ndarray):
-    """(stage_cus, per-stage int activations, float logits) from the
-    reference `cu.run_blocks` route — the semantic ground truth."""
-    plan = CC.compile_net(qnet.spec)
-    sigs = plan.stage_signatures()
-    s, z = cu.input_qparams(qnet)
-    y = cu.quantize_input(jnp.asarray(x), s, z, 8)
-    acts, cus = [], []
-    for sig in sigs:
-        y, s, z = cu.run_blocks(y, sig.blocks, qnet, s, z)
-        acts.append(np.asarray(y))
-        cus.append(sig.cu)
-    logits = (acts[-1].astype(np.float32) + np.float32(z)) * np.float32(s)
-    return cus, acts, logits
+    """(stage_cus, per-stage int activations, float logits) — a thin
+    wrapper over the training pipeline's export derivation
+    (`repro.train.vision.stage_vectors`), so the frozen fixtures and every
+    trained `.qnet` export are produced by ONE code path; a drift between
+    'what training exports' and 'what the conformance suite pins' is
+    structurally impossible."""
+    return stage_vectors(qnet, x)
+
+
+def build_record(model: str, bits: int):
+    """Self-description stamped into regenerated `.qnet` fixtures (lets
+    `Q.load_qnet(path)` rebuild the NetSpec without this module)."""
+    rec = {"model": model, "input_hw": HW, "bits": bits,
+           "num_classes": NUM_CLASSES}
+    if model == "mobilenet_v2":
+        rec["alpha"] = 0.35
+    return rec
 
 
 def fixture_paths(model: str, bits: int):
@@ -150,7 +159,9 @@ def main() -> None:
         qnet = make_qnet(net, bits)
         cus, acts, logits = golden_vectors(qnet, x)
         qnet_path, npz_path = fixture_paths(model, bits)
-        Q.save_qnet(qnet, qnet_path)
+        Q.save_qnet(qnet, qnet_path, build=build_record(model, bits),
+                    provenance={"derivation": "make_calibrated_qnet",
+                                "seed": 0, "n_cal": 2})
         arrays = {"input": x, "logits": logits}
         for i, (cu_name, act) in enumerate(zip(cus, acts)):
             assert act.min() >= 0 and act.max() <= 255, (model, bits, cu_name)

@@ -1,0 +1,131 @@
+"""Property tests for `core/calibrate` (ActObserver + ReLU6-fused qparams).
+
+Runs under real `hypothesis` when installed, else the deterministic
+`tests/_hypothesis_fallback` harness (same properties, fixed-seed draws).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.calibrate import ActObserver, calibrate, relu6_fused_qparams
+from repro.core.quant import QuantConfig
+
+ACFG = QuantConfig(4, symmetric=False, channel_axis=None)
+
+
+def _batches(seed: int, n: int, lo: float, hi: float):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.uniform(lo, hi, size=(4, 3)).astype(np.float32))
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# ActObserver: true min/max mode
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 6),
+       lo=st.floats(-8.0, 0.0), hi=st.floats(0.5, 8.0))
+def test_true_minmax_observer_is_monotone_and_tight(seed, n, lo, hi):
+    """Without momentum the observer is the exact running extremum:
+    min_val never increases, max_val never decreases, and after the stream
+    both equal the global extrema."""
+    batches = _batches(seed, n, lo, hi)
+    obs = ActObserver.init()
+    prev_mn, prev_mx = float("inf"), float("-inf")
+    for b in batches:
+        obs = obs.update(b, ACFG)
+        mn, mx = float(obs.min_val), float(obs.max_val)
+        assert mn <= prev_mn or prev_mn == float("inf")
+        assert mx >= prev_mx or prev_mx == float("-inf")
+        prev_mn, prev_mx = mn, mx
+    all_x = np.concatenate([np.asarray(b).ravel() for b in batches])
+    assert float(obs.min_val) == all_x.min()
+    assert float(obs.max_val) == all_x.max()
+
+
+@settings(max_examples=20)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 6),
+       m=st.floats(0.1, 0.95))
+def test_ema_observer_bounded_by_true_extrema(seed, n, m):
+    """The EMA observer is a convex combination of per-batch extrema, so it
+    can never leave the envelope the true-min/max observer pins — and it is
+    never *tighter at the first batch* (both start at batch-1's range)."""
+    batches = _batches(seed, n, -3.0, 3.0)
+    ema = ActObserver.init(momentum=m)
+    true = ActObserver.init()
+    for b in batches:
+        ema = ema.update(b, ACFG)
+        true = true.update(b, ACFG)
+        assert float(ema.min_val) >= float(true.min_val) - 1e-6
+        assert float(ema.max_val) <= float(true.max_val) + 1e-6
+    # constant stream: the EMA fixes on the constant range exactly
+    const = [jnp.ones((2, 2)) * 1.5 for _ in range(4)]
+    fixed = ActObserver.init(momentum=m)
+    for b in const:
+        fixed = fixed.update(b, ACFG)
+    assert float(fixed.min_val) == pytest.approx(1.5)
+    assert float(fixed.max_val) == pytest.approx(1.5)
+
+
+@settings(max_examples=10)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 5),
+       k=st.integers(1, 4))
+def test_calibrate_resume_equals_single_pass(seed, n, k):
+    """`calibrate(observers=...)` continuation (the online-quantization
+    API) is associative: two passes over a split stream equal one pass over
+    the whole stream in true-min/max mode."""
+    k = min(k, n - 1)
+    batches = _batches(seed, n, -2.0, 2.0)
+
+    def apply_fn(params, b):
+        return {"act": b * 2.0, "head": b - 1.0}
+
+    whole = calibrate(apply_fn, None, batches, ACFG)
+    first = calibrate(apply_fn, None, batches[:k], ACFG)
+    resumed = calibrate(apply_fn, None, batches[k:], ACFG, observers=first)
+    assert set(whole) == set(resumed)
+    for name in whole:
+        np.testing.assert_allclose(np.asarray(resumed[name].min_val),
+                                   np.asarray(whole[name].min_val))
+        np.testing.assert_allclose(np.asarray(resumed[name].max_val),
+                                   np.asarray(whole[name].max_val))
+
+
+# ---------------------------------------------------------------------------
+# relu6_fused_qparams: the h^pq quantizer invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8)
+@given(bits=st.sampled_from([4, 8]))
+def test_relu6_fused_qparams_invariants(bits):
+    """h^pq : [0, 6] -> [0, 2^BW - 1] exactly: zp = 0, S * qmax = 6, the
+    endpoints land on the integer rails, and the integer clip IS ReLU6."""
+    cfg = QuantConfig(bits, symmetric=False, channel_axis=None)
+    s, z = relu6_fused_qparams(cfg)
+    s, z = float(s), float(z)
+    assert z == 0.0
+    # scale is carried in float32: S * qmax reproduces 6.0 to f32 precision
+    assert s * cfg.qmax == pytest.approx(6.0, rel=1e-6)
+    # endpoint mapping: q(0) = 0, q(6) = qmax; anything beyond clips
+    q = lambda x: int(np.clip(np.round(x / s - z), 0, cfg.qmax))  # noqa: E731
+    assert q(0.0) == 0
+    assert q(6.0) == cfg.qmax
+    assert q(7.3) == cfg.qmax  # clip == activation
+    assert q(-1.0) == 0
+    # 4-bit scale is coarser than 8-bit (fewer levels over the same range)
+    if bits == 4:
+        s8, _ = relu6_fused_qparams(QuantConfig(8, False, None))
+        assert s > float(s8)
+
+
+def test_relu6_fusion_requires_asymmetric():
+    with pytest.raises(ValueError):
+        relu6_fused_qparams(QuantConfig(4, symmetric=True, channel_axis=None))

@@ -52,6 +52,25 @@ def _accuracy(fn, seed=99, n=4):
     return correct / total
 
 
+def test_qat_pipeline_fast_deterministic():
+    """Tier-1 stand-in for the slow convergence run below: a fixed-seed
+    micro-schedule through the training subsystem (float+BN -> fuse -> QAT)
+    must reduce loss AND reproduce bitwise run-to-run — the determinism the
+    nightly convergence run (and the checkpoint-restart contract) rests on."""
+    from repro.train import vision as V
+
+    cfg = V.VisionTrainConfig(
+        model="mobilenet_v2", alpha=0.35, input_hw=HW, num_classes=CLASSES,
+        float_steps=3, qat_steps=2, batch=8)
+    a = V.train(cfg)
+    b = V.train(cfg)
+    assert a.history["loss"] == b.history["loss"]
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert a.history["loss"][-1] < a.history["loss"][0]
+    assert np.isfinite(a.history["loss"]).all()
+
+
 @pytest.mark.slow
 def test_qat_to_integer_qnet_preserves_accuracy():
     net = _net()

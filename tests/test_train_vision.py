@@ -1,0 +1,295 @@
+"""E2E FPGA-aware QAT vision pipeline: train -> online-quantize -> export
+-> serve (paper Fig. 1), proven by bitwise export conformance.
+
+Three invariants this tier pins:
+
+  * **QAT smoke**: a tiny MobileNetV2 trains through the full phase
+    schedule (float+BN -> BN fusion -> QAT with act-bit anneal) and
+    reduces loss; microbatched grad accumulation included.
+  * **Restart continuation**: checkpoint -> kill -> resume reproduces the
+    straight run's parameters bitwise — including when the kill lands
+    before the BN-fusion boundary (the tree changes shape across it).
+  * **Export conformance**: the artifact a *trained* net freezes is
+    bit-exact across the reference interpreter, `prepare_qnet`, the jitted
+    stage executors, and a tuned `VisionEngine` — and the `.qnet` written
+    to disk reloads (build record alone) into the same logits.
+"""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import cu, qnet as Q
+from repro.serve.vision import VisionEngine
+from repro.train import vision as V
+from repro.tune import tune_qnet
+
+CFG = V.VisionTrainConfig(
+    model="mobilenet_v2", alpha=0.35, input_hw=16, num_classes=4,
+    float_steps=4, qat_steps=4, batch=8, anneal_from=8,
+    calibrate_every=2, ckpt_every=2,
+)
+
+
+def _fake_measure(times=()):
+    times = dict(times)
+
+    def measure(fn, x, candidate=None):
+        return times.get(candidate.route if candidate else None, 1.0)
+
+    return measure
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.fixture(scope="module")
+def straight():
+    """One uninterrupted run of the full schedule (no checkpoints)."""
+    return V.train(dataclasses.replace(CFG, ckpt_every=0))
+
+
+@pytest.fixture(scope="module")
+def restarted(tmp_path_factory):
+    """Killed-and-resumed runs, one per kill point: before the BN-fusion
+    boundary (the tree changes shape across it) and mid-annealed-QAT.
+    Shared module-wide — training compiles are the expensive part."""
+    runs = {}
+    for kill_at in (3, 7):
+        ckpt = str(tmp_path_factory.mktemp(f"ck{kill_at}"))
+        part = V.train(CFG, ckpt_dir=ckpt, stop_after=kill_at)
+        assert part.step == kill_at and not part.done
+        runs[kill_at] = V.train(CFG, ckpt_dir=ckpt, resume=True)
+    return runs
+
+
+# ---------------------------------------------------------------------------
+# QAT smoke
+# ---------------------------------------------------------------------------
+
+
+def test_phase_schedule_partitions_steps():
+    phases = V.phase_schedule(CFG)
+    assert [p.name for p in phases] == ["float", "qat_act8", "qat_act4"]
+    assert phases[0].start == 0 and phases[-1].stop == CFG.total_steps
+    for a, b in zip(phases, phases[1:]):
+        assert a.stop == b.start
+    # anneal: first QAT phase at 8-bit activations, final at the target BW
+    assert phases[1].act_bits == 8 and phases[2].act_bits == CFG.act_bits
+    for step in range(CFG.total_steps):
+        ph = phases[V.phase_at(CFG, step)]
+        assert ph.start <= step < ph.stop
+
+
+def test_qat_smoke_trains_and_fuses_bn(straight):
+    assert straight.done and straight.step == CFG.total_steps
+    losses = straight.history["loss"]
+    assert len(losses) == CFG.total_steps
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0], losses
+    # BN fused away at the float -> QAT boundary
+    assert not any("bn" in p for p in straight.params.values())
+    # online quantization ran every `calibrate_every` QAT steps and
+    # re-derived the ReLU6-fused quantizer at the phase's bit-width
+    rounds = straight.history["calibration"]
+    assert [r["act_bits"] for r in rounds] == [8, 4]
+    for r in rounds:
+        assert r["relu6_scale"] == pytest.approx(6.0 / (2 ** r["act_bits"] - 1))
+        assert r["relu6_zp"] == 0.0
+    # the rounds left every observer with a finite tracked range (the
+    # state the export consumes); a fresh observer set is NOT ready
+    assert V.observers_ready(straight.observers)
+    assert not V.observers_ready(V.init_observers(CFG))
+    assert set(straight.observers) == set(V.observer_keys(straight.net))
+
+
+def test_build_net_honors_act_bits_distinct_from_weight_bits():
+    """A config deploying at a different activation BW than its weight BW
+    (bits=4, act_bits=8) must train/quantize THAT spec — and the build
+    record must rebuild it from the artifact alone."""
+    cfg = dataclasses.replace(CFG, bits=4, act_bits=8)
+    net = V.build_net(cfg)
+    ops = [op for b in net.blocks for op in b.ops]
+    assert all(op.act_bits == 8 for op in ops)
+    assert all(op.bits in (4, 8) for op in ops)  # weight BW untouched
+    assert Q.build_netspec(V.build_record(cfg)) == net
+    # anneal override reaches a third width
+    net6 = V.build_net(cfg, act_bits=6)
+    assert all(op.act_bits == 6 for b in net6.blocks for op in b.ops)
+    # the default equal-width config is unchanged by the record round-trip
+    assert Q.build_netspec(V.build_record(CFG)) == V.build_net(CFG)
+
+
+def test_stop_after_requires_ckpt_dir():
+    """A preemption point without a checkpoint directory would silently
+    discard the run — train() must refuse it up front."""
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        V.train(CFG, stop_after=3)
+
+
+def test_bn_running_stats_move_during_float_phase():
+    cfg = dataclasses.replace(CFG, float_steps=1, qat_steps=0, ckpt_every=0)
+    res = V.train(cfg)
+    moved = [name for name, p in res.params.items()
+             if "bn" in p and float(np.abs(np.asarray(p["bn"]["mean"])).max()) > 0]
+    assert moved, "no BN running mean moved off init"
+
+
+def test_grad_accum_microbatching_runs():
+    """Microbatched grad accumulation (lax.scan with the BN-moment aux
+    threaded through) produces finite losses on the QAT step."""
+    cfg = dataclasses.replace(CFG, float_steps=2, qat_steps=0, grad_accum=2,
+                              ckpt_every=0, calibrate_every=0)
+    res = V.train(cfg)
+    assert res.done and np.isfinite(res.history["loss"]).all()
+    assert any("bn" in p for p in res.params.values())
+
+
+# ---------------------------------------------------------------------------
+# checkpoint -> kill -> resume, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kill_at", [3, 7],
+                         ids=["mid-float-pre-fusion", "mid-qat"])
+def test_checkpoint_restart_bitwise_continuation(straight, restarted, kill_at):
+    """Straight N steps == (k steps + checkpoint + kill + resume) bitwise.
+
+    kill_at=3 lands before the BN-fusion boundary (the resumed process
+    must rebuild the *unfused* template, then fuse at the boundary
+    itself); kill_at=7 lands strictly inside the final annealed QAT phase
+    — the restored mid-phase AdamW state (fused tree shape) must continue
+    the straight run's stream, and so must the checkpointed
+    online-quantization observers."""
+    resumed = restarted[kill_at]
+    assert resumed.done and resumed.step == CFG.total_steps
+    _leaves_equal(straight.params, resumed.params)
+    # the run log rides the checkpoint manifest: a resumed run reports the
+    # WHOLE run (loss curve, calibration rounds), not the post-resume tail
+    assert resumed.history["loss"] == straight.history["loss"]
+    assert (len(resumed.history["calibration"])
+            == len(straight.history["calibration"]))
+    assert set(straight.observers) == set(resumed.observers)
+    _leaves_equal(
+        {k: [o.min_val, o.max_val] for k, o in straight.observers.items()},
+        {k: [o.min_val, o.max_val] for k, o in resumed.observers.items()})
+
+
+def test_export_deterministic_after_restart(straight, restarted):
+    """The artifact is a pure function of the run state: exporting from a
+    resumed run — with its restored online-quantization observers —
+    freezes byte-identical integer constants."""
+    resumed = restarted[7]
+    assert V.observers_ready(straight.observers)
+    assert V.observers_ready(resumed.observers)
+    qa, _ = V.export(straight.params, straight.net, CFG, verify=False,
+                     observers=straight.observers)
+    qb, _ = V.export(resumed.params, resumed.net, CFG, verify=False,
+                     observers=resumed.observers)
+    for name in qa.ops:
+        np.testing.assert_array_equal(qa.ops[name].w_q, qb.ops[name].w_q)
+        np.testing.assert_array_equal(qa.ops[name].mantissa,
+                                      qb.ops[name].mantissa)
+        np.testing.assert_array_equal(qa.ops[name].bias_q, qb.ops[name].bias_q)
+    assert qa.res_q == qb.res_q
+
+
+# ---------------------------------------------------------------------------
+# export -> serve conformance (the acceptance gate)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def exported(straight, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("export") / "trained.qnet")
+    tuned = tune_qnet(
+        Q.quantize_net(straight.params, straight.net,
+                       _export_observers(straight)),
+        batch=4, measure=_fake_measure(), include_pallas=False)
+    qnet, report = V.export(straight.params, straight.net, CFG, path=path,
+                            tuned=tuned)
+    return qnet, report, path, tuned
+
+
+def _export_observers(straight):
+    """From-scratch export calibration — the same single recipe export()
+    itself runs when no trained observers are handed in."""
+    return V.run_calibration(straight.params, straight.net, CFG,
+                             momentum=None)[0]
+
+
+def test_export_parity_all_routes(exported):
+    """Reference / prepared / stage executors / tuned VisionEngine: one
+    trained artifact, four serving routes, zero LSB drift."""
+    _, report, _, tuned = exported
+    assert report["verified"]
+    routes = report["routes"]
+    assert "reference" in routes
+    assert "prepared" in routes
+    assert "stage-executors" in routes
+    assert "engine[tuned]" in routes  # the tuned plan really attached
+    assert report["tuned_entries"] == len(tuned) > 0
+
+
+def test_exported_artifact_reloads_and_serves(exported):
+    """Disk -> build record -> NetSpec -> VisionEngine, bit-exact with the
+    pre-freeze verification logits."""
+    qnet, report, path, _ = exported
+    assert os.path.getsize(path) > 0
+    x = np.asarray(V.calibration_batches(CFG)[0])
+    # route 1: core loader, no NetSpec in hand
+    reloaded = Q.load_qnet(path)
+    np.testing.assert_array_equal(
+        np.asarray(cu.run_qnet(reloaded, x)), report["logits"])
+    # route 2: the serve-side artifact loader
+    eng = VisionEngine.from_artifact(path, buckets=(x.shape[0],))
+    rids = [eng.submit(img) for img in x]
+    res = eng.run()
+    got = np.stack([res[r].logits for r in rids])
+    np.testing.assert_array_equal(got, report["logits"])
+
+
+def test_exported_artifact_schema(exported):
+    _, _, path, _ = exported
+    meta = Q.read_qnet_meta(path)
+    assert meta["build"]["model"] == "mobilenet_v2"
+    assert meta["build"]["input_hw"] == CFG.input_hw
+    prov = meta["provenance"]
+    for key in ("total_steps", "float_steps", "qat_steps", "act_bits",
+                "seed", "data_seed", "calib_seed", "verified_routes"):
+        assert key in prov, key
+    assert prov["verified_routes"], "artifact frozen without a parity proof"
+    for name, m in meta["ops"].items():
+        assert {"in_scale", "in_zp", "out_scale", "out_zp", "clip",
+                "bits"} <= set(m), name
+
+
+def test_verify_export_catches_drift(exported):
+    """The parity gate actually fires: corrupt one requant constant and the
+    export proof must refuse the artifact."""
+    qnet, report, _, _ = exported
+    broken = Q.QNet(qnet.spec,
+                    {k: dataclasses.replace(v) for k, v in qnet.ops.items()},
+                    dict(qnet.res_q))
+    name = next(iter(broken.ops))
+    qop = broken.ops[name]
+    broken.ops[name] = dataclasses.replace(qop, mult=np.asarray(qop.mult) * 1.5)
+    x = np.asarray(V.calibration_batches(CFG)[0])
+    cus, acts, logits = V.stage_vectors(qnet, x)  # reference = intact net
+    with pytest.raises(V.ExportParityError):
+        got = np.asarray(cu.run_qnet(broken, x))
+        V._check_equal("corrupted", got, logits, [])
+
+
+def test_launch_driver_check_artifact(exported, capsys):
+    from repro.launch.train_vision import check_artifact
+    _, _, path, _ = exported
+    assert check_artifact(path) == 0
+    out = capsys.readouterr().out
+    assert "routes bit-exact" in out
