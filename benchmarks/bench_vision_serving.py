@@ -47,11 +47,17 @@ from repro.models import layers, mobilenet_v2 as mnv2
 from repro.serve.vision import VisionEngine
 
 
-def _run_engine(qnet, imgs, batch, repeats, **engine_kwargs):
-    """Best-of-N serving drains; returns (stats, results)."""
-    stats = results = None
+def _run_engine(qnet, imgs, batch, repeats, obs=False, **engine_kwargs):
+    """Best-of-N serving drains; returns (stats, results) — plus the best
+    round's (tracer, metrics) when `obs=True` (fresh per round, so the
+    exported trace/snapshot describe exactly the drain that won)."""
+    stats = results = best_obs = None
     for _ in range(repeats):
-        eng = VisionEngine(qnet, buckets=(batch,), **engine_kwargs)
+        kw = dict(engine_kwargs)
+        if obs:
+            from repro.obs import MetricsRegistry, Tracer
+            kw.update(tracer=Tracer(), metrics=MetricsRegistry())
+        eng = VisionEngine(qnet, buckets=(batch,), **kw)
         eng.warmup()
         for img in imgs:
             eng.submit(img)
@@ -59,6 +65,10 @@ def _run_engine(qnet, imgs, batch, repeats, **engine_kwargs):
         st = eng.stats()
         if stats is None or st.fps > stats.fps:
             stats, results = st, res
+            if obs:
+                best_obs = (kw["tracer"], kw["metrics"])
+    if obs:
+        return stats, results, best_obs
     return stats, results
 
 
@@ -136,6 +146,30 @@ def run(alpha: float = 0.35, hw: int = 48, batch: int = 8, n_images: int = 64,
     got0 = np.stack([results[r].logits for r in sorted(results)[:batch]])
     exact = bool(np.array_equal(got0, np.asarray(ref0)))
 
+    # --- observability overhead: same fast engine, tracing + metrics on --
+    # (the <5% budget the obs layer owes the hot path; the winning round's
+    # snapshot rides the report as the serving profile). A smoke-geometry
+    # drain is ~10ms and shared-box scheduler noise swamps a back-to-back
+    # best-of comparison, so the overhead is the MEDIAN of paired
+    # (obs-off, obs-on) round ratios — drift inside a pair hits both
+    # configurations, and the median discards the outlier pairs.
+    obs_rounds = max(repeats, 5)
+    stats_obs = results_obs = best_obs = None
+    ratios = []
+    for _ in range(obs_rounds):
+        st_f, _ = _run_engine(qnet, imgs, batch, 1)
+        st_o, res_o, pair = _run_engine(qnet, imgs, batch, 1, obs=True)
+        if stats_obs is None or st_o.fps > stats_obs.fps:
+            stats_obs, results_obs, best_obs = st_o, res_o, pair
+        if st_f.fps > 0:
+            ratios.append(st_o.fps / st_f.fps)
+    tracer, metrics = best_obs
+    got_obs = np.stack(
+        [results_obs[r].logits for r in sorted(results_obs)[:batch]])
+    exact_obs = bool(np.array_equal(got_obs, np.asarray(ref0)))
+    ratios.sort()
+    obs_overhead = (1.0 - ratios[len(ratios) // 2]) if ratios else None
+
     # --- PR-4 tuned path: measured per-op routes from the committed cache -
     tuned_plan = _load_tuned(tuned_cache)
     stats_tuned = exact_tuned = coverage = None
@@ -172,6 +206,11 @@ def run(alpha: float = 0.35, hw: int = 48, batch: int = 8, n_images: int = 64,
         "speedup_tuned_vs_default": (
             stats_tuned.fps / stats.fps if stats_tuned is not None else None),
         "tuned_bit_exact_with_run_qnet": exact_tuned,
+        "fps_pipelined_obs": stats_obs.fps,
+        "obs_overhead_frac": obs_overhead,
+        "obs_bit_exact_with_run_qnet": exact_obs,
+        "obs_trace_events": len(tracer),
+        "obs_metrics_snapshot": metrics.snapshot(),
         "latency_p50_s": stats.latency_p50_s,
         "latency_p95_s": stats.latency_p95_s,
         "latency_p50_s_pipelined_pr1": stats_pr1.latency_p50_s,
@@ -205,6 +244,10 @@ def run(alpha: float = 0.35, hw: int = 48, batch: int = 8, n_images: int = 64,
             f"fps={stats_tuned.fps:.1f} "
             f"vs_default={report['speedup_tuned_vs_default']:.2f}x "
             f"coverage={coverage:.2f} exact={exact_tuned}")
+    row("vision_serve_pipelined_obs",
+        stats_obs.wall_s / stats_obs.micro_batches * 1e6,
+        f"fps={stats_obs.fps:.1f} overhead={obs_overhead:+.1%} "
+        f"trace_events={len(tracer)} exact={exact_obs}")
     return report
 
 

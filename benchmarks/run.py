@@ -14,12 +14,14 @@
 `--smoke` runs the fast subset (kernels + a reduced vision-serving pass +
 the replica-scaling sweep) and asserts the JSON reports still parse — the
 CI gate. A full (or smoke) run aggregates the per-benchmark results into a
-perf-trajectory report at the repo root, BENCH_PR4.json: throughput /
+perf-trajectory report at the repo root, BENCH_PR6.json: throughput /
 latency / analytic bytes-moved, tuned-vs-default serving FPS (measured
 per-op routes from the committed `experiments/tuned/` cache), the
-per-replica-count scaling curve (each point conformance-checked against
-the frozen golden fixtures), plus deltas against the previous PR's
-`experiments/vision_serving.json` baseline captured before this run
+obs-enabled serving FPS + metrics-snapshot profile (the observability
+layer's <5% hot-path overhead budget, recorded as `obs_overhead_frac`),
+the per-replica-count scaling curve (each point conformance-checked
+against the frozen golden fixtures), plus deltas against the previous
+PR's `experiments/vision_serving.json` baseline captured before this run
 overwrote it. Force N CPU devices with
 `XLA_FLAGS=--xla_force_host_platform_device_count=N` to exercise the
 sharded points.
@@ -41,7 +43,7 @@ import json
 import os
 import sys
 
-BENCH_REPORT = "BENCH_PR4.json"
+BENCH_REPORT = "BENCH_PR6.json"
 VISION_REPORT = "experiments/vision_serving.json"
 SCALING_REPORT = "experiments/vision_serving_scaling.json"
 TUNED_CACHE = "experiments/tuned/bench_cpu.json"
@@ -71,11 +73,12 @@ def _write_trajectory(vision, kernels, baseline, smoke: bool,
         pr1_fps = baseline.get("fps_pipelined_fast",
                                baseline.get("fps_pipelined"))
     report = {
-        "pr": 4,
+        "pr": 6,
         "smoke": smoke,
         "baseline_source": VISION_REPORT if baseline else None,
         "serving": None,
         "tuned": None,
+        "observability": None,
         "scaling": None,
         "kernels": kernels,
     }
@@ -91,6 +94,7 @@ def _write_trajectory(vision, kernels, baseline, smoke: bool,
             "fps_pipelined_pr1": vision["fps_pipelined"],
             "fps_pipelined_fast": fast,
             "fps_pipelined_tuned": vision.get("fps_pipelined_tuned"),
+            "fps_pipelined_obs": vision.get("fps_pipelined_obs"),
             "latency_p50_s": vision["latency_p50_s"],
             "latency_p95_s": vision["latency_p95_s"],
             "bit_exact_with_run_qnet": vision["bit_exact_with_run_qnet"],
@@ -103,6 +107,26 @@ def _write_trajectory(vision, kernels, baseline, smoke: bool,
                 vision["latency_p50_s"] - baseline["latency_p50_s"]
                 if baseline and "latency_p50_s" in baseline else None),
         }
+        if vision.get("fps_pipelined_obs") is not None:
+            # the serving profile as the obs layer saw it: headline FPS
+            # with tracing+metrics on (the <5% overhead budget), plus the
+            # registry snapshot's latency percentiles / FPS-per-Watt proxy
+            snap = vision.get("obs_metrics_snapshot") or {}
+            lat = (snap.get("histograms") or {}).get(
+                'serve_request_latency_seconds{model="default"}') or {}
+            report["observability"] = {
+                "fps_obs_on": vision["fps_pipelined_obs"],
+                "obs_overhead_frac": vision.get("obs_overhead_frac"),
+                "bit_exact_with_obs_on":
+                    vision.get("obs_bit_exact_with_run_qnet"),
+                "trace_events": vision.get("obs_trace_events"),
+                "latency_p50_s": lat.get("p50"),
+                "latency_p95_s": lat.get("p95"),
+                "latency_p99_s": lat.get("p99"),
+                "fps_per_watt_proxy": (snap.get("gauges") or {}).get(
+                    'serve_fps_per_watt_proxy{model="default"}'),
+                "metrics_snapshot": snap,
+            }
         if vision.get("tuned_cache"):
             report["tuned"] = {
                 "cache": vision["tuned_cache"],
@@ -170,7 +194,8 @@ def _collect_throughput_rows(base, cur):
     for key in ("fps_pipelined_fast", "fps_pipelined_tuned"):
         if bs.get(key) is not None and cs.get(key) is not None:
             rows.append((f"serving.{key}", bs[key], cs[key], same_serving))
-    for key in ("fps_pipelined_pr1", "fps_monolith_jit", "fps_naive",
+    for key in ("fps_pipelined_obs", "fps_pipelined_pr1",
+                "fps_monolith_jit", "fps_naive",
                 "latency_p50_s", "latency_p95_s"):
         if bs.get(key) is not None and cs.get(key) is not None:
             rows.append((f"serving.{key}", bs[key], cs[key], False))

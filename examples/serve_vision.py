@@ -16,7 +16,12 @@ When more than one device is visible, the engine shards every micro-batch
 data-parallel across a `dist.sharding.data_mesh`; the logits stay
 bit-identical to the single-device run. A second model (the compact
 EfficientNet) is served concurrently through the EDF `MultiModelEngine`.
+The multi-model run records a request-lifecycle trace + metrics
+(`repro.obs`), dumps the trace as Perfetto-loadable Chrome JSON, and prints
+the pipeline-profile summary.
 """
+import os
+import tempfile
 import time
 
 import jax
@@ -27,6 +32,7 @@ from repro.core import compiler as CC, cu
 from repro.dist.sharding import data_mesh
 from repro.models import efficientnet as effn, mobilenet_v2 as mnv2
 from repro.models.layers import make_calibrated_qnet
+from repro.obs import MetricsRegistry, Tracer, render_report, summarize_trace
 from repro.serve.vision import MultiModelEngine, VisionEngine
 
 
@@ -72,12 +78,19 @@ def main():
           f"-> {stats.fps_per_watt_proxy:.0f} FPS/W-proxy")
 
     # 5. multi-model routing: MobileNetV2 + compact EfficientNet share the
-    # device(s); the router dispatches micro-batches EDF across models
+    # device(s); the router dispatches micro-batches EDF across models.
+    # One shared tracer + registry puts both models on one observability
+    # timeline (per-request lifecycle spans, per-stage dispatch tracks).
+    tracer, metrics = Tracer(), MetricsRegistry()
     effq = make_calibrated_qnet(
         effn.build_compact(input_hw=hw, num_classes=1000), n_cal=4)
     router = MultiModelEngine({
-        "mobilenet_v2": VisionEngine(qnet, buckets=(2, 4), mesh=mesh),
-        "efficientnet_compact": VisionEngine(effq, buckets=(2, 4), mesh=mesh),
+        "mobilenet_v2": VisionEngine(
+            qnet, buckets=(2, 4), mesh=mesh, tracer=tracer,
+            metrics=metrics, name="mobilenet_v2"),
+        "efficientnet_compact": VisionEngine(
+            effq, buckets=(2, 4), mesh=mesh, tracer=tracer,
+            metrics=metrics, name="efficientnet_compact"),
     })
     router.warmup()
     now = time.perf_counter()
@@ -86,8 +99,16 @@ def main():
                              deadline_s=now + (1.0 if i % 4 == 1 else 10.0))
                for i, img in enumerate(images[:8])]
     res = router.run()
+    router.stats()  # refresh the fps / fps-per-watt gauges
     print(f"multi-model: {sum(res[h].status == 'ok' for h in handles)}/8 ok, "
           f"dispatch order {[m for m, _ in router.dispatch_log]}")
+
+    # 6. export the trace (drop into https://ui.perfetto.dev) + summarize
+    trace_path = os.path.join(tempfile.gettempdir(), "serve_vision_trace.json")
+    tracer.save(trace_path)
+    print(f"trace ({len(tracer)} events) -> {trace_path}")
+    print(render_report(summarize_trace(tracer.to_chrome()),
+                        metrics.snapshot()))
 
 
 if __name__ == "__main__":

@@ -18,7 +18,10 @@ the pipelined CU stage executors: --replicas builds a 1-D 'data' mesh and
 shards every micro-batch across it; more than one --models entry routes
 requests through the EDF `MultiModelEngine`. --tuned-cache serves through
 a committed per-op route selection (see `repro.tune`); --tune measures one
-live first.
+live first. --trace-out exports the request-lifecycle Chrome trace
+(Perfetto-loadable), --metrics-out the metrics registry (Prometheus text
+for .prom/.txt, JSON snapshot otherwise); `python -m repro.obs summarize`
+renders either into a pipeline-profile report.
 """
 from __future__ import annotations
 
@@ -76,6 +79,13 @@ def vision_main(args) -> None:
     from repro.dist.sharding import data_mesh
     from repro.serve.vision import MultiModelEngine, VisionEngine
 
+    tracer = metrics = None
+    if args.trace_out:
+        from repro.obs import Tracer
+        tracer = Tracer()  # one tracer across models = one timeline
+    if args.metrics_out:
+        from repro.obs import MetricsRegistry
+        metrics = MetricsRegistry()
     mesh = data_mesh(args.replicas) if args.replicas > 1 else None
     # --batch bounds the largest micro-batch; the engine rounds buckets up
     # to replica multiples itself
@@ -89,7 +99,8 @@ def vision_main(args) -> None:
             print(f"[serve-vision] {m}: tuned route coverage "
                   f"{tuned.coverage(q):.0%}")
     engines = {
-        m: VisionEngine(qnets[m], mesh=mesh, buckets=buckets, tuned=tuned)
+        m: VisionEngine(qnets[m], mesh=mesh, buckets=buckets, tuned=tuned,
+                        tracer=tracer, metrics=metrics, name=m)
         for m in models
     }
     router = MultiModelEngine(engines)
@@ -108,6 +119,16 @@ def vision_main(args) -> None:
         print(f"[serve-vision] {m}: fps={st.fps:.1f} "
               f"p95={st.latency_p95_s*1e3:.1f}ms "
               f"micro_batches={st.micro_batches} replicas={st.replicas}")
+    if tracer is not None:
+        print(f"[serve-vision] trace -> {tracer.save(args.trace_out)} "
+              f"({len(tracer)} events; load in https://ui.perfetto.dev)")
+    if metrics is not None:
+        print(f"[serve-vision] metrics -> {metrics.save(args.metrics_out)}")
+    if tracer is not None or metrics is not None:
+        from repro.obs import render_report, summarize_trace
+        print(render_report(
+            summarize_trace(tracer.to_chrome()) if tracer else None,
+            metrics.snapshot() if metrics else None))
 
 
 def main(argv=None):
@@ -128,6 +149,12 @@ def main(argv=None):
     ap.add_argument("--tuned-cache", default=None,
                     help="tuning-cache JSON to load (or write, with "
                          "--tune) for vision serving")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace of the vision serving run "
+                         "(Perfetto-loadable request-lifecycle timeline)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the vision metrics registry (.prom/.txt = "
+                         "Prometheus text, else JSON snapshot)")
     ap.add_argument("--arch", choices=sorted(ARCHS), default="llama3.2-1b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)

@@ -1,0 +1,49 @@
+"""Observability layer: request-lifecycle tracing + a metrics registry.
+
+Zero-dependency substrate the serving / tuning / training subsystems report
+into (and the ROADMAP's autoscaling replica manager and energy CI gate will
+read from):
+
+  * `trace`   — span-based `Tracer` with an injectable clock, exported as
+                Chrome trace-event JSON (Perfetto-loadable); `NULL` no-op
+                tracer keeps the hot path untouched when tracing is off.
+  * `metrics` — counters / gauges / fixed-bucket histograms with
+                Prometheus text exposition and a JSON-safe snapshot
+                (`NULL_REGISTRY` when disabled).
+  * `summary` — `python -m repro.obs summarize` pipeline-profile reports
+                (top-N slowest spans, queue-wait percentiles); `validate`
+                schema-checks exported traces in CI.
+"""
+from repro.obs.metrics import (
+    LATENCY_BUCKETS_S,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NULL_REGISTRY,
+    NullRegistry,
+)
+from repro.obs.summary import render_report, span_groups, summarize_trace
+from repro.obs.trace import (
+    NULL,
+    NullTracer,
+    Tracer,
+    validate_chrome_trace,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "LATENCY_BUCKETS_S",
+    "MetricsRegistry",
+    "NULL",
+    "NULL_REGISTRY",
+    "NullRegistry",
+    "NullTracer",
+    "Tracer",
+    "render_report",
+    "span_groups",
+    "summarize_trace",
+    "validate_chrome_trace",
+]

@@ -45,6 +45,8 @@ from repro.core import compiler as CC
 from repro.core import graph as G
 from repro.core.qnet import QNet
 from repro.dist.sharding import batch_sharding
+from repro.obs import metrics as OM
+from repro.obs import trace as OT
 from repro.serve.vision.pipeline import PipelinedExecutor
 from repro.serve.vision.stages import CompiledStage, compile_stages
 
@@ -120,6 +122,10 @@ class EngineStats:
     energy_j_per_image_proxy: float
     fps_per_watt_proxy: float
     replicas: int = 1  # mesh 'data' extent the engine shards over
+    latency_p99_s: float = float("nan")
+    # traces at non-bucketed shapes per stage (should stay all-zero; see
+    # CompiledStage.allowed_batches — a nonzero count is a retrace leak)
+    stage_retraces: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -168,6 +174,9 @@ class VisionEngine:
         tuned=None,
         clock: Optional[Callable[[], float]] = None,
         max_queue: int = 4096,
+        tracer: Optional[OT.Tracer] = None,
+        metrics: Optional[OM.MetricsRegistry] = None,
+        name: str = "default",
     ):
         if not buckets or any(b <= 0 for b in buckets):
             raise ValueError(f"bad buckets {buckets}")
@@ -192,7 +201,12 @@ class VisionEngine:
             body_fast_path=body_fast_path, op_kernels=op_kernels,
             prepare=prepare, donate=donate, interpret=interpret, mesh=mesh,
             tuned=tuned)
-        self.pipe = PipelinedExecutor(self.stages, clock=self._clock)
+        self.name = name
+        self.tracer = tracer if tracer is not None else OT.NULL
+        self.metrics = metrics
+        self._reg = metrics if metrics is not None else OM.NULL_REGISTRY
+        self.pipe = PipelinedExecutor(self.stages, clock=self._clock,
+                                      tracer=tracer, metrics=metrics)
         net = qnet.spec
         self.input_shape = (net.input_hw, net.input_hw, net.input_ch)
         self._queue: List[VisionRequest] = []
@@ -206,6 +220,70 @@ class VisionEngine:
         self._rows = 0
         self._pad_rows = 0
         self._wall_s = 0.0
+        self._init_obs()
+
+    def _init_obs(self) -> None:
+        """Register instruments, arm retrace-leak detection, name the trace
+        tracks, and tie stage dispatch spans back to request ids."""
+        reg, lbl = self._reg, {"model": self.name}
+        self._m_submitted = reg.counter(
+            "serve_requests_submitted_total", "requests admitted", labels=lbl)
+        self._m_expired = reg.counter(
+            "serve_requests_expired_total",
+            "requests dropped at batch forming (EDF deadline expiry)",
+            labels=lbl)
+        self._m_completed = reg.counter(
+            "serve_requests_completed_total", "requests answered with logits",
+            labels=lbl)
+        self._m_qdepth = reg.gauge(
+            "serve_queue_depth", "requests waiting for batch formation",
+            labels=lbl)
+        self._m_qwait = reg.histogram(
+            "serve_queue_wait_seconds",
+            "arrival to batch-formation wait", labels=lbl)
+        self._m_latency = reg.histogram(
+            "serve_request_latency_seconds",
+            "arrival to harvested-logits latency", labels=lbl)
+        self._m_batches = reg.counter(
+            "serve_micro_batches_total", "bucket-padded micro-batches formed",
+            labels=lbl)
+        self._m_rows = reg.counter(
+            "serve_dispatched_rows_total",
+            "rows dispatched incl. bucket padding", labels=lbl)
+        self._m_pad = reg.counter(
+            "serve_pad_rows_total", "bucket-padding waste rows", labels=lbl)
+        self._m_fps = reg.gauge(
+            "serve_fps", "completed images per second of drain wall time",
+            labels=lbl)
+        self._m_fpw = reg.gauge(
+            "serve_fps_per_watt_proxy",
+            "images per joule under the pJ/MAC energy proxy", labels=lbl)
+        # retrace-leak detection: every stage knows the legal batch shapes
+        # (the padded buckets); a trace outside them is a leak past the
+        # batch former — counted, warned, and surfaced in stats()
+        allowed = frozenset(self.buckets)
+        for st in self.stages:
+            st.allowed_batches = allowed
+            st.on_retrace = self._note_retrace(reg.counter(
+                "serve_stage_retraces_total",
+                "stage traces at non-bucketed batch shapes (retrace leak)",
+                labels={"model": self.name, "cu": st.spec.cu}))
+        if self.tracer:
+            self.tracer.name_track(OT.TID_ENGINE, "engine")
+            self.tracer.name_track(OT.TID_REQUESTS, "requests")
+            self.tracer.name_track(OT.TID_SCHED, "scheduler")
+            self.pipe.tag_info = lambda reqs: {"rids": [r.rid for r in reqs]}
+
+    def _note_retrace(self, metric) -> Callable:
+        def _hook(stage: CompiledStage, shape: Tuple[int, ...]) -> None:
+            metric.inc()
+            if self.tracer:
+                self.tracer.instant(
+                    f"retrace:{stage.spec.cu}", self._clock(),
+                    cat="retrace", tid=OT.TID_ENGINE,
+                    args={"shape": list(shape),
+                          "buckets": sorted(stage.allowed_batches)})
+        return _hook
 
     # ------------------------------------------------------------------
     # admission
@@ -229,9 +307,21 @@ class VisionEngine:
         if len(self._queue) >= self.max_queue:
             raise AdmissionError(f"queue full ({self.max_queue})")
         rid = next(self._rid)
+        arrival = self._clock() if now is None else now
         self._queue.append(VisionRequest(
-            rid=rid, image=image, deadline_s=deadline_s,
-            arrival_s=self._clock() if now is None else now))
+            rid=rid, image=image, deadline_s=deadline_s, arrival_s=arrival))
+        self._m_submitted.inc()
+        self._m_qdepth.set(len(self._queue))
+        if self.tracer:
+            # per-request lifecycle span opens at admission (async "b",
+            # closed at expiry or completion); arrival is already read —
+            # no extra clock reads on the admission path
+            self.tracer.async_begin(
+                "request", rid, arrival, cat=f"request:{self.name}",
+                args={"model": self.name, "deadline_s": deadline_s})
+            self.tracer.counter(
+                f"queue_depth:{self.name}", {"pending": len(self._queue)},
+                arrival)
         return rid
 
     def pending(self) -> int:
@@ -266,6 +356,7 @@ class VisionEngine:
             key=lambda r: r.deadline_s if r.deadline_s is not None
             else float("inf"))
         pending, self._queue = self._queue, []
+        self._m_qdepth.set(0)
         head = 0
         while head < len(pending):
             now = self._clock()
@@ -277,6 +368,12 @@ class VisionEngine:
                     self._results[req.rid] = RequestResult(
                         req.rid, "expired", None, now - req.arrival_s)
                     self._n_expired += 1
+                    self._m_expired.inc()
+                    if self.tracer:
+                        self.tracer.async_end(
+                            "request", req.rid, now,
+                            cat=f"request:{self.name}",
+                            args={"status": "expired"})
                     continue
                 live.append(req)
             if not live:
@@ -288,6 +385,28 @@ class VisionEngine:
             self._micro_batches += 1
             self._rows += bucket
             self._pad_rows += bucket - len(live)
+            self._m_batches.inc()
+            self._m_rows.inc(bucket)
+            self._m_pad.inc(bucket - len(live))
+            for req in live:
+                self._m_qwait.observe(now - req.arrival_s)
+            if self.tracer:
+                # batch-formation span covers the host-side gather+pad; the
+                # per-request queue waits nest as b/e pairs on timestamps
+                # already read (arrival, now) — zero extra clock reads
+                tf1 = self._clock()
+                self.tracer.complete(
+                    "form_batch", now, tf1, cat="pipeline", tid=OT.TID_SCHED,
+                    args={"model": self.name, "bucket": bucket,
+                          "live": len(live), "pad": bucket - len(live),
+                          "rids": [r.rid for r in live]})
+                for req in live:
+                    self.tracer.async_begin(
+                        "queue_wait", req.rid, req.arrival_s,
+                        cat=f"request:{self.name}")
+                    self.tracer.async_end(
+                        "queue_wait", req.rid, now,
+                        cat=f"request:{self.name}")
             yield live, self._place(x)
 
     # ------------------------------------------------------------------
@@ -303,6 +422,12 @@ class VisionEngine:
                 req.rid, "ok", logits[i], done - req.arrival_s)
             self._latencies.append(done - req.arrival_s)
             self._n_ok += 1
+            self._m_completed.inc()
+            self._m_latency.observe(done - req.arrival_s)
+            if self.tracer:
+                self.tracer.async_end(
+                    "request", req.rid, done, cat=f"request:{self.name}",
+                    args={"status": "ok"})
 
     def _collect_results(self) -> Dict[int, RequestResult]:
         results, self._results = self._results, {}
@@ -314,7 +439,12 @@ class VisionEngine:
         t0 = self._clock()
         for reqs, y in self.pipe.stream(self._form_batches()):
             self._record_batch(reqs, y, self._clock())
-        self._wall_s += self._clock() - t0
+        t1 = self._clock()
+        self._wall_s += t1 - t0
+        if self.tracer:
+            self.tracer.complete(
+                "drain", t0, t1, cat="engine", tid=OT.TID_ENGINE,
+                args={"model": self.name})
         return self._collect_results()
 
     def warmup(self) -> None:
@@ -337,6 +467,9 @@ class VisionEngine:
         # proxy it is 1/J-per-image by construction, independent of the
         # achieved rate (real silicon adds a static-power term that would
         # make it rate-dependent).
+        self._m_fps.set(fps)
+        if energy_j > 0:
+            self._m_fpw.set(1.0 / energy_j)
         return EngineStats(
             n_ok=self._n_ok,
             n_expired=self._n_expired,
@@ -353,6 +486,8 @@ class VisionEngine:
             energy_j_per_image_proxy=energy_j,
             fps_per_watt_proxy=(1.0 / energy_j) if energy_j > 0 else 0.0,
             replicas=self.replicas,
+            latency_p99_s=_percentile(lat, 0.99),
+            stage_retraces={s.spec.cu: s.retraces for s in self.stages},
         )
 
 
@@ -406,6 +541,14 @@ class MultiModelEngine:
                 eng._clock = clock
                 eng.pipe._clock = clock
         self.dispatch_log: List[Tuple[str, int]] = []
+        # router dispatch decisions, counted into each engine's registry
+        # (engines sharing a registry/tracer yield one fleet-wide view)
+        self._m_dispatch = {
+            m: e._reg.counter(
+                "router_dispatch_total",
+                "micro-batches the EDF router dispatched for this model",
+                labels={"model": m})
+            for m, e in self.engines.items()}
 
     # -- admission ---------------------------------------------------------
 
@@ -469,6 +612,16 @@ class MultiModelEngine:
                     if batch is not None:
                         eng.pipe.inject(batch)
                         self.dispatch_log.append((m, len(batch[0])))
+                        self._m_dispatch[m].inc()
+                        if eng.tracer:
+                            edf = self._edf_key(batch)
+                            eng.tracer.instant(
+                                "router_dispatch", self._clock(),
+                                cat="router", tid=OT.TID_SCHED,
+                                args={"model": m, "rows": len(batch[0]),
+                                      "edf_deadline_s":
+                                          edf if math.isfinite(edf)
+                                          else None})
                         peeked[m] = next(formers[m], None)
                     if finished is not None:
                         eng.pipe.harvest(finished)
@@ -480,13 +633,18 @@ class MultiModelEngine:
             # batches to replay into a later run()'s results
             for m in self.engines:
                 self.engines[m].pipe.reset()
-        wall = self._clock() - t0
+        t1 = self._clock()
+        wall = t1 - t0
         results: Dict[Tuple[str, int], RequestResult] = {}
         for m, eng in self.engines.items():
             if m in active:
                 # the drain shared the device, so the full drain wall is
                 # each participating model's serving window
                 eng._wall_s += wall
+                if eng.tracer:
+                    eng.tracer.complete(
+                        "drain", t0, t1, cat="engine", tid=OT.TID_ENGINE,
+                        args={"model": m})
             for rid, res in eng._collect_results().items():
                 results[(m, rid)] = res
         return results

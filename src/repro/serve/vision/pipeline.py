@@ -13,6 +13,15 @@ micro-batch into the Head slot. All dispatches inside a tick are enqueued
 without synchronisation; the only blocking point is harvesting a finished
 Classifier output, by which time the ticks have already queued Head/Body
 work for the following micro-batches.
+
+Observability (`tracer=` / `metrics=`, see `repro.obs`): each stage
+dispatch becomes a span on that CU's trace track (dispatch/enqueue time —
+XLA dispatch is asynchronous, so stage *compute* shows up as harvest wait
+at the sync point, which is also traced), plus per-stage dispatch-seconds
+and bytes-moved instruments and a harvest-wait histogram. All extra clock
+reads are guarded by `if tracer` / registered-instrument no-ops: with
+observability off the executor performs exactly the clock reads it always
+did (fake-clock tests stay bitwise).
 """
 from __future__ import annotations
 
@@ -21,11 +30,24 @@ from typing import Any, Iterable, Iterator, List, Optional, Tuple
 
 import jax
 
+from repro.obs import metrics as OM
+from repro.obs import trace as OT
 from repro.serve.vision.stages import CompiledStage
 
 
+def _stage_bytes_per_row(stage: CompiledStage) -> int:
+    """Analytic uint8 activation traffic of one batch row through a stage:
+    input read + output write at the stage boundary (the DDR view of the
+    paper's CU invocation; intra-stage intermediates stay 'on-chip')."""
+    sig = stage.spec.signature
+    n_in = (sig.in_hw or 1) * (sig.in_hw or 1) * sig.in_ch
+    n_out = (sig.out_hw or 1) * (sig.out_hw or 1) * sig.out_ch
+    return n_in + n_out
+
+
 class PipelinedExecutor:
-    def __init__(self, stages: List[CompiledStage], clock=None):
+    def __init__(self, stages: List[CompiledStage], clock=None,
+                 tracer: Optional[OT.Tracer] = None, metrics=None):
         if not stages:
             raise ValueError("need at least one stage")
         self.stages = stages
@@ -37,6 +59,33 @@ class PipelinedExecutor:
         self._streaming = False
         # wall time spent blocked on finished outputs (pipeline stall proxy)
         self.harvest_wait_s = 0.0
+        self.tracer = tracer if tracer is not None else OT.NULL
+        # optional tag -> trace-args hook: the engine installs one mapping
+        # its (reqs, x) batch tags to request ids, tying every stage
+        # dispatch span back to the requests riding the micro-batch
+        self.tag_info = None
+        reg = metrics if metrics is not None else OM.NULL_REGISTRY
+        self._m_harvest = reg.histogram(
+            "serve_harvest_wait_seconds",
+            "wall time blocked on a finished stage output (the pipeline's "
+            "only sync point)")
+        self._m_ticks = reg.counter(
+            "serve_pipeline_ticks_total", "scheduler ticks advanced")
+        self._stage_row_bytes = [_stage_bytes_per_row(s) for s in stages]
+        self._m_stage_dispatch = []
+        self._m_stage_bytes = []
+        for i, stage in enumerate(stages):
+            cu = stage.spec.cu
+            lbl = {"cu": cu}
+            self._m_stage_dispatch.append(reg.histogram(
+                "serve_stage_dispatch_seconds",
+                "per-stage dispatch (enqueue) wall time", labels=lbl))
+            self._m_stage_bytes.append(reg.counter(
+                "serve_stage_bytes_moved_total",
+                "analytic uint8 activation bytes in+out of the stage",
+                labels=lbl))
+            if self.tracer:
+                self.tracer.name_track(OT.TID_STAGE0 + i, f"stage:{cu}")
 
     @property
     def depth(self) -> int:
@@ -55,12 +104,27 @@ class PipelinedExecutor:
         Returns the (tag, y) that left the last stage this tick, if any —
         NOT yet blocked on; callers harvest via `harvest`."""
         finished = None
+        self._m_ticks.inc()
         for i in reversed(range(self.depth)):
             if self._slots[i] is None:
                 continue
             tag, x = self._slots[i]
             self._slots[i] = None
-            y = self.stages[i](x)  # async dispatch — returns immediately
+            rows = int(x.shape[0])
+            if self.tracer:
+                t0 = self._clock()
+                y = self.stages[i](x)  # async dispatch — returns immediately
+                t1 = self._clock()
+                args = {"rows": rows}
+                if self.tag_info is not None:
+                    args.update(self.tag_info(tag))
+                self.tracer.complete(
+                    f"dispatch:{self.stages[i].spec.cu}", t0, t1,
+                    cat="stage", tid=OT.TID_STAGE0 + i, args=args)
+                self._m_stage_dispatch[i].observe(t1 - t0)
+            else:
+                y = self.stages[i](x)  # async dispatch — returns immediately
+            self._m_stage_bytes[i].inc(rows * self._stage_row_bytes[i])
             if i + 1 < self.depth:
                 self._slots[i + 1] = (tag, y)
             else:
@@ -82,7 +146,12 @@ class PipelinedExecutor:
         """Block until a finished output is ready (the only sync point)."""
         t0 = self._clock()
         jax.block_until_ready(finished[1])
-        self.harvest_wait_s += self._clock() - t0
+        t1 = self._clock()
+        self.harvest_wait_s += t1 - t0
+        self._m_harvest.observe(t1 - t0)
+        if self.tracer:
+            self.tracer.complete("harvest", t0, t1, cat="pipeline",
+                                 tid=OT.TID_SCHED)
         return finished
 
     # -- streaming driver ---------------------------------------------------
@@ -129,10 +198,21 @@ class PipelinedExecutor:
         """Trace every stage at `example`'s batch size (one bucket).
 
         Bypasses `__call__` so warmup traces don't count as CU
-        invocations in the serving stats."""
+        invocations in the serving stats. With tracing on, each stage is
+        blocked on before the next — the one place per-stage *compute*
+        wall time is observable without breaking pipelining, so the spans
+        land on the stage tracks as `warmup:{cu}`."""
         x = example
-        for stage in self.stages:
-            x = stage._fn(x)
+        for i, stage in enumerate(self.stages):
+            if self.tracer:
+                t0 = self._clock()
+                x = jax.block_until_ready(stage._fn(x))
+                self.tracer.complete(
+                    f"warmup:{stage.spec.cu}", t0, self._clock(),
+                    cat="stage", tid=OT.TID_STAGE0 + i,
+                    args={"rows": int(example.shape[0])})
+            else:
+                x = stage._fn(x)
         jax.block_until_ready(x)
 
 

@@ -30,7 +30,8 @@ reuse it for the stage's own output instead of allocating fresh HBM.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple, Union
+import warnings
+from typing import Callable, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -82,6 +83,14 @@ class CompiledStage:
         self.mesh = mesh
         self.invocations = 0  # CU invocations dispatched (micro-batches)
         self.traces = 0  # jit cache misses (should stay == #buckets)
+        # retrace-leak detection: the engine pins the batch sizes it may
+        # legally present (its buckets); a trace at any other leading dim
+        # is a leak — some caller slipped a non-bucketed shape through and
+        # is silently paying an XLA retrace per novel shape.
+        self.allowed_batches: Optional[frozenset] = None
+        self.retraces = 0  # traces outside `allowed_batches`
+        self.on_retrace: Optional[Callable[["CompiledStage", Tuple[int, ...]],
+                                           None]] = None
         jit_kwargs = dict(donate_argnums=(0,) if donate else ())
         if mesh is not None:
             # data-parallel replication: micro-batch rows split along the
@@ -95,6 +104,20 @@ class CompiledStage:
 
     def _trace(self, x: jax.Array) -> jax.Array:
         self.traces += 1
+        if (self.allowed_batches is not None
+                and x.shape[0] not in self.allowed_batches):
+            # a retrace leak, not an error: serving stays correct (jax just
+            # traces again), but every novel shape pays a fresh compile on
+            # the hot path — surface it loudly instead of hiding the stall
+            self.retraces += 1
+            warnings.warn(
+                f"stage {self.spec.cu}: retrace at non-bucketed batch "
+                f"shape {tuple(x.shape)} (buckets "
+                f"{sorted(self.allowed_batches)}) — a caller bypassed the "
+                f"batch former; every novel shape recompiles this stage",
+                RuntimeWarning, stacklevel=2)
+            if self.on_retrace is not None:
+                self.on_retrace(self, tuple(x.shape))
         spec = self.spec
         y = x
         if spec.quantizes_input:

@@ -37,6 +37,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -51,6 +52,8 @@ from repro.core.calibrate import ActObserver, calibrate, relu6_fused_qparams
 from repro.core.quant import QuantConfig
 from repro.data.pipeline import image_batch
 from repro.models import layers
+from repro.obs import metrics as OM
+from repro.obs import trace as OT
 from repro.train import checkpoint as CKPT
 from repro.train import optimizer as O
 from repro.train.train_loop import make_train_step
@@ -374,11 +377,36 @@ def train(
     resume: bool = False,
     stop_after: Optional[int] = None,
     log: Optional[Callable[[str], None]] = None,
+    tracer: Optional[OT.Tracer] = None,
+    metrics: Optional[OM.MetricsRegistry] = None,
 ) -> TrainResult:
     """Run (or resume) the full schedule. `stop_after=k` checkpoints and
     returns after k global steps — the simulated-preemption hook the
-    restart-continuation tests kill the run with."""
+    restart-continuation tests kill the run with.
+
+    `tracer`/`metrics` (see `repro.obs`) record phase / calibration /
+    checkpoint spans on the `train` track plus per-step loss, the act-bit
+    anneal position, calibration-round counts, observer readiness, and
+    checkpoint duration — observability only, never training state."""
     say = log or (lambda s: None)
+    tracer = tracer if tracer is not None else OT.NULL
+    reg = metrics if metrics is not None else OM.NULL_REGISTRY
+    if tracer:
+        tracer.name_track(OT.TID_TRAIN, "train")
+    m_loss = reg.gauge("train_loss", "last train-step loss")
+    m_steps = reg.counter("train_steps_total",
+                          "global train steps run by this process")
+    m_act_bits = reg.gauge(
+        "train_act_bits",
+        "activation bit-width of the current phase (the QAT anneal path)")
+    m_calib = reg.counter("train_calibration_rounds_total",
+                          "online-quantization calibration rounds")
+    m_obs_ready = reg.gauge(
+        "train_observers_ready",
+        "1 once every activation observer holds a finite range")
+    m_ckpt = reg.histogram(
+        "train_checkpoint_seconds",
+        "save_ckpt wall time (incl. waiting out the prior async write)")
     if stop_after is not None and not ckpt_dir:
         # a preemption point without a checkpoint directory would discard
         # the run while claiming it is resumable — refuse up front
@@ -420,18 +448,23 @@ def train(
         nonlocal pending
         if not ckpt_dir:
             return
-        if pending is not None:
-            pending.join()
-        pending = CKPT.save(
-            ckpt_dir, step_done, (params, opt_state, _obs_tree(observers)),
-            keep=cfg.ckpt_keep, async_=True,
-            extra={"fused": not _has_bn(params), "loss": loss,
-                   # JSON round-trip = deep snapshot: the async writer must
-                   # not see later in-place mutations (and tuples normalize
-                   # to lists, same as they come back at restore)
-                   "history": json.loads(json.dumps(history)),
-                   "phase": phases[min(phase_at(cfg, step_done),
-                                       len(phases) - 1)].name})
+        tc0 = time.perf_counter()
+        with tracer.span("checkpoint", cat="train", tid=OT.TID_TRAIN,
+                         args={"step": step_done}):
+            if pending is not None:
+                pending.join()
+            pending = CKPT.save(
+                ckpt_dir, step_done,
+                (params, opt_state, _obs_tree(observers)),
+                keep=cfg.ckpt_keep, async_=True,
+                extra={"fused": not _has_bn(params), "loss": loss,
+                       # JSON round-trip = deep snapshot: the async writer
+                       # must not see later in-place mutations (and tuples
+                       # normalize to lists, same as at restore)
+                       "history": json.loads(json.dumps(history)),
+                       "phase": phases[min(phase_at(cfg, step_done),
+                                           len(phases) - 1)].name})
+        m_ckpt.observe(time.perf_counter() - tc0)
 
     for ph in phases:
         if stopped or completed >= ph.stop:
@@ -460,6 +493,9 @@ def train(
             history["phases"].append(
                 {"name": ph.name, "start": ph.start, "stop": ph.stop,
                  "act_bits": ph.act_bits, "qat": ph.qat})
+        m_act_bits.set(ph.act_bits)
+        ph_t0 = tracer.now() if tracer else 0.0
+        ph_from = completed
 
         for gs in range(completed, ph.stop):
             batch = train_batch(cfg, gs)
@@ -467,11 +503,21 @@ def train(
             loss = float(metrics["loss"])
             history["loss"].append(loss)
             completed = gs + 1
+            m_loss.set(loss)
+            m_steps.inc()
             if ph.qat and cfg.calibrate_every and (
                     (completed - ph.start) % cfg.calibrate_every == 0):
-                observers, summary = run_calibration(
-                    params, net_ph, cfg, observers, act_bits=ph.act_bits)
+                with tracer.span("calibration_round", cat="train",
+                                 tid=OT.TID_TRAIN,
+                                 args={"step": completed,
+                                       "act_bits": ph.act_bits}):
+                    observers, summary = run_calibration(
+                        params, net_ph, cfg, observers, act_bits=ph.act_bits)
                 history["calibration"].append(dict(summary, step=completed))
+                m_calib.inc()
+                if reg:
+                    m_obs_ready.set(1.0 if observers_ready(observers)
+                                    else 0.0)
                 say(f"[train-vision] online-quant round at step {completed}: "
                     f"act{summary['act_bits']} relu6 S="
                     f"{summary['relu6_scale']:.5f}")
@@ -484,6 +530,13 @@ def train(
             if cfg.ckpt_every and (completed % cfg.ckpt_every == 0
                                    or completed == cfg.total_steps):
                 save_ckpt(completed, loss)
+
+        if tracer:
+            tracer.complete(
+                f"phase:{ph.name}", ph_t0, tracer.now(), cat="train",
+                tid=OT.TID_TRAIN,
+                args={"act_bits": ph.act_bits, "qat": ph.qat,
+                      "steps": completed - ph_from})
 
     if pending is not None:
         pending.join()
@@ -584,6 +637,7 @@ def export(
     tune: bool = False,
     measure=None,
     provenance: Optional[Dict[str, Any]] = None,
+    tracer: Optional[OT.Tracer] = None,
 ) -> Tuple[Q.QNet, Dict[str, Any]]:
     """Terminal export step: BN-fuse (if still unfused) -> calibrate on the
     held-out stream -> `quantize_net` -> prove every serving route bit-exact
@@ -609,7 +663,8 @@ def export(
         from repro.tune import tune_qnet
         tuned = tune_qnet(qnet, batch=min(cfg.batch, 8), repeats=1,
                           measure=measure,
-                          include_pallas=jax.default_backend() == "tpu")
+                          include_pallas=jax.default_backend() == "tpu",
+                          tracer=tracer)
 
     report: Dict[str, Any] = {"verified": False}
     if verify:
@@ -646,10 +701,13 @@ def train_and_export(
     tune: bool = False,
     measure=None,
     log: Optional[Callable[[str], None]] = None,
+    tracer: Optional[OT.Tracer] = None,
+    metrics: Optional[OM.MetricsRegistry] = None,
 ) -> Tuple[TrainResult, Optional[Q.QNet], Dict[str, Any]]:
     """The whole Fig. 1 front end in one call (the launch driver's body)."""
     result = train(cfg, ckpt_dir=ckpt_dir, resume=resume,
-                   stop_after=stop_after, log=log)
+                   stop_after=stop_after, log=log,
+                   tracer=tracer, metrics=metrics)
     if not result.done:
         return result, None, {"verified": False, "reason": "preempted"}
     # online-quantization rounds feed the export: once every observer saw a
@@ -659,7 +717,7 @@ def train_and_export(
     rounds = len(result.history["calibration"])
     qnet, report = export(result.params, result.net, cfg, path=path,
                           observers=obs, verify=verify, tune=tune,
-                          measure=measure,
+                          measure=measure, tracer=tracer,
                           provenance={"final_loss": result.history["loss"][-1]
                                       if result.history["loss"] else None,
                                       "online_quant_rounds": rounds})

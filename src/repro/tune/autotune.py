@@ -38,6 +38,7 @@ from repro.core import cu
 from repro.core import graph as G
 from repro.core.qnet import QNet
 from repro.kernels import ops as K
+from repro.obs import trace as OT
 from repro.tune.cache import (
     DW_SHIFTS, FUSED_IRB, INT_F32, INT_REF, PALLAS_DW, PALLAS_PW, PER_OP,
     RouteChoice, TunedPlan, irb_key, op_key,
@@ -139,7 +140,8 @@ def default_route(pop: cu.PreparedQOp, backend: str) -> str:
 
 def _select(cands: Sequence[Candidate], x: jnp.ndarray, ref: np.ndarray,
             measure, default: Optional[str] = None,
-            margin: float = 0.1) -> Optional[RouteChoice]:
+            margin: float = 0.1, tracer: OT.Tracer = OT.NULL,
+            span_key: str = "") -> Optional[RouteChoice]:
     """Verify-then-time every candidate; return the fastest exact one.
 
     Exactness is the hard gate: a candidate whose output differs from the
@@ -162,15 +164,27 @@ def _select(cands: Sequence[Candidate], x: jnp.ndarray, ref: np.ndarray,
     disqualified: List[str] = []
     for c in cands:
         fn = jax.jit(c.fn)
+        t0 = tracer.now() if tracer else 0.0
+        measured = None
         try:
             out = np.asarray(jax.block_until_ready(fn(x)))
         except Exception:  # noqa: BLE001 — a route that cannot run loses
+            out = None
+        if (out is None or out.shape != ref.shape
+                or not np.array_equal(out, ref)):
             disqualified.append(c.label)
-            continue
-        if out.shape != ref.shape or not np.array_equal(out, ref):
-            disqualified.append(c.label)
-            continue
-        timed.append((float(measure(fn, x, c)), c))
+        else:
+            measured = float(measure(fn, x, c))
+            timed.append((measured, c))
+        if tracer:
+            # per-candidate provenance span (verify + timing wall on the
+            # tracer's clock): who competed, how fast, who was disqualified
+            tracer.complete(
+                f"tune:{span_key or 'select'}", t0, tracer.now(),
+                cat="tune", tid=OT.TID_TUNE,
+                args={"candidate": c.label,
+                      "us": None if measured is None else measured * 1e6,
+                      "disqualified": measured is None})
     if not timed:
         return None
     timed.sort(key=lambda tc: (tc[0], tc[1].label))
@@ -201,6 +215,7 @@ def tune_qnet(
     backend: Optional[str] = None,
     verify_end_to_end: bool = True,
     verbose: bool = False,
+    tracer: Optional[OT.Tracer] = None,
 ) -> TunedPlan:
     """Tune every op (and fusable IRB block) of `qnet`; return a TunedPlan.
 
@@ -213,10 +228,16 @@ def tune_qnet(
     `verify_end_to_end` re-runs the whole net through the resolved plan and
     raises on any logit drift — the tuner never returns a plan it has not
     proven bit-exact.
+    `tracer` (see `repro.obs.trace`) records one span per candidate
+    verify+time on the `autotune` track plus a winner instant per cache
+    entry — exportable provenance for every selection in the plan.
     """
     if isinstance(qnet, cu.PreparedQNet):
         qnet = qnet.qnet
     backend = backend or jax.default_backend()
+    tracer = tracer if tracer is not None else OT.NULL
+    if tracer:
+        tracer.name_track(OT.TID_TUNE, "autotune")
     plan = plan if plan is not None else CC.compile_net(qnet.spec)
     pq = cu.prepare_qnet(qnet, input_bits=input_bits)
     measure = measure or wall_measure(repeats)
@@ -260,7 +281,15 @@ def tune_qnet(
                 else:
                     choice = _select(cands, y, ref, measure,
                                      default=default_route(pop, backend),
-                                     margin=margin)
+                                     margin=margin, tracer=tracer,
+                                     span_key=key)
+                    if choice is not None and tracer:
+                        tracer.instant(
+                            "tune_winner", tracer.now(), cat="tune",
+                            tid=OT.TID_TUNE,
+                            args={"key": key, "route": choice.route,
+                                  "params": dict(choice.params),
+                                  "us": choice.us})
                 if choice is not None:
                     entries[key] = choice
                     block_routes[op.name] = (choice.route,
@@ -313,9 +342,16 @@ def tune_qnet(
                  Candidate(FUSED_IRB, {}, fused_fn)],
                 x_block, ref_block, measure,
                 default=FUSED_IRB if backend == "tpu" else PER_OP,
-                margin=margin)
+                margin=margin, tracer=tracer, span_key=bkey)
             if choice is not None:
                 entries[bkey] = choice
+                if tracer:
+                    tracer.instant(
+                        "tune_winner", tracer.now(), cat="tune",
+                        tid=OT.TID_TUNE,
+                        args={"key": bkey, "route": choice.route,
+                              "params": dict(choice.params),
+                              "us": choice.us})
         if block.avgpool:
             y = jnp.round(jnp.mean(
                 y.astype(jnp.float32), axis=(1, 2))).astype(jnp.int32)
