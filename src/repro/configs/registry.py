@@ -29,10 +29,43 @@ ARCHS = {
 
 CNN_ARCHS = ("mobilenet-v2", "efficientnet-compact")
 
+# 1-D streaming DSCNN archs: arch id -> (build-record model family, builder
+# defaults). The record round-trips through `qnet.build_netspec`, so a
+# `.qnet` artifact saved with `build=netspec_build_record(arch)` is
+# self-describing — `load_qnet(path)` alone rebuilds the graph.
+DSCNN_ARCHS = {
+    "dscnn_kws": ("dscnn_kws",
+                  dict(input_t=49, input_ch=10, channels=64, n_blocks=4,
+                       kernel=3, bits=8, num_classes=12)),
+    "dscnn_har": ("dscnn_har",
+                  dict(input_t=128, input_ch=3, stem_channels=48,
+                       channels=[96, 128, 160], kernel=5, bits=8,
+                       num_classes=12)),
+}
+
+
+def netspec_build_record(arch: str, **kw) -> dict:
+    """Build record for a registered NetSpec arch (builder knob overrides
+    in `kw`). Feed to `save_qnet(build=...)`; `build_netspec` inverts it."""
+    if arch not in DSCNN_ARCHS:
+        raise KeyError(
+            f"unknown netspec arch {arch!r}; known: {sorted(DSCNN_ARCHS)}")
+    model, defaults = DSCNN_ARCHS[arch]
+    rec = {"model": model, **defaults}
+    rec.update(kw)
+    return rec
+
+
+def get_netspec(arch: str, **kw):
+    """Registered arch id -> built NetSpec (knob overrides in `kw`)."""
+    from repro.core.qnet import build_netspec
+    return build_netspec(netspec_build_record(arch, **kw))
+
 
 def get_config(arch: str, **kw) -> LMConfig:
     if arch not in ARCHS:
-        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)} + {CNN_ARCHS}")
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)} + "
+                       f"{CNN_ARCHS} + {tuple(sorted(DSCNN_ARCHS))}")
     mod = importlib.import_module(ARCHS[arch])
     return mod.get_config(**kw)
 
@@ -69,4 +102,5 @@ def reduced_config(arch: str, **kw) -> LMConfig:
     return dataclasses.replace(cfg, **r)
 
 
-__all__ = ["ARCHS", "CNN_ARCHS", "get_config", "reduced_config"]
+__all__ = ["ARCHS", "CNN_ARCHS", "DSCNN_ARCHS", "get_config",
+           "reduced_config", "get_netspec", "netspec_build_record"]

@@ -156,6 +156,7 @@ class CUPlan:
         buffers for the most memory-bound IRB). Bytes at each op's act BW."""
         out: Dict[str, int] = {}
         h = self.net.input_hw
+        rank = self.net.spatial_rank
         for a in self.schedule:
             peak = 0
             for op in a.block.ops:
@@ -163,7 +164,9 @@ class CUPlan:
                     elems = op.in_ch + op.out_ch
                 else:
                     h_out = -(-h // op.stride)
-                    elems = h * h * op.in_ch + h_out * h_out * op.out_ch
+                    in_sp = h if rank == 1 else h * h
+                    out_sp = h_out if rank == 1 else h_out * h_out
+                    elems = in_sp * op.in_ch + out_sp * op.out_ch
                     h = h_out
                 peak = max(peak, (elems * op.act_bits + 7) // 8)
             out[a.cu] = max(out.get(a.cu, 0), peak)

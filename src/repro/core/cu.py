@@ -37,8 +37,11 @@ import numpy as np
 from repro.core import graph as G
 from repro.core.integer_ops import (
     f32_accum_exact,
+    int_conv1d,
+    int_conv1d_f32,
     int_conv2d,
     int_conv2d_f32,
+    int_depthwise1d_shifts,
     int_depthwise_shifts,
     int_pointwise,
     int_pointwise_f32,
@@ -122,6 +125,8 @@ def _prepare_qop(qop: QOp, in_qmax: int, put=jnp.asarray) -> PreparedQOp:
     w_np = np.asarray(qop.w_q)
     if qop.spec.kind == G.DW:
         w_kern = w_np.reshape(w_np.shape[0], w_np.shape[1], w_np.shape[-1])
+    elif qop.spec.kind == G.DW1D:
+        w_kern = w_np.reshape(w_np.shape[0], w_np.shape[-1])  # [K, C]
     elif qop.spec.kind in (G.PW, G.DENSE):
         w_kern = w_np[0, 0] if w_np.ndim == 4 else w_np
     else:
@@ -278,17 +283,29 @@ def _accumulate(x_q: jnp.ndarray, qop, route: Optional[str] = None
             if op.kind == G.DW:
                 return int_conv2d(x_q, qop.w_q, stride=op.stride,
                                   groups=op.in_ch)
+            if op.kind == G.CONV1D:
+                return int_conv1d(x_q, qop.w_q, stride=op.stride)
+            if op.kind == G.DW1D:
+                return int_conv1d(x_q, qop.w_q, stride=op.stride,
+                                  groups=op.in_ch)
             return int_pointwise(x_q, qop.w_kern)
         if route == "dw_shifts":
+            if op.kind == G.DW1D:
+                return int_depthwise1d_shifts(x_q, qop.w_kern,
+                                              stride=op.stride)
             return int_depthwise_shifts(x_q, qop.w_kern, stride=op.stride)
         if route == "int_f32":
             if op.kind == G.CONV:
                 return int_conv2d_f32(x_q, qop.w_q, stride=op.stride)
+            if op.kind == G.CONV1D:
+                return int_conv1d_f32(x_q, qop.w_q, stride=op.stride)
             return int_pointwise_f32(x_q, qop.w_kern)
         raise ValueError(f"unknown tuned route {route!r} for {op.name}")
     if isinstance(qop, PreparedQOp):
         if op.kind == G.DW:
             return int_depthwise_shifts(x_q, qop.w_kern, stride=op.stride)
+        if op.kind == G.DW1D:
+            return int_depthwise1d_shifts(x_q, qop.w_kern, stride=op.stride)
         if op.kind in (G.PW, G.DENSE):
             if qop.f32_exact:
                 return int_pointwise_f32(x_q, qop.w_kern)
@@ -297,12 +314,20 @@ def _accumulate(x_q: jnp.ndarray, qop, route: Optional[str] = None
             if qop.f32_exact:
                 return int_conv2d_f32(x_q, qop.w_q, stride=op.stride)
             return int_conv2d(x_q, qop.w_q, stride=op.stride)
+        if op.kind == G.CONV1D:
+            if qop.f32_exact:
+                return int_conv1d_f32(x_q, qop.w_q, stride=op.stride)
+            return int_conv1d(x_q, qop.w_q, stride=op.stride)
         raise ValueError(op.kind)
     w_q = jnp.asarray(qop.w_q, jnp.int32)
     if op.kind == G.CONV:
         return int_conv2d(x_q, w_q, stride=op.stride)
     if op.kind == G.DW:
         return int_conv2d(x_q, w_q, stride=op.stride, groups=op.in_ch)
+    if op.kind == G.CONV1D:
+        return int_conv1d(x_q, w_q, stride=op.stride)
+    if op.kind == G.DW1D:
+        return int_conv1d(x_q, w_q, stride=op.stride, groups=op.in_ch)
     if op.kind == G.PW:
         return int_pointwise(x_q, w_q[0, 0] if w_q.ndim == 4 else w_q)
     if op.kind == G.DENSE:
@@ -426,14 +451,17 @@ def run_block(
         cur_s, cur_z = qop.out_scale, qop.out_zp
         if block.se is not None and block.se_after == op.name:
             sq, ex = qnet.ops[block.se.squeeze.name], qnet.ops[block.se.excite.name]
-            pooled = jnp.round(jnp.mean(y.astype(jnp.float32), axis=(1, 2))).astype(jnp.int32)
+            sp_axes = tuple(range(1, y.ndim - 1))  # (1, 2) NHWC / (1,) NTC
+            pooled = jnp.round(jnp.mean(y.astype(jnp.float32), axis=sp_axes)).astype(jnp.int32)
             s = _run_qop(pooled, sq, fixed_point)
             gate_q = _run_qop(s, ex, fixed_point)  # [B, C] in [0, qmax], S=1/qmax
             # gated output keeps the dw quantizer: y' = y * gate
             # S_y (y'_q + z) = S_y (y_q + z) * S_g * g_q  with z == 0 (ReLU6 fused)
+            gate_b = gate_q.reshape(
+                gate_q.shape[0], *([1] * len(sp_axes)), gate_q.shape[-1])
             y = jnp.round(
                 y.astype(jnp.float32)
-                * gate_q[:, None, None, :].astype(jnp.float32)
+                * gate_b.astype(jnp.float32)
                 * ex.out_scale
             ).astype(jnp.int32)
     if block.residual:
@@ -447,7 +475,8 @@ def run_block(
                           fixed_consts=fixed_consts)
         cur_s, cur_z = y_s, y_z
     if block.avgpool:
-        y = jnp.round(jnp.mean(y.astype(jnp.float32), axis=(1, 2))).astype(jnp.int32)
+        sp_axes = tuple(range(1, y.ndim - 1))  # (1, 2) NHWC / (1,) NTC
+        y = jnp.round(jnp.mean(y.astype(jnp.float32), axis=sp_axes)).astype(jnp.int32)
     return y, cur_s, cur_z
 
 

@@ -24,6 +24,15 @@ CONV = "conv"  # normal convolution (spatial + channel reduction)
 DW = "dw"  # depthwise convolution (spatial only, groups == channels)
 PW = "pw"  # pointwise convolution (1x1, channel only)
 DENSE = "dense"  # classifier matmul
+# 1-D (temporal) variants for streaming DSCNNs ([B, T, C] activations).
+# PW and DENSE are rank-agnostic (channel-only mixing), so only the ops
+# with a spatial/temporal window get dedicated kinds.
+CONV1D = "conv1d"  # normal temporal convolution (stem of a 1-D DSCNN)
+DW1D = "dw1d"  # depthwise temporal convolution
+
+# op kinds that fix the activation rank to 1 (a net containing any of these
+# runs on [B, T, C] tensors; see `spatial_rank`)
+RANK1_KINDS = (CONV1D, DW1D)
 
 # Activations
 RELU6 = "relu6"
@@ -50,6 +59,11 @@ class OpSpec:
             # HWIO with feature_group_count == C: [K, K, 1, C]; out channel last,
             # matching the per-channel quantization axis of every other op.
             return (self.kernel, self.kernel, 1, self.in_ch)
+        if self.kind == DW1D:
+            # WIO with feature_group_count == C: [K, 1, C]; out channel last.
+            return (self.kernel, 1, self.in_ch)
+        if self.kind == CONV1D:
+            return (self.kernel, self.in_ch, self.out_ch)
         if self.kind == DENSE:
             return (self.in_ch, self.out_ch)
         return (self.kernel, self.kernel, self.in_ch, self.out_ch)
@@ -61,9 +75,16 @@ class OpSpec:
         return n + (self.out_ch if with_bias else 0)
 
     def macs(self, h: int, w: int) -> int:
-        """Multiply-accumulates to produce an (h, w) output map."""
+        """Multiply-accumulates to produce an (h, w) output map.
+
+        1-D ops take (t, 1): h * w is the number of output positions either
+        way, and the temporal window contributes `kernel` taps, not K^2."""
         if self.kind == DW:
             return h * w * self.kernel * self.kernel * self.in_ch
+        if self.kind == DW1D:
+            return h * w * self.kernel * self.in_ch
+        if self.kind == CONV1D:
+            return h * w * self.kernel * self.in_ch * self.out_ch
         if self.kind == DENSE:
             return self.in_ch * self.out_ch
         return h * w * self.kernel * self.kernel * self.in_ch * self.out_ch
@@ -153,9 +174,25 @@ class NetSpec:
                 total += op.out_ch * bias_bits
         return total
 
+    @property
+    def spatial_rank(self) -> int:
+        """1 for temporal ([B, T, C]) nets, 2 for image ([B, H, W, C]) nets.
+
+        Derived from the op kinds rather than stored, so `.qnet`
+        serialization and every existing 2-D build record are untouched."""
+        return 1 if any(op.kind in RANK1_KINDS
+                        for _, op in self.all_ops()) else 2
+
+    def input_shape(self) -> Tuple[int, ...]:
+        """Per-example input tensor shape (no batch dim)."""
+        if self.spatial_rank == 1:
+            return (self.input_hw, self.input_ch)
+        return (self.input_hw, self.input_hw, self.input_ch)
+
     def count_macs(self) -> int:
         """Total MACs for one input image (Table 2 '#Ops')."""
         h = self.input_hw
+        w_of = (lambda h_out: 1) if self.spatial_rank == 1 else (lambda h_out: h_out)
         total = 0
         for b in self.blocks:
             for op in b.ops:
@@ -163,7 +200,7 @@ class NetSpec:
                     total += op.macs(1, 1)
                     continue
                 h_out = -(-h // op.stride)  # ceil div, SAME padding
-                total += op.macs(h_out, h_out)
+                total += op.macs(h_out, w_of(h_out))
                 h = h_out
             if b.se is not None:
                 # SE convs act on 1x1 pooled features
@@ -179,7 +216,8 @@ class NetSpec:
                 if op.kind == DENSE:
                     continue
                 h_out = -(-h // op.stride)
-                total += 2 * h_out * h_out * op.out_ch  # scale + shift per element
+                elems = h_out if self.spatial_rank == 1 else h_out * h_out
+                total += 2 * elems * op.out_ch  # scale + shift per element
                 h = h_out
         return total
 
@@ -215,6 +253,9 @@ __all__ = [
     "DW",
     "PW",
     "DENSE",
+    "CONV1D",
+    "DW1D",
+    "RANK1_KINDS",
     "RELU6",
     "NONE",
     "HSIGMOID",

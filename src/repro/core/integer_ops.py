@@ -95,6 +95,92 @@ def int_conv2d(
     )
 
 
+def _conv1d_padding(padding):
+    """Normalize a 1-D conv padding spec for `conv_general_dilated`:
+    'SAME'/'VALID' pass through; an explicit (lo, hi) pair wraps into the
+    per-spatial-dim tuple form. Explicit pads are what the streaming engine
+    uses to compute ring-buffer edge segments with VALID-style convs."""
+    if isinstance(padding, str):
+        return padding
+    lo, hi = padding
+    return ((int(lo), int(hi)),)
+
+
+def int_conv1d(
+    x_q: jnp.ndarray,
+    w_q: jnp.ndarray,
+    stride: int = 1,
+    padding="SAME",
+    groups: int = 1,
+) -> jnp.ndarray:
+    """Integer temporal convolution, int32 accumulation. x: [B, T, C];
+    w: [K, Cin/groups, Cout]. `padding` is 'SAME'/'VALID' or an explicit
+    (lo, hi) pair."""
+    return jax.lax.conv_general_dilated(
+        x_q.astype(jnp.int32),
+        w_q.astype(jnp.int32),
+        window_strides=(stride,),
+        padding=_conv1d_padding(padding),
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=groups,
+        preferred_element_type=jnp.int32,
+    )
+
+
+def int_conv1d_f32(
+    x_q: jnp.ndarray, w_q: jnp.ndarray, stride: int = 1, padding="SAME"
+) -> jnp.ndarray:
+    """`int_conv1d` through the f32 conv path (only under `f32_accum_exact`;
+    Precision HIGHEST for true f32 multiplies — see `int_pointwise_f32`)."""
+    acc = jax.lax.conv_general_dilated(
+        x_q.astype(jnp.float32),
+        w_q.astype(jnp.float32),
+        window_strides=(stride,),
+        padding=_conv1d_padding(padding),
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        precision=jax.lax.Precision.HIGHEST,
+    )
+    return acc.astype(jnp.int32)
+
+
+def int_depthwise1d_shifts(
+    x_q: jnp.ndarray, w_q: jnp.ndarray, stride: int = 1, padding="SAME"
+) -> jnp.ndarray:
+    """Depthwise temporal conv as K unrolled shifted multiplies.
+
+    x_q: [B, T, C]; w_q: [K, C]. Bit-identical to `int_conv1d(...,
+    groups=C)` (integer adds in a different order), but lowers to
+    vectorized elementwise ops — the 1-D analogue of
+    `int_depthwise_shifts`. `padding` is 'SAME' or an explicit (lo, hi)
+    pair (the streaming engine's edge segments)."""
+    from repro.kernels.common import same_pad_amount
+
+    b, t, c = x_q.shape
+    kernel = w_q.shape[0]
+    if isinstance(padding, str):
+        if padding == "SAME":
+            p_lo, p_hi, t_out = same_pad_amount(t, kernel, stride)
+        elif padding == "VALID":
+            p_lo, p_hi, t_out = 0, 0, (t - kernel) // stride + 1
+        else:
+            raise ValueError(padding)
+    else:
+        p_lo, p_hi = int(padding[0]), int(padding[1])
+        t_out = (t + p_lo + p_hi - kernel) // stride + 1
+    xp = jnp.pad(x_q.astype(jnp.int32), ((0, 0), (p_lo, p_hi), (0, 0)))
+    w2 = w_q.astype(jnp.int32)
+    acc = jnp.zeros((b, t_out, c), jnp.int32)
+    for ki in range(kernel):
+        patch = jax.lax.slice(
+            xp,
+            (0, ki, 0),
+            (b, ki + (t_out - 1) * stride + 1, c),
+            (1, stride, 1),
+        )
+        acc = acc + patch * w2[ki][None, None, :]
+    return acc
+
+
 def int_pointwise(x_q: jnp.ndarray, w_q: jnp.ndarray) -> jnp.ndarray:
     """Pointwise conv == matmul over the channel axis (the paper's systolic fit)."""
     return jax.lax.dot_general(
@@ -286,8 +372,11 @@ __all__ = [
     "requantize_float",
     "clip_act",
     "int_conv2d",
+    "int_conv1d",
+    "int_conv1d_f32",
     "int_pointwise",
     "int_depthwise_shifts",
+    "int_depthwise1d_shifts",
     "int_pointwise_f32",
     "int_conv2d_f32",
     "f32_accum_exact",

@@ -189,6 +189,12 @@ def build_netspec(build: Dict) -> G.NetSpec:
     elif kind == "efficientnet_compact":
         from repro.models import efficientnet as effn
         net = effn.build_compact(**kw)
+    elif kind == "dscnn_kws":
+        from repro.models import dscnn1d
+        net = dscnn1d.build_kws(**kw)
+    elif kind == "dscnn_har":
+        from repro.models import dscnn1d
+        net = dscnn1d.build_har(**kw)
     else:
         raise ValueError(f"unknown model family in build record: {kind!r}")
     act_bits = build.get("act_bits")

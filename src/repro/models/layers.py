@@ -42,10 +42,28 @@ def depthwise_conv2d(x, w, stride=1, padding="SAME"):
 
 
 def pointwise_conv2d(x, w):
-    """w: [1, 1, Cin, Cout] or [Cin, Cout] — channel-only mixing (matmul)."""
+    """w: [1, 1, Cin, Cout] or [Cin, Cout] — channel-only mixing (matmul).
+    Rank-agnostic: works on [B, H, W, C] and [B, T, C] alike."""
     if w.ndim == 4:
         w = w[0, 0]
     return jnp.einsum("...c,cd->...d", x, w.astype(x.dtype))
+
+
+def conv1d(x, w, stride=1, padding="SAME", groups=1):
+    """Temporal conv: x [B, T, C], w [K, Cin/groups, Cout]."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w.astype(x.dtype),
+        window_strides=(stride,),
+        padding=padding,
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=groups,
+    )
+
+
+def depthwise_conv1d(x, w, stride=1, padding="SAME"):
+    """w: [K, 1, C] — groups == C, temporal-only mixing."""
+    return conv1d(x, w, stride=stride, padding=padding, groups=x.shape[-1])
 
 
 def relu6(x):
@@ -68,7 +86,8 @@ def apply_act(x, act: str):
 
 
 def global_avg_pool(x):
-    return jnp.mean(x, axis=(1, 2))
+    """Mean over the spatial/temporal axes ((1, 2) NHWC, (1,) NTC)."""
+    return jnp.mean(x, axis=tuple(range(1, x.ndim - 1)))
 
 
 # ---------------------------------------------------------------------------
@@ -81,7 +100,11 @@ def init_op_params(
 ) -> Dict[str, jnp.ndarray]:
     shape = op.weight_shape()
     fan_in = op.kernel * op.kernel * (op.in_ch if op.kind != G.DW else 1)
-    if op.kind == G.DENSE:
+    if op.kind == G.CONV1D:
+        fan_in = op.kernel * op.in_ch
+    elif op.kind == G.DW1D:
+        fan_in = op.kernel
+    elif op.kind == G.DENSE:
         fan_in = op.in_ch
     std = (2.0 / max(fan_in, 1)) ** 0.5
     w = std * jax.random.normal(key, shape, dtype)
@@ -157,6 +180,10 @@ def _apply_op(x, op: G.OpSpec, p, *, qat: bool, bn_stats=None):
         y = conv2d(x, w, stride=op.stride)
     elif op.kind == G.DW:
         y = depthwise_conv2d(x, w, stride=op.stride)
+    elif op.kind == G.CONV1D:
+        y = conv1d(x, w, stride=op.stride)
+    elif op.kind == G.DW1D:
+        y = depthwise_conv1d(x, w, stride=op.stride)
     elif op.kind == G.PW:
         y = pointwise_conv2d(x, w)
     elif op.kind == G.DENSE:
@@ -209,7 +236,7 @@ def _apply_se(x, se: G.SESpec, params, *, qat, capture):
     s = _apply_op(s, se.excite, params[se.excite.name], qat=qat)
     if capture is not None:
         capture["se_gate"] = s
-    return x * s[:, None, None, :]
+    return x * s.reshape(s.shape[0], *([1] * (x.ndim - 2)), s.shape[-1])
 
 
 def forward(
@@ -253,9 +280,8 @@ def make_calibrated_qnet(net: G.NetSpec, *, bits: int = 4, seed: int = 0,
     def apply_fn(p, b):
         return forward(p, b, net, capture=True)[1]
 
-    hw = net.input_hw
     cal = [jax.random.uniform(jax.random.PRNGKey(i),
-                              (2, hw, hw, net.input_ch), minval=-1, maxval=1)
+                              (2, *net.input_shape()), minval=-1, maxval=1)
            for i in range(n_cal)]
     obs = calibrate(apply_fn, params, cal, QuantConfig(bits, False, None))
     return quantize_net(params, net, obs)
@@ -264,6 +290,8 @@ def make_calibrated_qnet(net: G.NetSpec, *, bits: int = 4, seed: int = 0,
 __all__ = [
     "conv2d",
     "depthwise_conv2d",
+    "conv1d",
+    "depthwise_conv1d",
     "pointwise_conv2d",
     "relu6",
     "hsigmoid",

@@ -1,0 +1,755 @@
+"""Streaming 1-D DSCNN serving: ring-buffer incremental inference.
+
+The production shape for edge-sensor DSCNNs (keyword spotting, HAR) is a
+stream of *overlapping* windows: hop H over window W, so naive serving
+recomputes (W - H)/W of every window. This module makes the steady-state
+per-window cost O(H + halo) instead of O(W): each session keeps the
+integer activation buffer of every temporal operator, and a new window
+recomputes only the frames that SAME-padding edge effects and the H new
+input frames can reach — everything else is served from the cached buffer
+of the previous window, bit-exact with the full-window reference route.
+
+Halo math (per temporal op: kernel k, stride s, SAME pad (pl, pr), input
+length Tin, output length Tout, input hop Hin with s | Hin, Hout = Hin/s).
+Let [0, Lin) and [Tin - Rin, Tin) be the input regions whose values differ
+from the previous window's buffer shifted by Hin (base case at the raw
+input: Lin = 0, Rin = H). Output j of the new window reads input taps
+[j*s - pl, j*s - pl + k); it equals cached output j + Hout iff
+
+  * every tap lands at or right of Lin        (j*s - pl >= Lin),
+  * no tap lands in [Tin - Rin, Tin)          (j*s - pl + k <= Tin - Rin,
+    vacuous when Rin == 0; taps in the right SAME padding are zero in both
+    windows, so they never invalidate),
+  * the cached output exists                  (j < Tout - Hout).
+
+Hence Lout = ceil((Lin + pl) / s) and Rout = Tout - min(Tout - Hout,
+floor((Tin - Rin - k + pl) / s) + 1). Pointwise ops (k = 1, s = 1,
+pl = 0) give Lout = Lin, Rout = Rin — the halo only grows on the cheap
+depthwise/stem convs, never on the MAC-dominant pointwise layers, which
+is what makes the steady-state speedup land. Residual adds are
+elementwise, and within a residual block every op has stride 1, so the
+regions are monotone and the post-add invalid region equals the last
+op's. Integer arithmetic is order-free, so the recomputed edge segments
+(explicit-pad VALID convolutions over buffer slices) are bit-identical
+to the full-window formulation — `tests/test_streaming.py` fuzzes this
+end to end against `cu.run_qnet`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cu
+from repro.core import graph as G
+from repro.core.integer_ops import (
+    int_conv1d,
+    int_conv1d_f32,
+    int_depthwise1d_shifts,
+    int_pointwise,
+    int_pointwise_f32,
+    quantized_op_epilogue,
+)
+from repro.core.qnet import QNet
+from repro.kernels.common import same_pad_amount
+from repro.obs import metrics as OM
+from repro.obs import trace as OT
+
+
+class StreamError(ValueError):
+    """A net/hop combination the streaming planner refuses."""
+
+
+# ---------------------------------------------------------------------------
+# static stream plan: per-op ring-buffer geometry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SegSpec:
+    """One edge segment to recompute: input slice [lo, hi) of the op's
+    (updated) input buffer, explicit zero pad, and the output count."""
+
+    lo: int
+    hi: int
+    pad: Tuple[int, int]
+    n_out: int
+
+
+@dataclasses.dataclass(frozen=True)
+class MergedSeg:
+    """Fused left+right edge recompute: both input slices concatenated
+    with `gap` zero frames between them so one kernel dispatch covers
+    both edges. The gap is sized so (a) the left segment's tail taps
+    read zeros exactly where its overflow pad would be, and (b) the
+    first right output lands on output index `j0` with its receptive
+    field aligned to the right slice's stride phase — outputs in
+    [lout, j0) are discarded seam garbage. One dispatch instead of two
+    halves the op count of the steady-state step (the left segments are
+    a few frames each: pure dispatch overhead as separate kernels)."""
+
+    gap: int   # zero frames inserted between the two input slices
+    j0: int    # output index where the right segment's outputs begin
+    pad: Tuple[int, int]  # explicit pad of the fused conv
+
+
+@dataclasses.dataclass(frozen=True)
+class OpStream:
+    """Ring-buffer geometry of one temporal op (or residual pseudo-op)."""
+
+    name: str
+    tin: int
+    tout: int
+    hout: int  # buffer shift per step, in output frames
+    lout: int  # left invalid (recomputed) outputs
+    rout: int  # right invalid (recomputed) outputs
+    left: Optional[SegSpec]
+    right: Optional[SegSpec]
+    merged: Optional[MergedSeg] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockStream:
+    block: G.BlockSpec
+    ops: Tuple[OpStream, ...]
+    res: Optional[OpStream]  # elementwise skip-add region (residual blocks)
+    in_s: float
+    in_z: float
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamPlan:
+    """Static per-(net, window, hop) geometry driving `prime`/`step`."""
+
+    window: int
+    hop: int
+    blocks: Tuple[BlockStream, ...]  # temporal blocks (incl. the pool block)
+    post_blocks: Tuple[G.BlockSpec, ...]  # after the global pool (classifier)
+    pool_s: float  # quantizer of the tensor entering the post blocks
+    pool_z: float
+    frames_full: int  # conv output frames computed per full-window inference
+    frames_step: int  # conv output frames computed per streaming step
+    macs_full: int
+    macs_step: int
+    buffer_bytes: int  # uint8 ring buffers per session
+
+    @property
+    def reuse_fraction(self) -> float:
+        return 1.0 - self.frames_step / max(self.frames_full, 1)
+
+
+def _op_geometry(op: G.OpSpec, tin: int, lin: int, rin: int,
+                 hin: int) -> Tuple[OpStream, int, int, int, int]:
+    """Apply the halo recurrence to one op; returns (OpStream, tout, lout,
+    rout, hout)."""
+    if op.kind in (G.DW1D, G.CONV1D):
+        k, s = op.kernel, op.stride
+        pl, _pr, tout = same_pad_amount(tin, k, s)
+    elif op.kind == G.PW:
+        k, s, pl, tout = 1, 1, 0, tin
+    else:
+        raise StreamError(
+            f"op {op.name} ({op.kind}) is not streamable before the pool")
+    if hin % s:
+        raise StreamError(
+            f"op {op.name}: stride {s} does not divide the layer hop {hin} "
+            f"— pick a hop divisible by the cumulative stride")
+    hout = hin // s
+    lout = -(-(lin + pl) // s)  # ceil
+    first_bad = tout - hout
+    if rin > 0:
+        first_bad = min(first_bad, (tin - rin - k + pl) // s + 1)
+    rout = tout - first_bad
+    if lout + rout >= tout:
+        # degenerate geometry (halo covers the buffer): recompute everything
+        lout, rout = tout, 0
+    left = None
+    if lout > 0:
+        a_hi = (lout - 1) * s - pl + k
+        left = SegSpec(0, min(tin, a_hi), (pl, max(0, a_hi - tin)), lout)
+    right = None
+    if rout > 0:
+        a_lo = (tout - rout) * s - pl
+        a_hi = (tout - 1) * s - pl + k
+        right = SegSpec(max(0, a_lo), min(tin, a_hi),
+                        (max(0, -a_lo), max(0, a_hi - tin)), rout)
+    merged = None
+    if left is not None and right is not None and right.pad[0] == 0:
+        ll = left.hi - left.lo
+        j0 = max(lout, -(-(ll + left.pad[1] + pl) // s))  # ceil
+        gap = j0 * s - pl - ll  # >= left.pad[1] by construction
+        rl = right.hi - right.lo
+        tout_m = (ll + gap + rl + pl + right.pad[1] - k) // s + 1
+        assert tout_m == j0 + rout, (op.name, tout_m, j0, rout)
+        merged = MergedSeg(gap=gap, j0=j0, pad=(pl, right.pad[1]))
+    return (OpStream(op.name, tin, tout, hout, lout, rout, left, right,
+                     merged),
+            tout, lout, rout, hout)
+
+
+def plan_stream(qnet: QNet, hop: int) -> StreamPlan:
+    """Derive the static ring-buffer plan for `qnet` at the given hop.
+
+    Refuses anything the bit-exactness proof does not cover: 2-D nets,
+    SE branches, hops the cumulative stride does not divide, nets without
+    a global-pool boundary."""
+    spec = qnet.spec
+    if spec.spatial_rank != 1:
+        raise StreamError(
+            f"streaming requires a 1-D (temporal) net; {spec.name} is "
+            f"rank {spec.spatial_rank}")
+    window = spec.input_hw
+    if not 1 <= hop <= window:
+        raise StreamError(f"hop {hop} outside [1, window={window}]")
+
+    block_streams: List[BlockStream] = []
+    post: List[G.BlockSpec] = []
+    t, lin, rin, hin = window, 0, hop, hop
+    cur_s, cur_z = cu.input_qparams(qnet)
+    pool_s = pool_z = None
+    pooled = False
+    frames_full = frames_step = macs_full = macs_step = 0
+    # activations never exceed 8 bits (act_bits <= 8), so ring buffers are
+    # stored uint8 — 4x less shuffle traffic and session memory than the
+    # int32 the compute ops use; the up-cast happens on the (small) edge
+    # slices only
+    buffer_bytes = window * spec.input_ch
+    for block in spec.blocks:
+        if pooled:
+            post.append(block)
+            for op in block.ops:
+                macs_full += op.macs(1, 1)
+                macs_step += op.macs(1, 1)
+            continue
+        if block.se is not None:
+            raise StreamError(
+                f"block {block.name} has a squeeze-excitation branch — "
+                f"SE pools over the whole window, so no frame is reusable")
+        if all(op.kind == G.DENSE for op in block.ops):
+            raise StreamError(
+                f"dense block {block.name} before the global pool — "
+                f"streaming needs a pool boundary to collapse time")
+        if block.residual and any(op.stride != 1 for op in block.ops):
+            raise StreamError(f"residual block {block.name} has stride != 1")
+        in_s, in_z = cur_s, cur_z
+        ops: List[OpStream] = []
+        for op in block.ops:
+            if op.act == G.HSIGMOID:
+                raise StreamError(f"op {op.name}: hsigmoid is not streamable")
+            os_, t, lin, rin, hin = _op_geometry(op, t, lin, rin, hin)
+            ops.append(os_)
+            per_frame = op.macs(1, 1)
+            frames_full += os_.tout
+            # merged edge compute also pays for the (few) seam-garbage
+            # outputs in [lout, j0) — account them honestly
+            frames_step += (os_.merged.j0 + os_.rout if os_.merged
+                            else os_.lout + os_.rout)
+            macs_full += os_.tout * per_frame
+            macs_step += (os_.merged.j0 + os_.rout if os_.merged
+                          else os_.lout + os_.rout) * per_frame
+            buffer_bytes += os_.tout * op.out_ch
+            qop = qnet.ops[op.name]
+            cur_s, cur_z = qop.out_scale, qop.out_zp
+        res = None
+        if block.residual:
+            last = ops[-1]
+            res = OpStream(block.name + "/residual", last.tout, last.tout,
+                           last.hout, last.lout, last.rout, None, None)
+            buffer_bytes += last.tout * block.out_ch
+            cur_s, cur_z = qnet.res_q[block.name]
+        block_streams.append(BlockStream(block, tuple(ops), res, in_s, in_z))
+        if block.avgpool:
+            pooled = True
+            pool_s, pool_z = cur_s, cur_z
+    if not pooled:
+        raise StreamError(
+            f"{spec.name} has no global-pool block — streaming needs the "
+            f"temporal/collapsed boundary")
+    return StreamPlan(
+        window=window, hop=hop, blocks=tuple(block_streams),
+        post_blocks=tuple(post), pool_s=pool_s, pool_z=pool_z,
+        frames_full=frames_full, frames_step=frames_step,
+        macs_full=macs_full, macs_step=macs_step, buffer_bytes=buffer_bytes)
+
+
+# ---------------------------------------------------------------------------
+# traced compute: full-window prime + incremental step
+# ---------------------------------------------------------------------------
+
+
+def _pad_qop(x: jnp.ndarray, pop: cu.PreparedQOp, pad: Tuple[int, int],
+             fixed_point: bool) -> jnp.ndarray:
+    """Apply one op to an int32 edge slice with an explicit pad, running
+    the same epilogue as `cu._run_qop`. Integer accumulation is
+    order-free, so each output frame is bit-identical to the
+    corresponding frame of the full-window op output."""
+    op = pop.spec
+    if op.kind == G.DW1D:
+        acc = int_depthwise1d_shifts(x, pop.w_kern, stride=op.stride,
+                                     padding=pad)
+    elif op.kind == G.CONV1D:
+        if pop.f32_exact:
+            acc = int_conv1d_f32(x, pop.w_q, stride=op.stride,
+                                 padding=pad)
+        else:
+            acc = int_conv1d(x, pop.w_q, stride=op.stride, padding=pad)
+    elif op.kind == G.PW:
+        assert pad == (0, 0)
+        if pop.f32_exact:
+            acc = int_pointwise_f32(x, pop.w_kern)
+        else:
+            acc = int_pointwise(x, pop.w_kern)
+    else:
+        raise StreamError(op.kind)
+    return quantized_op_epilogue(
+        acc, z_x=pop.z_x, wsum=pop.wsum, bias_q=pop.bias_q, mult=pop.mult,
+        qmax=pop.qmax, z_y=jnp.asarray(0, jnp.int32),
+        fixed_point=fixed_point,
+        mantissa=pop.mantissa if fixed_point else None,
+        shift=pop.shift if fixed_point else None,
+        clip_output=True)
+
+
+def _seg_qop(x_buf: jnp.ndarray, pop: cu.PreparedQOp, seg: SegSpec,
+             fixed_point: bool) -> jnp.ndarray:
+    """Recompute one edge segment from the op's (already updated, uint8)
+    input buffer."""
+    x = jax.lax.slice_in_dim(x_buf, seg.lo, seg.hi, axis=1
+                             ).astype(jnp.int32)
+    return _pad_qop(x, pop, seg.pad, fixed_point)
+
+
+def _merged_qop(x_buf: jnp.ndarray, pop: cu.PreparedQOp, os_: OpStream,
+                fixed_point: bool) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Recompute BOTH edge segments with one kernel dispatch (see
+    `MergedSeg`): concatenate the two input slices around the seam gap,
+    run the op once, slice out the two valid output ranges."""
+    m = os_.merged
+    xl = jax.lax.slice_in_dim(x_buf, os_.left.lo, os_.left.hi, axis=1)
+    xr = jax.lax.slice_in_dim(x_buf, os_.right.lo, os_.right.hi, axis=1)
+    parts = [xl, xr] if m.gap == 0 else [
+        xl, jnp.zeros((xl.shape[0], m.gap, xl.shape[2]), x_buf.dtype), xr]
+    y = _pad_qop(jnp.concatenate(parts, axis=1).astype(jnp.int32),
+                 pop, m.pad, fixed_point)
+    return (jax.lax.slice_in_dim(y, 0, os_.lout, axis=1),
+            jax.lax.slice_in_dim(y, m.j0, m.j0 + os_.rout, axis=1))
+
+
+def _pool_stream(plan: StreamPlan) -> Tuple[OpStream, bool]:
+    """(final pre-pool OpStream, whether the global mean can be updated
+    incrementally). Incremental pooling carries the per-channel integer
+    sum of the final ring buffer across steps and adjusts it with the
+    edge slices only. It reproduces `round(mean(...))` bit-for-bit as
+    long as every partial sum stays below 2**24: all intermediate f32
+    sums are then exact integers, so summation order cannot change the
+    quotient fed to round(). Past that bound the f32 mean itself is
+    order-dependent and we fall back to the full reduce."""
+    bs = plan.blocks[-1]
+    fs = bs.res if bs.res is not None else bs.ops[-1]
+    qmax = 2 ** bs.block.ops[-1].act_bits - 1
+    return fs, fs.tout * qmax < 2 ** 24
+
+
+def _channel_sum(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(x.astype(jnp.int32), axis=1)
+
+
+def _residual_args(bs: BlockStream, qnet) -> Tuple:
+    last = qnet.ops[bs.block.ops[-1].name]
+    y_s, y_z = qnet.res_q[bs.block.name]
+    qmax = 2 ** bs.block.ops[-1].act_bits - 1
+    return last.out_scale, last.out_zp, y_s, y_z, qmax
+
+
+def _finish(pooled: jnp.ndarray, plan: StreamPlan, pq, fixed_point: bool
+            ) -> jnp.ndarray:
+    y, s, z = cu.run_blocks(pooled, plan.post_blocks, pq,
+                            plan.pool_s, plan.pool_z, fixed_point)
+    return (y.astype(jnp.float32) + z) * s
+
+
+def _prime_impl(x: jnp.ndarray, plan: StreamPlan, pq, in_s: float,
+                in_z: float, input_bits: int, fixed_point: bool):
+    """Full-window pass that also captures every ring buffer. The op walk
+    mirrors `cu.run_block` exactly (no SE by plan construction), so the
+    logits match `cu.run_qnet` bit-for-bit."""
+    bufs: Dict[str, jnp.ndarray] = {}
+    y = cu.quantize_input(x, in_s, in_z, input_bits)
+    bufs["input"] = y.astype(jnp.uint8)
+    for bs in plan.blocks:
+        x_block = y
+        for op in bs.block.ops:
+            y = cu._run_qop(y, pq.ops[op.name], fixed_point)
+            bufs[op.name] = y.astype(jnp.uint8)
+        if bs.res is not None:
+            c_s, c_z, y_s, y_z, qmax = _residual_args(bs, pq.qnet)
+            fixed = pq.res_fixed[bs.block.name] if fixed_point else None
+            y = cu._residual_add(x_block, bs.in_s, bs.in_z, y, c_s, c_z,
+                                 y_s, y_z, qmax, fixed_consts=fixed)
+            bufs[bs.res.name] = y.astype(jnp.uint8)
+    _, pool_inc = _pool_stream(plan)
+    if pool_inc:
+        bufs["pool_sum"] = _channel_sum(y)
+    pooled = jnp.round(jnp.mean(y.astype(jnp.float32), axis=(1,))
+                       ).astype(jnp.int32)
+    return _finish(pooled, plan, pq, fixed_point), bufs
+
+
+def _step_impl(bufs: Dict[str, jnp.ndarray], new: jnp.ndarray,
+               plan: StreamPlan, pq, in_s: float, in_z: float,
+               input_bits: int, fixed_point: bool):
+    """One hop: quantize the H new raw frames, shift every ring buffer by
+    its per-layer hop, recompute only the invalid edge segments, and
+    finish from the final buffer. Input quantization lives INSIDE the
+    traced step so the steady-state path is one compiled program per hop
+    (eager per-hop dispatch would rival the step compute itself)."""
+    out: Dict[str, jnp.ndarray] = {}
+    new_q = cu.quantize_input(new, in_s, in_z, input_bits)
+    y = jnp.concatenate([bufs["input"][:, plan.hop:],
+                         new_q.astype(jnp.uint8)], axis=1)
+    out["input"] = y
+
+    def assemble(os_: OpStream, left, right, old):
+        # ring buffers live as uint8; freshly computed edge segments are
+        # int32 out of the epilogue (already clipped to [0, qmax]) and
+        # cast down losslessly here
+        pieces = []
+        if left is not None:
+            pieces.append(left.astype(jnp.uint8))
+        mid_lo, mid_hi = os_.lout + os_.hout, os_.tout - os_.rout + os_.hout
+        if mid_hi > mid_lo:
+            pieces.append(jax.lax.slice_in_dim(old, mid_lo, mid_hi, axis=1))
+        if right is not None:
+            pieces.append(right.astype(jnp.uint8))
+        return pieces[0] if len(pieces) == 1 else jnp.concatenate(
+            pieces, axis=1)
+
+    for bs in plan.blocks:
+        x_block = y
+        for os_ in bs.ops:
+            pop = pq.ops[os_.name]
+            if os_.merged is not None:
+                left, right = _merged_qop(y, pop, os_, fixed_point)
+            else:
+                left = (_seg_qop(y, pop, os_.left, fixed_point)
+                        if os_.left is not None else None)
+                right = (_seg_qop(y, pop, os_.right, fixed_point)
+                         if os_.right is not None else None)
+            y = assemble(os_, left, right, bufs[os_.name])
+            out[os_.name] = y
+        if bs.res is not None:
+            rs = bs.res
+            c_s, c_z, y_s, y_z, qmax = _residual_args(bs, pq.qnet)
+            fixed = pq.res_fixed[bs.block.name] if fixed_point else None
+
+            def radd(a, b):
+                return cu._residual_add(a.astype(jnp.int32), bs.in_s,
+                                        bs.in_z, b.astype(jnp.int32), c_s,
+                                        c_z, y_s, y_z, qmax,
+                                        fixed_consts=fixed)
+
+            left = (radd(jax.lax.slice_in_dim(x_block, 0, rs.lout, axis=1),
+                         jax.lax.slice_in_dim(y, 0, rs.lout, axis=1))
+                    if rs.lout > 0 else None)
+            right = (radd(
+                jax.lax.slice_in_dim(x_block, rs.tin - rs.rout, rs.tin, axis=1),
+                jax.lax.slice_in_dim(y, rs.tin - rs.rout, rs.tin, axis=1))
+                if rs.rout > 0 else None)
+            y = assemble(rs, left, right, bufs[rs.name])
+            out[rs.name] = y
+    fs, pool_inc = _pool_stream(plan)
+    if pool_inc:
+        # the mid region of the final buffer holds unchanged VALUES
+        # (shifted positions), so the channel sum moves only by the
+        # frames that left and the edges that were recomputed
+        old = bufs[fs.name]
+        mid_lo = min(fs.lout + fs.hout, fs.tout)
+        mid_hi = max(fs.tout - fs.rout + fs.hout, mid_lo)
+        s_new = (bufs["pool_sum"]
+                 - _channel_sum(old[:, :mid_lo])
+                 - _channel_sum(old[:, mid_hi:])
+                 + _channel_sum(y[:, :fs.lout])
+                 + _channel_sum(y[:, fs.tout - fs.rout:]))
+        out["pool_sum"] = s_new
+        pooled = jnp.round(s_new.astype(jnp.float32)
+                           / jnp.float32(fs.tout)).astype(jnp.int32)
+    else:
+        pooled = jnp.round(jnp.mean(y.astype(jnp.float32), axis=(1,))
+                           ).astype(jnp.int32)
+    return _finish(pooled, plan, pq, fixed_point), out
+
+
+def reference_windows(qnet, frames: np.ndarray, window: int, hop: int,
+                      fixed_point: bool = False, input_bits: int = 8
+                      ) -> np.ndarray:
+    """Full-window reference logits for every hop-aligned window of a
+    frame stream — the oracle the streaming route is proven against."""
+    n = (len(frames) - window) // hop + 1
+    outs = [np.asarray(cu.run_qnet(
+        qnet, jnp.asarray(frames[i * hop: i * hop + window])[None],
+        fixed_point=fixed_point, input_bits=input_bits))[0]
+        for i in range(n)]
+    return np.stack(outs) if outs else np.zeros((0, qnet.spec.num_classes))
+
+
+# ---------------------------------------------------------------------------
+# session table + engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """Logits for one completed window of one session."""
+
+    sid: str
+    window: int  # per-session window index (0 == the priming window)
+    logits: np.ndarray  # [num_classes] dequantized
+    streamed: bool  # False for the priming (full) window
+
+
+@dataclasses.dataclass
+class _Session:
+    sid: str
+    buffers: Optional[Dict[str, jnp.ndarray]]
+    pending: np.ndarray  # raw frames not yet consumed, [n, C]
+    last_used: float
+    windows: int
+    span_id: int
+
+
+class StreamEngine:
+    """Stateful streaming front end over a prepared 1-D QNet.
+
+    Grows a session table (LRU eviction at `max_sessions`); each session
+    owns the per-layer integer ring buffers plus its input quantizer
+    state. `push(sid, frames)` consumes arbitrary-length frame chunks and
+    returns one `StreamResult` per completed window: the first window of
+    a session runs the full `prime` pass, every later one the O(hop +
+    halo) `step` pass — both through ONE shared jitted trace across all
+    sessions. Outputs are bit-exact with `cu.run_qnet` on each window.
+    """
+
+    def __init__(
+        self,
+        qnet: QNet,
+        hop: int,
+        *,
+        fixed_point: bool = False,
+        input_bits: int = 8,
+        max_sessions: int = 64,
+        clock=None,
+        tracer: Optional[OT.Tracer] = None,
+        metrics: Optional[OM.MetricsRegistry] = None,
+        name: str = "default",
+    ):
+        if max_sessions < 1:
+            raise ValueError(f"max_sessions {max_sessions} < 1")
+        self.pq = cu.prepare_qnet(qnet, input_bits=input_bits)
+        self.qnet = self.pq.qnet
+        self.plan = plan_stream(self.qnet, hop)
+        self.window, self.hop = self.plan.window, int(hop)
+        self.input_ch = self.qnet.spec.input_ch
+        self.fixed_point = fixed_point
+        self.input_bits = input_bits
+        self.max_sessions = max_sessions
+        self.name = name
+        self._clock = time.perf_counter if clock is None else clock
+        self.tracer = tracer if tracer is not None else OT.NULL
+        self._reg = metrics if metrics is not None else OM.NULL_REGISTRY
+        in_s, in_z = cu.input_qparams(self.qnet)
+
+        plan, pq = self.plan, self.pq
+        self._prime = jax.jit(lambda x: _prime_impl(
+            x, plan, pq, in_s, in_z, input_bits, fixed_point))
+        self._step = jax.jit(lambda bufs, new: _step_impl(
+            bufs, new, plan, pq, in_s, in_z, input_bits, fixed_point))
+
+        self._sessions: "OrderedDict[str, _Session]" = OrderedDict()
+        self._sid_counter = itertools.count()
+        self._span_ids = itertools.count(1)
+        self._windows = 0
+        self._primes = 0
+        self._evicted = 0
+        self._prime_s = 0.0
+        self._step_s = 0.0
+        self._frames_computed = 0
+        self._frames_reused = 0
+        self._init_obs()
+
+    def warm(self) -> None:
+        """Pay both XLA compilations (prime + step) up front, outside any
+        session — so a live stream's first windows never stall on a trace."""
+        zeros = np.zeros((1, self.window, self.input_ch), np.float32)
+        _, bufs = self._prime(zeros)
+        jax.block_until_ready(
+            self._step(bufs, zeros[:, :self.hop])[0])
+
+    def _init_obs(self) -> None:
+        lbl = {"model": self.name}
+        self._m_active = self._reg.gauge(
+            "stream_sessions_active", "open streaming sessions", labels=lbl)
+        self._m_computed = self._reg.counter(
+            "stream_frames_computed_total",
+            "conv output frames actually computed", labels=lbl)
+        self._m_reused = self._reg.counter(
+            "stream_frames_reused_total",
+            "conv output frames served from ring buffers", labels=lbl)
+        self._m_windows = self._reg.counter(
+            "stream_windows_total", "windows answered with logits",
+            labels=lbl)
+        self._m_evicted = self._reg.counter(
+            "stream_sessions_evicted_total", "LRU session evictions",
+            labels=lbl)
+        self.tracer.name_track(OT.TID_ENGINE, f"stream:{self.name}")
+
+    # -- session lifecycle ------------------------------------------------
+
+    def open_session(self, sid: Optional[str] = None) -> str:
+        """Open (or re-open) a session; evicts the LRU session when full."""
+        if sid is None:
+            sid = f"s{next(self._sid_counter)}"
+        if sid in self._sessions:
+            self._sessions.move_to_end(sid)
+            return sid
+        while len(self._sessions) >= self.max_sessions:
+            old_sid, old = self._sessions.popitem(last=False)
+            self._evicted += 1
+            self._m_evicted.inc()
+            self.tracer.async_end(f"stream_session:{self.name}",
+                                  old.span_id, args={"sid": old_sid,
+                                                     "evicted": True})
+            self._m_active.set(len(self._sessions))
+        span_id = next(self._span_ids)
+        self.tracer.async_begin(f"stream_session:{self.name}", span_id,
+                                args={"sid": sid})
+        self._sessions[sid] = _Session(
+            sid=sid, buffers=None,
+            pending=np.zeros((0, self.input_ch), np.float32),
+            last_used=self._clock(), windows=0, span_id=span_id)
+        self._m_active.set(len(self._sessions))
+        return sid
+
+    def close_session(self, sid: str) -> None:
+        sess = self._sessions.pop(sid, None)
+        if sess is None:
+            raise KeyError(f"unknown session {sid!r}")
+        self.tracer.async_end(f"stream_session:{self.name}", sess.span_id,
+                              args={"sid": sid, "evicted": False})
+        self._m_active.set(len(self._sessions))
+
+    @property
+    def sessions_active(self) -> int:
+        return len(self._sessions)
+
+    def session_table_bytes(self) -> int:
+        """Resident ring-buffer bytes across primed sessions."""
+        return sum(self.plan.buffer_bytes for s in self._sessions.values()
+                   if s.buffers is not None)
+
+    # -- inference --------------------------------------------------------
+
+    def push(self, sid: str, frames: np.ndarray) -> List[StreamResult]:
+        """Feed raw frames ([n, C] float, calibrated input range) into a
+        session; returns a result per window completed by this chunk."""
+        sess = self._sessions.get(sid)
+        if sess is None:
+            raise KeyError(f"unknown session {sid!r}; open_session first")
+        frames = np.asarray(frames, np.float32)
+        if frames.ndim != 2 or frames.shape[1] != self.input_ch:
+            raise ValueError(
+                f"frames shape {frames.shape} != (n, {self.input_ch})")
+        self._sessions.move_to_end(sid)
+        sess.last_used = self._clock()
+        sess.pending = np.concatenate([sess.pending, frames], axis=0)
+        results: List[StreamResult] = []
+        while True:
+            if sess.buffers is None:
+                if len(sess.pending) < self.window:
+                    break
+                x = jnp.asarray(sess.pending[:self.window])[None]
+                sess.pending = sess.pending[self.window:]
+                t0 = self._clock()
+                logits, bufs = self._prime(x)
+                logits = np.asarray(jax.block_until_ready(logits))[0]
+                t1 = self._clock()
+                self._primes += 1
+                self._prime_s += t1 - t0
+                self._frames_computed += self.plan.frames_full
+                self._m_computed.inc(self.plan.frames_full)
+                self.tracer.complete(
+                    "stream_prime", t0, t1, cat="stream", tid=OT.TID_ENGINE,
+                    args={"sid": sid, "frames": self.plan.frames_full})
+            else:
+                if len(sess.pending) < self.hop:
+                    break
+                new = sess.pending[:self.hop][None]
+                sess.pending = sess.pending[self.hop:]
+                t0 = self._clock()
+                logits, bufs = self._step(sess.buffers, new)
+                logits = np.asarray(jax.block_until_ready(logits))[0]
+                t1 = self._clock()
+                self._step_s += t1 - t0
+                self._frames_computed += self.plan.frames_step
+                self._frames_reused += (self.plan.frames_full
+                                        - self.plan.frames_step)
+                self._m_computed.inc(self.plan.frames_step)
+                self._m_reused.inc(self.plan.frames_full
+                                   - self.plan.frames_step)
+                self.tracer.complete(
+                    "stream_step", t0, t1, cat="stream", tid=OT.TID_ENGINE,
+                    args={"sid": sid, "frames": self.plan.frames_step})
+            sess.buffers = bufs
+            self._windows += 1
+            self._m_windows.inc()
+            results.append(StreamResult(
+                sid=sid, window=sess.windows, logits=logits,
+                streamed=sess.windows > 0))
+            sess.windows += 1
+        return results
+
+    # -- reporting --------------------------------------------------------
+
+    def stats(self) -> Dict[str, float]:
+        steps = self._windows - self._primes
+        return {
+            "sessions_active": float(len(self._sessions)),
+            "sessions_evicted": float(self._evicted),
+            "windows": float(self._windows),
+            "primes": float(self._primes),
+            "steps": float(steps),
+            "frames_computed_total": float(self._frames_computed),
+            "frames_reused_total": float(self._frames_reused),
+            "frames_per_window_full": float(self.plan.frames_full),
+            "frames_per_window_step": float(self.plan.frames_step),
+            "reuse_fraction": self.plan.reuse_fraction,
+            "macs_per_window_full": float(self.plan.macs_full),
+            "macs_per_window_step": float(self.plan.macs_step),
+            "session_buffer_bytes": float(self.plan.buffer_bytes),
+            "session_table_bytes": float(self.session_table_bytes()),
+            "prime_s": self._prime_s,
+            "step_s": self._step_s,
+            "fps_streamed": (steps / self._step_s
+                             if steps and self._step_s > 0 else 0.0),
+        }
+
+
+def frames_for_windows(n_windows: int, window: int, hop: int) -> int:
+    """Stream length that yields exactly `n_windows` hop-aligned windows."""
+    return window + (n_windows - 1) * hop
+
+
+__all__ = [
+    "StreamError",
+    "StreamPlan",
+    "StreamEngine",
+    "StreamResult",
+    "plan_stream",
+    "reference_windows",
+    "frames_for_windows",
+]

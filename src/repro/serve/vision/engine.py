@@ -60,6 +60,7 @@ def _energy_j_per_image(net: G.NetSpec) -> float:
     """MAC-weighted energy proxy: each op's MACs priced at its bit-width
     (mirrors `NetSpec.count_macs`' shape walk)."""
     h = net.input_hw
+    w_of = (lambda h_out: 1) if net.spatial_rank == 1 else (lambda h_out: h_out)
     pj = 0.0
     for block in net.blocks:
         for op in block.ops:
@@ -67,7 +68,7 @@ def _energy_j_per_image(net: G.NetSpec) -> float:
                 pj += op.macs(1, 1) * _PJ_PER_MAC.get(op.bits, 0.2)
                 continue
             h_out = -(-h // op.stride)
-            pj += op.macs(h_out, h_out) * _PJ_PER_MAC.get(op.bits, 0.2)
+            pj += op.macs(h_out, w_of(h_out)) * _PJ_PER_MAC.get(op.bits, 0.2)
             h = h_out
         if block.se is not None:
             pj += (block.se.squeeze.macs(1, 1) + block.se.excite.macs(1, 1)
@@ -208,7 +209,7 @@ class VisionEngine:
         self.pipe = PipelinedExecutor(self.stages, clock=self._clock,
                                       tracer=tracer, metrics=metrics)
         net = qnet.spec
-        self.input_shape = (net.input_hw, net.input_hw, net.input_ch)
+        self.input_shape = net.input_shape()  # (H, W, C) or (T, C)
         self._queue: List[VisionRequest] = []
         self._rid = itertools.count()
         self._results: Dict[int, RequestResult] = {}

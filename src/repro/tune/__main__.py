@@ -1,7 +1,9 @@
 """Regenerate the committed tuning caches under experiments/tuned/.
 
-    # the four golden-fixture nets (what the tier-1 parity tests consume):
+    # the golden-fixture nets (what the tier-1 parity tests consume);
+    # --models filters to a subset, e.g. just the 1-D KWS fixture:
     PYTHONPATH=src python -m repro.tune --golden
+    PYTHONPATH=src python -m repro.tune --golden --models dscnn_kws
 
     # the benchmark nets (mnv2 a0.35 at hw 48 + the hw-32 smoke shape),
     # merged into one cache the benchmarks/CI consume:
@@ -47,7 +49,10 @@ def tune_golden(args) -> None:
     from tests.regen_golden import CASES, build_net, fixture_paths
 
     backend = jax.default_backend()
+    wanted = set(args.models.split(",")) if args.models else None
     for model, bits in CASES:
+        if wanted and model not in wanted:
+            continue
         qnet_path, _ = fixture_paths(model, bits)
         qnet = Q.load_qnet(qnet_path, build_net(model, bits))
         plan = tune_qnet(qnet, batch=args.batch, repeats=args.repeats,
@@ -115,7 +120,7 @@ def main(argv=None) -> None:
         tune_golden(args_g)  # golden fixtures serve batch 2
     if args.bench:
         tune_bench(args)
-    if args.models:
+    if args.models and not args.golden:  # with --golden, --models filters it
         tune_custom(args)
     if not (args.golden or args.bench or args.models):
         ap.error("pick at least one of --golden / --bench / --models")

@@ -119,23 +119,31 @@ def op_candidates(pop: cu.PreparedQOp, *, interpret: Optional[bool] = None,
                     PALLAS_PW, params,
                     lambda x, p=dict(params): K.run_pw_qop(
                         x, pop, interpret=interpret, **p)))
-    elif op.kind == G.CONV:
+    elif op.kind == G.DW1D:
+        # temporal depthwise: shifted-multiply formulation vs reference;
+        # the Pallas kernels are 2-D, so they never compete here
+        cands.append(Candidate(DW_SHIFTS, {}, routed(DW_SHIFTS)))
+    elif op.kind in (G.CONV, G.CONV1D):
         if pop.f32_exact:
             cands.append(Candidate(INT_F32, {}, routed(INT_F32)))
     return cands
 
 
-def default_route(pop: cu.PreparedQOp, backend: str) -> str:
+def default_route(pop: cu.PreparedQOp, backend: str, rank: int = 2) -> str:
     """The route today's heuristics would run for this op on `backend`
-    (what `cu._accumulate` / the TPU `op_kernels` path picks)."""
+    (what `cu._accumulate` / the TPU `op_kernels` path picks). `rank` is
+    the net's spatial rank — 1-D nets never default onto the 2-D Pallas
+    kernels."""
     op = pop.spec
     if op.kind == G.DW:
         return PALLAS_DW if backend == "tpu" else DW_SHIFTS
+    if op.kind == G.DW1D:
+        return DW_SHIFTS  # prepared default on every backend
     if op.kind in (G.PW, G.DENSE):
-        if backend == "tpu":
+        if backend == "tpu" and rank != 1:
             return PALLAS_PW
         return INT_F32 if pop.f32_exact else INT_REF
-    return INT_F32 if pop.f32_exact else INT_REF  # CONV
+    return INT_F32 if pop.f32_exact else INT_REF  # CONV / CONV1D
 
 
 def _select(cands: Sequence[Candidate], x: jnp.ndarray, ref: np.ndarray,
@@ -252,9 +260,10 @@ def tune_qnet(
         block_in_hw.setdefault(block.name, in_hw)
 
     spec = qnet.spec
+    rank = spec.spatial_rank
     x = jax.random.uniform(
         jax.random.PRNGKey(seed),
-        (batch, spec.input_hw, spec.input_hw, spec.input_ch),
+        (batch, *spec.input_shape()),
         minval=-1, maxval=1)
     in_s, in_z = cu.input_qparams(qnet)
     y = cu.quantize_input(x, in_s, in_z, input_bits)
@@ -271,7 +280,7 @@ def tune_qnet(
                 cu._run_qop(y, qop, False)))
             cands = candidates_fn(pop)
             if cands:
-                key = op_key(op, in_hw_by_op[op.name], backend)
+                key = op_key(op, in_hw_by_op[op.name], backend, rank=rank)
                 if key in entries:
                     # an identical-shape op was already measured (repeated
                     # Body blocks): shape keys exist precisely so tuning
@@ -280,7 +289,8 @@ def tune_qnet(
                     choice = entries[key]
                 else:
                     choice = _select(cands, y, ref, measure,
-                                     default=default_route(pop, backend),
+                                     default=default_route(pop, backend,
+                                                           rank=rank),
                                      margin=margin, tracer=tracer,
                                      span_key=key)
                     if choice is not None and tracer:
@@ -305,12 +315,15 @@ def tune_qnet(
                 # cu.run_block exactly so downstream activations are true
                 sq = qnet.ops[block.se.squeeze.name]
                 ex = qnet.ops[block.se.excite.name]
+                sp_axes = tuple(range(1, y.ndim - 1))
                 pooled = jnp.round(jnp.mean(
-                    y.astype(jnp.float32), axis=(1, 2))).astype(jnp.int32)
+                    y.astype(jnp.float32), axis=sp_axes)).astype(jnp.int32)
                 gate_q = cu._run_qop(cu._run_qop(pooled, sq, False), ex, False)
+                gate_b = gate_q.reshape(
+                    gate_q.shape[0], *([1] * len(sp_axes)), gate_q.shape[-1])
                 y = jnp.round(
                     y.astype(jnp.float32)
-                    * gate_q[:, None, None, :].astype(jnp.float32)
+                    * gate_b.astype(jnp.float32)
                     * ex.out_scale
                 ).astype(jnp.int32)
         if block.residual:
@@ -354,7 +367,8 @@ def tune_qnet(
                               "us": choice.us})
         if block.avgpool:
             y = jnp.round(jnp.mean(
-                y.astype(jnp.float32), axis=(1, 2))).astype(jnp.int32)
+                y.astype(jnp.float32),
+                axis=tuple(range(1, y.ndim - 1)))).astype(jnp.int32)
 
     tuned = TunedPlan(
         backend=backend,

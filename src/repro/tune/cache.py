@@ -40,14 +40,21 @@ FUSED_IRB = "fused_irb"  # whole-block fused Body-CU kernel (block entry)
 PER_OP = "per_op"  # block entry: keep the per-op selections
 
 
-def op_key(op: G.OpSpec, in_hw: Optional[int], backend: str) -> str:
+def op_key(op: G.OpSpec, in_hw: Optional[int], backend: str,
+           rank: int = 2) -> str:
     """Cache key for one operator: kind + full shape + act bits + backend.
 
     `in_hw` is the op's input spatial size (0 once collapsed), which
     together with (in_ch, out_ch, kernel, stride) pins the exact workload
-    the timing was measured on."""
-    hw = 0 if in_hw is None else int(in_hw)
-    return (f"{op.kind}:hw{hw}:cin{op.in_ch}:cout{op.out_ch}"
+    the timing was measured on. `rank` selects the spatial-slot spelling:
+    2-D entries say `hw{n}` (side length), 1-D entries say `t{n}` (frame
+    count) — so a temporal op never resolves a timing measured on a 2-D
+    op that happens to share the numbers (PW/DENSE kinds appear in both
+    ranks, and a [B,T,C] pointwise is a very different workload from the
+    [B,H,W,C] one at H=W=T)."""
+    sp = 0 if in_hw is None else int(in_hw)
+    slot = f"t{sp}" if rank == 1 else f"hw{sp}"
+    return (f"{op.kind}:{slot}:cin{op.in_ch}:cout{op.out_ch}"
             f":k{op.kernel}:s{op.stride}:a{op.act_bits}:{backend}")
 
 
@@ -143,11 +150,12 @@ class TunedPlan:
         if plan is None:
             plan = CC.compile_net(spec)
         backend = backend or jax.default_backend()
+        rank = spec.spatial_rank
         op_routes: Dict[str, Tuple[str, Dict[str, int]]] = {}
         block_in_hw: Dict[str, Optional[int]] = {}
         for _, block, op, in_hw in plan.op_descriptors():
             block_in_hw.setdefault(block.name, in_hw)
-            entry = self.entries.get(op_key(op, in_hw, backend))
+            entry = self.entries.get(op_key(op, in_hw, backend, rank=rank))
             if entry is not None:
                 op_routes[op.name] = (entry.route, entry.params_dict)
         fused: Set[str] = set()
@@ -187,9 +195,12 @@ class TunedPlan:
         backend = backend or jax.default_backend()
         op_routes, fused = self.resolve(spec, plan, backend=backend)
         block_in_hw: Dict[str, Optional[int]] = {}
+        rank1 = spec.spatial_rank == 1
         for _, block, op, in_hw in plan.op_descriptors():
             block_in_hw.setdefault(block.name, in_hw)
-            if not op_kernels or op.name in op_routes:
+            if not op_kernels or op.name in op_routes or rank1:
+                # the Pallas kernels are 2-D ([B,H,W,C]) — a 1-D net's
+                # uncovered ops keep the XLA/shifts defaults
                 continue
             if op.act == G.HSIGMOID:
                 continue  # the gate stays on the reference path

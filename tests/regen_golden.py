@@ -41,7 +41,7 @@ import jax
 import numpy as np
 
 from repro.core import qnet as Q
-from repro.models import efficientnet as effn, mobilenet_v2 as mnv2
+from repro.models import dscnn1d, efficientnet as effn, mobilenet_v2 as mnv2
 from repro.models.layers import make_calibrated_qnet
 from repro.train.vision import stage_vectors
 
@@ -50,9 +50,14 @@ BATCH = 2
 NUM_CLASSES = 10
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
 
+# streaming fixture geometry (dscnn_kws): hop = window / 8, frozen windows
+KWS_KW = dict(input_t=32, input_ch=6, channels=16, n_blocks=2, kernel=3)
+STREAM_HOP = KWS_KW["input_t"] // 8
+STREAM_WINDOWS = 5
+
 CASES = tuple((model, bits)
               for model in ("mobilenet_v2", "efficientnet_compact")
-              for bits in (4, 8))
+              for bits in (4, 8)) + (("dscnn_kws", 8),)
 
 
 def build_net(model: str, bits: int):
@@ -62,6 +67,9 @@ def build_net(model: str, bits: int):
     if model == "efficientnet_compact":
         return effn.build_compact(input_hw=HW, bits=bits,
                                   num_classes=NUM_CLASSES)
+    if model == "dscnn_kws":
+        return dscnn1d.build_kws(bits=bits, num_classes=NUM_CLASSES,
+                                 **KWS_KW)
     raise ValueError(model)
 
 
@@ -82,11 +90,25 @@ def golden_vectors(qnet, x: np.ndarray):
 def build_record(model: str, bits: int):
     """Self-description stamped into regenerated `.qnet` fixtures (lets
     `Q.load_qnet(path)` rebuild the NetSpec without this module)."""
+    if model == "dscnn_kws":
+        return {"model": model, "bits": bits, "num_classes": NUM_CLASSES,
+                **KWS_KW}
     rec = {"model": model, "input_hw": HW, "bits": bits,
            "num_classes": NUM_CLASSES}
     if model == "mobilenet_v2":
         rec["alpha"] = 0.35
     return rec
+
+
+def stream_golden(qnet, frames: np.ndarray) -> np.ndarray:
+    """Frozen per-window logits for the streaming fixture, derived by the
+    full-window reference route (`stream.reference_windows` wraps
+    `cu.run_qnet` per window) — the streaming engine is *checked against*
+    this, never used to generate it."""
+    from repro.serve import stream as ST
+
+    return ST.reference_windows(qnet, frames, qnet.spec.input_hw,
+                                STREAM_HOP)
 
 
 def fixture_paths(model: str, bits: int):
@@ -135,6 +157,22 @@ def check() -> int:
             n = int(np.sum(logits != fix["logits"]))
             d = float(np.max(np.abs(logits - fix["logits"])))
             bad.append(f"logits: {n} elems differ (max |delta| {d:.3g})")
+        if "stream_frames" in fix.files:
+            # streaming conformance: the frozen per-window logits must be
+            # reproduced BOTH by the full-window derivation and by the
+            # ring-buffer streaming engine itself
+            from repro.serve import stream as ST
+
+            want = fix["stream_logits"]
+            ref = stream_golden(qnet, fix["stream_frames"])
+            if not np.array_equal(ref, want):
+                bad.append("stream_logits: full-window derivation drifted")
+            eng = ST.StreamEngine(qnet, STREAM_HOP)
+            res = eng.push(eng.open_session(), fix["stream_frames"])
+            got = np.stack([r.logits for r in res])
+            if got.shape != want.shape or not np.array_equal(got, want):
+                bad.append("stream_logits: streaming engine drifted from "
+                           "the frozen windows")
         if bad:
             failures += 1
             print(f"[golden-check] {tag}: DRIFT")
@@ -152,10 +190,11 @@ def check() -> int:
 def main() -> None:
     os.makedirs(GOLDEN_DIR, exist_ok=True)
     rng_img = jax.random.PRNGKey(7)
-    x = np.asarray(jax.random.uniform(
-        rng_img, (BATCH, HW, HW, 3), minval=-1, maxval=1), np.float32)
     for model, bits in CASES:
         net = build_net(model, bits)
+        x = np.asarray(jax.random.uniform(
+            rng_img, (BATCH, *net.input_shape()), minval=-1, maxval=1),
+            np.float32)
         qnet = make_qnet(net, bits)
         cus, acts, logits = golden_vectors(qnet, x)
         qnet_path, npz_path = fixture_paths(model, bits)
@@ -166,6 +205,16 @@ def main() -> None:
         for i, (cu_name, act) in enumerate(zip(cus, acts)):
             assert act.min() >= 0 and act.max() <= 255, (model, bits, cu_name)
             arrays[f"stage{i}_{cu_name}"] = act.astype(np.uint8)
+        if net.spatial_rank == 1:
+            from repro.serve import stream as ST
+
+            n = ST.frames_for_windows(STREAM_WINDOWS, net.input_hw,
+                                      STREAM_HOP)
+            frames = np.asarray(jax.random.uniform(
+                jax.random.PRNGKey(8), (n, net.input_ch),
+                minval=-1, maxval=1), np.float32)
+            arrays["stream_frames"] = frames
+            arrays["stream_logits"] = stream_golden(qnet, frames)
         np.savez_compressed(npz_path, **arrays)
         sizes = (os.path.getsize(qnet_path) + os.path.getsize(npz_path)) / 1024
         print(f"[golden] {model} act{bits}: {len(cus)} stages, "

@@ -1,0 +1,430 @@
+"""Streaming ring-buffer serving: bit-exactness, sessions, obs.
+
+The contract under test is the whole point of `serve/stream.py`: every
+window a `StreamEngine` answers — priming window and every incremental
+step after it — is bit-identical to running `cu.run_qnet` on that window
+in isolation, while computing only O(hop + halo) frames. The property
+tests fuzz that equivalence across hop/window ratios, strides, kernels,
+act widths and session interleavings; the rest covers the planner's
+refusals, the session table (LRU eviction, lifecycle), and the
+observability wiring.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import graph as G
+from repro.models import dscnn1d
+from repro.models.layers import make_calibrated_qnet
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer, validate_chrome_trace
+from repro.serve import stream as ST
+
+_QNETS = {}
+
+
+def _qnet(**kw):
+    """Tiny calibrated 1-D nets, memoized per geometry (quantize once)."""
+    key = tuple(sorted(kw.items()))
+    if key not in _QNETS:
+        net = dscnn1d.build_kws(
+            input_t=kw.get("input_t", 32), input_ch=4,
+            channels=kw.get("channels", 8),
+            n_blocks=kw.get("n_blocks", 2),
+            kernel=kw.get("kernel", 3),
+            stem_stride=kw.get("stem_stride", 2),
+            bits=kw.get("bits", 8), num_classes=5,
+            residual=kw.get("residual", False))
+        _QNETS[key] = make_calibrated_qnet(net, seed=7)
+    return _QNETS[key]
+
+
+def _stream_all(eng, sid, frames, rng=None, chunk=None):
+    """Push `frames` into `sid` in chunks; return stacked window logits."""
+    out = []
+    i = 0
+    while i < len(frames):
+        n = chunk or int(rng.integers(1, 9))
+        out += eng.push(sid, frames[i:i + n])
+        i += n
+    return np.stack([r.logits for r in out]) if out else np.zeros((0,))
+
+
+# ---------------------------------------------------------------------------
+# planner geometry + refusals
+# ---------------------------------------------------------------------------
+
+
+def test_plan_halo_is_cheaper_than_full_window():
+    qnet = _qnet(input_t=64, n_blocks=3)
+    plan = ST.plan_stream(qnet, hop=8)
+    assert 0 < plan.frames_step < plan.frames_full
+    assert plan.reuse_fraction > 0.25
+    assert plan.macs_step < plan.macs_full
+    assert plan.buffer_bytes > 0
+
+
+def test_plan_pointwise_passes_halo_through_unchanged():
+    """PW layers must not grow the invalid region — that is the claim
+    that makes the MAC-dominant layers O(hop + halo)."""
+    qnet = _qnet(input_t=64, n_blocks=3)
+    plan = ST.plan_stream(qnet, hop=8)
+    for bs in plan.blocks:
+        by_name = {os_.name: os_ for os_ in bs.ops}
+        for os_ in bs.ops:
+            if not os_.name.endswith("/pw"):
+                continue
+            dw = by_name.get(os_.name.replace("/pw", "/dw"))
+            if dw is not None:
+                assert (os_.lout, os_.rout) == (dw.lout, dw.rout)
+
+
+def test_plan_refuses_2d_nets():
+    from repro.models import mobilenet_v2 as mnv2
+    net = mnv2.build(alpha=0.25, input_hw=32, bits=8, num_classes=4)
+    qnet = make_calibrated_qnet(net, seed=0)
+    with pytest.raises(ST.StreamError, match="1-D"):
+        ST.plan_stream(qnet, hop=4)
+
+
+def test_plan_refuses_hop_stride_mismatch():
+    qnet = _qnet(stem_stride=2)
+    with pytest.raises(ST.StreamError, match="stride"):
+        ST.plan_stream(qnet, hop=3)  # stem stride 2 does not divide 3
+
+
+def test_plan_refuses_bad_hop_range():
+    qnet = _qnet()
+    with pytest.raises(ST.StreamError, match="hop"):
+        ST.plan_stream(qnet, hop=0)
+    with pytest.raises(ST.StreamError, match="hop"):
+        ST.plan_stream(qnet, hop=qnet.spec.input_hw + 2)
+
+
+def test_plan_refuses_se_blocks():
+    from repro.models import efficientnet as effn
+    net = effn.build_compact(input_hw=32, bits=8, num_classes=4)
+    qnet = make_calibrated_qnet(net, seed=0)
+    with pytest.raises(ST.StreamError):
+        ST.plan_stream(qnet, hop=4)
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness vs the full-window reference
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8)
+@given(seed=st.integers(0, 2**31 - 1),
+       hop_div=st.sampled_from([2, 4, 8]),
+       kernel=st.sampled_from([3, 5]),
+       bits=st.sampled_from([4, 8]),
+       stem_stride=st.sampled_from([1, 2]),
+       residual=st.sampled_from([False, True]),
+       fixed=st.sampled_from([False, True]))
+def test_streaming_matches_full_window(seed, hop_div, kernel, bits,
+                                       stem_stride, residual, fixed):
+    """The property: for random geometry and a random chunking of the
+    input stream, every streamed window's logits equal `run_qnet` on that
+    window — both requant modes."""
+    qnet = _qnet(input_t=32, kernel=kernel, bits=bits,
+                 stem_stride=stem_stride, residual=residual)
+    hop = qnet.spec.input_hw // hop_div
+    rng = np.random.default_rng(seed)
+    frames = rng.uniform(-1, 1, (ST.frames_for_windows(
+        5, qnet.spec.input_hw, hop), qnet.spec.input_ch)).astype(np.float32)
+    ref = ST.reference_windows(qnet, frames, qnet.spec.input_hw, hop,
+                               fixed_point=fixed)
+    eng = ST.StreamEngine(qnet, hop, fixed_point=fixed)
+    sid = eng.open_session()
+    got = _stream_all(eng, sid, frames, rng=rng)
+    np.testing.assert_array_equal(got, ref)
+
+
+@settings(max_examples=4)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_interleaved_sessions_stay_isolated(seed):
+    """Two sessions fed different streams in interleaved pushes each
+    reproduce their own full-window reference — per-session ring buffers
+    never bleed into each other."""
+    qnet = _qnet(input_t=32, n_blocks=2)
+    hop, window = 8, qnet.spec.input_hw
+    rng = np.random.default_rng(seed)
+    streams = {
+        sid_tag: rng.uniform(-1, 1, (ST.frames_for_windows(4, window, hop),
+                                     qnet.spec.input_ch)).astype(np.float32)
+        for sid_tag in ("a", "b")
+    }
+    eng = ST.StreamEngine(qnet, hop)
+    sids = {tag: eng.open_session(tag) for tag in streams}
+    got = {tag: [] for tag in streams}
+    pos = {tag: 0 for tag in streams}
+    while any(pos[t] < len(streams[t]) for t in streams):
+        tag = rng.choice(list(streams))
+        if pos[tag] >= len(streams[tag]):
+            continue
+        n = int(rng.integers(1, 7))
+        got[tag] += eng.push(sids[tag], streams[tag][pos[tag]:pos[tag] + n])
+        pos[tag] += n
+    for tag, frames in streams.items():
+        ref = ST.reference_windows(qnet, frames, window, hop)
+        np.testing.assert_array_equal(
+            np.stack([r.logits for r in got[tag]]), ref)
+
+
+def test_har_family_streams_bit_exact():
+    """Strided DW blocks (HAR topology): halo through stride-2 layers."""
+    net = dscnn1d.build_har(input_t=64, input_ch=3, stem_channels=6,
+                            channels=[8, 12], kernel=5, bits=8,
+                            num_classes=4)
+    qnet = make_calibrated_qnet(net, seed=3)
+    hop = 8  # cumulative stride 4 divides it
+    rng = np.random.default_rng(11)
+    frames = rng.uniform(-1, 1, (ST.frames_for_windows(4, 64, hop), 3)
+                         ).astype(np.float32)
+    ref = ST.reference_windows(qnet, frames, 64, hop)
+    eng = ST.StreamEngine(qnet, hop)
+    got = _stream_all(eng, eng.open_session(), frames, chunk=5)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_window_results_are_ordered_and_flagged():
+    qnet = _qnet()
+    hop = 8
+    rng = np.random.default_rng(0)
+    frames = rng.uniform(-1, 1, (ST.frames_for_windows(
+        3, qnet.spec.input_hw, hop), qnet.spec.input_ch)).astype(np.float32)
+    eng = ST.StreamEngine(qnet, hop)
+    sid = eng.open_session()
+    results = eng.push(sid, frames)
+    assert [r.window for r in results] == [0, 1, 2]
+    assert [r.streamed for r in results] == [False, True, True]
+
+
+# ---------------------------------------------------------------------------
+# session table
+# ---------------------------------------------------------------------------
+
+
+def test_lru_eviction_at_capacity():
+    qnet = _qnet()
+    eng = ST.StreamEngine(qnet, 8, max_sessions=2)
+    a, b = eng.open_session("a"), eng.open_session("b")
+    eng.push(a, np.zeros((1, qnet.spec.input_ch), np.float32))  # a now MRU
+    eng.open_session("c")  # evicts b (LRU)
+    assert eng.sessions_active == 2
+    with pytest.raises(KeyError):
+        eng.push(b, np.zeros((1, qnet.spec.input_ch), np.float32))
+    assert eng.stats()["sessions_evicted"] == 1.0
+
+
+def test_close_and_reopen_session():
+    qnet = _qnet()
+    eng = ST.StreamEngine(qnet, 8)
+    sid = eng.open_session("s")
+    assert eng.open_session("s") == sid  # reopen is a no-op
+    assert eng.sessions_active == 1
+    eng.close_session(sid)
+    assert eng.sessions_active == 0
+    with pytest.raises(KeyError):
+        eng.close_session(sid)
+
+
+def test_session_table_memory_counts_primed_sessions_only():
+    qnet = _qnet()
+    eng = ST.StreamEngine(qnet, 8)
+    eng.open_session("cold")
+    assert eng.session_table_bytes() == 0  # no buffers until primed
+    sid = eng.open_session("hot")
+    rng = np.random.default_rng(0)
+    eng.push(sid, rng.uniform(-1, 1, (qnet.spec.input_hw,
+                                      qnet.spec.input_ch)
+                              ).astype(np.float32))
+    assert eng.session_table_bytes() == eng.plan.buffer_bytes
+
+
+def test_push_validates_inputs():
+    qnet = _qnet()
+    eng = ST.StreamEngine(qnet, 8)
+    with pytest.raises(KeyError):
+        eng.push("nope", np.zeros((1, qnet.spec.input_ch), np.float32))
+    sid = eng.open_session()
+    with pytest.raises(ValueError):
+        eng.push(sid, np.zeros((1, qnet.spec.input_ch + 1), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# observability
+# ---------------------------------------------------------------------------
+
+
+def test_stream_obs_counters_and_trace():
+    """The satellite contract: sessions gauge, frames counters, lifecycle
+    spans — and the exported trace passes the repo's own validator."""
+    qnet = _qnet()
+    hop = 8
+    t = [0.0]
+
+    def clock():
+        t[0] += 0.001
+        return t[0]
+
+    tracer = Tracer(clock, origin_s=0.0)
+    reg = MetricsRegistry()
+    eng = ST.StreamEngine(qnet, hop, clock=clock, tracer=tracer,
+                          metrics=reg, name="kws")
+    rng = np.random.default_rng(0)
+    frames = rng.uniform(-1, 1, (ST.frames_for_windows(
+        3, qnet.spec.input_hw, hop), qnet.spec.input_ch)).astype(np.float32)
+    sid = eng.open_session()
+    eng.push(sid, frames)
+
+    lbl = {"model": "kws"}
+    active = reg.gauge("stream_sessions_active", labels=lbl)
+    computed = reg.counter("stream_frames_computed_total", labels=lbl)
+    reused = reg.counter("stream_frames_reused_total", labels=lbl)
+    plan = eng.plan
+    assert active.value == 1.0
+    assert computed.value == plan.frames_full + 2 * plan.frames_step
+    assert reused.value == 2 * (plan.frames_full - plan.frames_step)
+    stats = eng.stats()
+    assert stats["frames_computed_total"] == computed.value
+    assert stats["frames_reused_total"] == reused.value
+
+    eng.close_session(sid)
+    assert active.value == 0.0
+
+    doc = tracer.to_chrome()
+    assert validate_chrome_trace(doc) == []
+    names = {ev.get("name") for ev in doc["traceEvents"]}
+    assert "stream_prime" in names and "stream_step" in names
+    phases = [ev["ph"] for ev in doc["traceEvents"]
+              if ev.get("name") == "stream_session:kws"]
+    assert "b" in phases and "e" in phases  # lifecycle span opened+closed
+
+
+def test_eviction_closes_lifecycle_span():
+    qnet = _qnet()
+    tracer = Tracer(lambda: 1.0, origin_s=0.0)
+    eng = ST.StreamEngine(qnet, 8, max_sessions=1, tracer=tracer)
+    eng.open_session("a")
+    eng.open_session("b")  # evicts a
+    ends = [ev for ev in tracer.to_chrome()["traceEvents"]
+            if ev["ph"] == "e" and ev.get("name", "").startswith(
+                "stream_session")]
+    assert len(ends) == 1
+
+
+# ---------------------------------------------------------------------------
+# tune-cache keys for 1-D shapes (satellite: rank-aware shape keys)
+# ---------------------------------------------------------------------------
+
+
+def test_op_key_rank_spelling_never_collides():
+    from repro.tune.cache import op_key
+    pw1 = G.OpSpec("x/pw", G.PW, 16, 32, 1, 1, G.RELU6, 8, 8)
+    k1 = op_key(pw1, 12, "cpu", rank=1)
+    k2 = op_key(pw1, 12, "cpu", rank=2)
+    assert ":t12:" in k1 and ":hw12:" in k2 and k1 != k2
+    dw1d = G.OpSpec("x/dw", G.DW1D, 16, 16, 3, 1, G.RELU6, 8, 8)
+    assert ":t12:" in op_key(dw1d, 12, "cpu", rank=1)
+
+
+def test_tuned_plan_round_trips_and_resolves_rank1(tmp_path):
+    """Tune a tiny 1-D net with a fake timer, save/load the cache, and
+    check a foreign-rank cache never matches: the 1-D entries resolve on
+    the 1-D net, and the same entries spelled as 2-D resolve nothing."""
+    from repro.tune import autotune as AT
+    from repro.tune.cache import TunedPlan, load_tuned, save_tuned
+
+    qnet = _qnet(input_t=32, n_blocks=2)
+    tick = [0.0]
+
+    def fake_measure(fn, x, candidate=None):
+        tick[0] += 1.0
+        return tick[0]  # deterministic: first verified candidate wins
+
+    tuned = AT.tune_qnet(qnet, measure=fake_measure, include_pallas=False,
+                         backend="cpu", verify_end_to_end=True)
+    assert tuned.entries and all(":t" in k or ":t0:" in k
+                                 for k in tuned.entries)
+    assert not any(":hw" in k for k in tuned.entries)
+
+    path = tmp_path / "tuned_1d.json"
+    save_tuned(tuned, str(path))
+    loaded = load_tuned(str(path))
+    assert loaded.entries.keys() == tuned.entries.keys()
+    routes, fused = loaded.resolve(qnet, backend="cpu")
+    assert len(routes) == len(
+        [op for _, op in qnet.spec.all_ops() if op.act != G.HSIGMOID])
+    assert fused == set()
+    assert loaded.coverage(qnet, backend="cpu") == 1.0
+
+    # the same numbers spelled as 2-D keys must resolve NOTHING on rank 1
+    foreign = TunedPlan(
+        backend="cpu", nets=("x",), tuned_batch=1,
+        entries={k.replace(":t", ":hw", 1): v
+                 for k, v in tuned.entries.items()})
+    routes_f, _ = foreign.resolve(qnet, backend="cpu")
+    assert routes_f == {}
+
+
+def test_tuned_rank1_plan_runs_bit_exact_through_prepare():
+    """A resolved 1-D plan attached via `prepare_qnet(tuned=...)` keeps
+    logits identical to the untuned reference."""
+    import jax.numpy as jnp
+
+    from repro.core import cu
+    from repro.tune import autotune as AT
+
+    qnet = _qnet(input_t=32, n_blocks=2)
+    tuned = AT.tune_qnet(qnet, measure=lambda fn, x, c=None: 1.0,
+                         include_pallas=False, backend="cpu",
+                         verify_end_to_end=False)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.uniform(-1, 1, (2, *qnet.spec.input_shape())
+                                ).astype(np.float32))
+    ref = np.asarray(cu.run_qnet(qnet, x))
+    pq = cu.prepare_qnet(qnet, tuned=tuned)
+    assert pq.routes  # the plan actually attached
+    np.testing.assert_array_equal(np.asarray(cu.run_qnet(pq, x)), ref)
+
+
+# ---------------------------------------------------------------------------
+# registry (satellite: dscnn archs are first-class, self-describing)
+# ---------------------------------------------------------------------------
+
+
+def test_registry_builds_and_round_trips_dscnn(tmp_path):
+    from repro.configs.registry import (DSCNN_ARCHS, get_netspec,
+                                        netspec_build_record)
+    from repro.core.qnet import load_qnet, save_qnet
+
+    for arch in DSCNN_ARCHS:
+        spec = get_netspec(arch)
+        assert spec.spatial_rank == 1
+        assert spec.num_classes == 12
+
+    # shrunken knobs ride through the build record -> artifact -> reload
+    kw = dict(input_t=32, input_ch=4, channels=8, n_blocks=1, num_classes=3)
+    spec = get_netspec("dscnn_kws", **kw)
+    qnet = make_calibrated_qnet(spec, seed=0)
+    path = str(tmp_path / "kws.qnet")
+    save_qnet(qnet, path, build=netspec_build_record("dscnn_kws", **kw))
+    loaded = load_qnet(path)  # no NetSpec in hand: self-describing
+    assert loaded.spec.name == spec.name
+    rng = np.random.default_rng(2)
+    from repro.core import cu
+    x = rng.uniform(-1, 1, (2, *spec.input_shape())).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(cu.run_qnet(loaded, x)),
+                                  np.asarray(cu.run_qnet(qnet, x)))
+
+
+def test_registry_rejects_unknown_arch():
+    from repro.configs.registry import netspec_build_record
+    with pytest.raises(KeyError, match="dscnn"):
+        netspec_build_record("dscnn_nope")
