@@ -23,6 +23,18 @@ is reported (a fast-but-wrong stream would be worthless). Reports:
     `n_sessions` concurrent streams.
 
 Writes experiments/streaming.json and prints the usual CSV rows.
+
+`run_batched` measures the FLEET shape on a smaller (realistic KWS-sized)
+net: N concurrent sessions all advancing every hop. serial = the PR-7
+path, one jitted step dispatch per session per hop; batched = `drain()`
+grouping every ready session into one bucketed jitted step that stacks
+the session buffers on the batch axis. Every session's every window is
+proven bit-exact against `cu.run_qnet` (and thereby against the serial
+path, which the test suite pins to the same oracle) BEFORE any number is
+reported — the sweep raises on any mismatch rather than print a timing.
+The headline `speedup_vs_serial_step` is a same-machine same-process
+ratio, so it gates in CI across heterogeneous hosts. Writes
+experiments/streaming_batched.json.
 """
 from __future__ import annotations
 
@@ -30,6 +42,7 @@ import argparse
 import json
 import os
 import time
+from typing import Tuple
 
 import jax
 import numpy as np
@@ -40,6 +53,7 @@ from repro.models import dscnn1d, layers
 from repro.serve import stream as ST
 
 OUT_JSON = "experiments/streaming.json"
+BATCHED_OUT_JSON = "experiments/streaming_batched.json"
 
 
 def _build_qnet(input_t: int, channels: int, n_blocks: int, kernel: int,
@@ -146,6 +160,127 @@ def run(input_t: int = 2048, channels: int = 256, n_blocks: int = 5,
     return report
 
 
+def run_batched(input_t: int = 256, channels: int = 32, n_blocks: int = 3,
+                kernel: int = 5, input_ch: int = 10, bits: int = 8,
+                hop: int = 0, windows: int = 12,
+                sessions: Tuple[int, ...] = (1, 2, 4, 8),
+                repeats: int = 3, out: str = BATCHED_OUT_JSON) -> dict:
+    """Sessions x batch sweep: serial per-session stepping vs `drain()`.
+
+    The net is fleet-sized (a realistic always-on KWS footprint): per-hop
+    compute is small enough that one-dispatch-per-session overhead is the
+    dominant serial cost, which is exactly the regime a million-stream
+    deployment lives in. Throughput counts windows (inferences) per
+    second summed across the fleet."""
+    hop = hop or input_t // 8
+    qnet = _build_qnet(input_t, channels, n_blocks, kernel, input_ch, bits)
+    plan = ST.plan_stream(qnet, hop)
+    max_n = max(sessions)
+    rng = np.random.default_rng(0)
+    n_frames = ST.frames_for_windows(windows, input_t, hop)
+    streams = rng.uniform(-1, 1, (max_n, n_frames, input_ch)
+                          ).astype(np.float32)
+    refs = [ST.reference_windows(qnet, streams[i], input_t, hop)
+            for i in range(max_n)]
+
+    buckets = tuple(b for b in (2, 4, 8, 16) if b <= max_n)
+    eng = ST.StreamEngine(qnet, hop, max_sessions=max_n,
+                          batch_buckets=buckets)
+    eng.warm(batches=buckets)  # all traces paid before any timed region
+
+    def check(sid_frames, got):
+        for (i, sid) in sid_frames:
+            logits = np.stack([r.logits for r in got[sid]])
+            if not np.array_equal(logits, refs[i][1:]):
+                raise RuntimeError(
+                    f"streamed logits diverged from cu.run_qnet for {sid} "
+                    f"— refusing to report a timing for a wrong result")
+            eng.close_session(sid)
+
+    per = {}
+    for n in sessions:
+        t_serial = float("inf")
+        for r in range(repeats):
+            sids = [(i, eng.open_session(f"serial{n}_{r}_{i}"))
+                    for i in range(n)]
+            for i, sid in sids:
+                eng.push(sid, streams[i][:input_t])  # prime (untimed)
+            got = {sid: [] for _, sid in sids}
+            t0 = time.perf_counter()
+            for w in range(1, windows):
+                lo = input_t + (w - 1) * hop
+                for i, sid in sids:
+                    got[sid] += eng.push(sid, streams[i][lo:lo + hop])
+            t_serial = min(t_serial, time.perf_counter() - t0)
+            check(sids, got)
+
+        t_batched = float("inf")
+        for r in range(repeats):
+            sids = [(i, eng.open_session(f"batched{n}_{r}_{i}"))
+                    for i in range(n)]
+            for i, sid in sids:
+                eng.push(sid, streams[i][:input_t], defer=True)
+            eng.drain()  # batched prime (untimed, like the serial prime)
+            got = {sid: [] for _, sid in sids}
+            t0 = time.perf_counter()
+            for w in range(1, windows):
+                lo = input_t + (w - 1) * hop
+                for i, sid in sids:
+                    eng.push(sid, streams[i][lo:lo + hop], defer=True)
+                for res in eng.drain():
+                    got[res.sid].append(res)
+            t_batched = min(t_batched, time.perf_counter() - t0)
+            check(sids, got)
+
+        steps = (windows - 1) * n
+        per[str(n)] = {
+            "fps_serial": steps / t_serial,
+            "fps_batched": steps / t_batched,
+            "speedup": t_serial / t_batched,
+        }
+
+    head = per[str(max_n)]
+    stats = eng.stats()
+    report = {
+        "net": qnet.spec.name,
+        "backend": jax.default_backend(),
+        "window": input_t,
+        "hop": hop,
+        "overlap_x": input_t // hop,
+        "channels": channels,
+        "n_blocks": n_blocks,
+        "kernel": kernel,
+        "act_bits": bits,
+        "windows_per_session": windows - 1,
+        "sessions_sweep": [int(n) for n in sessions],
+        "sessions_max": max_n,
+        "batch_buckets": list(buckets),
+        "bit_exact_with_run_qnet": True,  # check() raised otherwise
+        "per_sessions": per,
+        "fps_serial_step": head["fps_serial"],
+        "fps_batched_step": head["fps_batched"],
+        "speedup_vs_serial_step": head["speedup"],
+        "frames_computed_per_inference": plan.frames_step,
+        "frames_ratio": plan.frames_full / plan.frames_step,
+        "session_buffer_bytes": plan.buffer_bytes,
+        "pad_rows": stats["pad_rows"],
+        "batched_traces": stats["batched_traces"],
+    }
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+
+    for n in sessions:
+        p = per[str(n)]
+        row(f"stream_batched_x{n}", 1e6 / p["fps_batched"],
+            f"{p['fps_batched']:.0f}fps serial={p['fps_serial']:.0f}fps "
+            f"{p['speedup']:.2f}x")
+    row("stream_speedup_vs_serial_step", 0.0,
+        f"{head['speedup']:.2f}x@{max_n}sessions")
+    row("stream_batched_bit_exact", 0.0, True)
+    return report
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--input-t", type=int, default=2048)
@@ -158,11 +293,16 @@ def main(argv=None) -> None:
     ap.add_argument("--sessions", type=int, default=8)
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--out", default=OUT_JSON)
+    ap.add_argument("--batched", action="store_true",
+                    help="also run the sessions x batch fleet sweep")
+    ap.add_argument("--batched-out", default=BATCHED_OUT_JSON)
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     run(input_t=args.input_t, hop=args.hop, channels=args.channels,
         n_blocks=args.n_blocks, kernel=args.kernel, windows=args.windows,
         n_sessions=args.sessions, repeats=args.repeats, out=args.out)
+    if args.batched:
+        run_batched(out=args.batched_out)
 
 
 if __name__ == "__main__":

@@ -11,13 +11,14 @@
                             (+ the multi-replica sharded scaling curve)
   bench_streaming           beyond-paper: ring-buffer streaming vs
                             full-window recompute on a 1-D DSCNN
+                            (+ the batched multi-session fleet sweep)
   bench_kernels             kernel-level microbenchmarks
 
 `--smoke` runs the fast subset (kernels + a reduced vision-serving pass +
 the replica-scaling sweep + the streaming pass in an isolated
 single-device subprocess) and asserts the JSON reports still parse — the
 CI gate. A full (or smoke) run aggregates the per-benchmark results into a
-perf-trajectory report at the repo root, BENCH_PR7.json: throughput /
+perf-trajectory report at the repo root, BENCH_PR8.json: throughput /
 latency / analytic bytes-moved, tuned-vs-default serving FPS (measured
 per-op routes from the committed `experiments/tuned/` cache), the
 obs-enabled serving FPS + metrics-snapshot profile (the observability
@@ -47,10 +48,11 @@ import os
 import subprocess
 import sys
 
-BENCH_REPORT = "BENCH_PR7.json"
+BENCH_REPORT = "BENCH_PR8.json"
 VISION_REPORT = "experiments/vision_serving.json"
 SCALING_REPORT = "experiments/vision_serving_scaling.json"
 STREAMING_REPORT = "experiments/streaming.json"
+STREAMING_BATCHED_REPORT = "experiments/streaming_batched.json"
 TUNED_CACHE = "experiments/tuned/bench_cpu.json"
 
 
@@ -65,7 +67,8 @@ def _load_baseline(path: str):
         return None
 
 
-def _run_streaming_isolated(out: str, n_sessions: int = 8) -> dict:
+def _run_streaming_isolated(out: str, batched_out: str,
+                            n_sessions: int = 8) -> tuple:
     """Run bench_streaming in its own single-device subprocess.
 
     The streaming step is a single-session latency path: its deployment
@@ -76,7 +79,10 @@ def _run_streaming_isolated(out: str, n_sessions: int = 8) -> dict:
     fresh subprocess with the device-count flag stripped measures the
     configuration streaming actually serves in; the full-window reference
     runs in the SAME subprocess, so the gated speedup remains a
-    same-process ratio."""
+    same-process ratio. The batched fleet sweep (`run_batched`) rides in
+    the same subprocess for the same reason: its gated
+    `speedup_vs_serial_step` is a serial-vs-drain() ratio measured on one
+    host in one process. Returns (streaming, streaming_batched) dicts."""
     env = dict(os.environ)
     flags = [t for t in env.get("XLA_FLAGS", "").split()
              if not t.startswith("--xla_force_host_platform_device_count")]
@@ -86,7 +92,8 @@ def _run_streaming_isolated(out: str, n_sessions: int = 8) -> dict:
         env.pop("XLA_FLAGS", None)
     res = subprocess.run(
         [sys.executable, "-m", "benchmarks.bench_streaming",
-         "--sessions", str(n_sessions), "--out", out],
+         "--sessions", str(n_sessions), "--out", out,
+         "--batched", "--batched-out", batched_out],
         env=env, capture_output=True, text=True)
     sys.stderr.write(res.stderr)
     for line in res.stdout.splitlines():
@@ -96,11 +103,15 @@ def _run_streaming_isolated(out: str, n_sessions: int = 8) -> dict:
         raise RuntimeError(
             f"bench_streaming subprocess exited {res.returncode}")
     with open(out) as f:
-        return json.load(f)
+        streaming = json.load(f)
+    with open(batched_out) as f:
+        batched = json.load(f)
+    return streaming, batched
 
 
 def _write_trajectory(vision, kernels, baseline, smoke: bool,
-                      scaling=None, streaming=None) -> None:
+                      scaling=None, streaming=None,
+                      streaming_batched=None) -> None:
     # deltas are only meaningful against a same-config baseline (smoke runs
     # a reduced geometry, so its trajectory carries absolute numbers only)
     if baseline and vision and (
@@ -112,7 +123,7 @@ def _write_trajectory(vision, kernels, baseline, smoke: bool,
         pr1_fps = baseline.get("fps_pipelined_fast",
                                baseline.get("fps_pipelined"))
     report = {
-        "pr": 7,
+        "pr": 8,
         "smoke": smoke,
         "baseline_source": VISION_REPORT if baseline else None,
         "serving": None,
@@ -120,6 +131,7 @@ def _write_trajectory(vision, kernels, baseline, smoke: bool,
         "observability": None,
         "scaling": None,
         "streaming": None,
+        "streaming_batched": None,
         "kernels": kernels,
     }
     if vision:
@@ -217,6 +229,27 @@ def _write_trajectory(vision, kernels, baseline, smoke: bool,
             "n_sessions": streaming["n_sessions"],
             "session_table_bytes": streaming["session_table_bytes"],
         }
+    if streaming_batched:
+        sb = streaming_batched
+        report["streaming_batched"] = {
+            "net": sb["net"],
+            "backend": sb["backend"],
+            "window": sb["window"],
+            "hop": sb["hop"],
+            "channels": sb["channels"],
+            "n_blocks": sb["n_blocks"],
+            "kernel": sb["kernel"],
+            "sessions_sweep": sb["sessions_sweep"],
+            "sessions_max": sb["sessions_max"],
+            "batch_buckets": sb["batch_buckets"],
+            "bit_exact_with_run_qnet": sb["bit_exact_with_run_qnet"],
+            "per_sessions": sb["per_sessions"],
+            "fps_serial_step": sb["fps_serial_step"],
+            "fps_batched_step": sb["fps_batched_step"],
+            "speedup_vs_serial_step": sb["speedup_vs_serial_step"],
+            "pad_rows": sb["pad_rows"],
+            "batched_traces": sb["batched_traces"],
+        }
     if kernels:
         report["bytes_moved"] = {
             "dw_hbm_bytes": kernels.get("dw_hbm_bytes"),
@@ -281,6 +314,24 @@ def _collect_throughput_rows(base, cur):
                 "frames_computed_per_inference"):
         if bst.get(key) is not None and cst.get(key) is not None:
             rows.append((f"streaming.{key}", bst[key], cst[key], False))
+    bsb = base.get("streaming_batched") or {}
+    csb = cur.get("streaming_batched") or {}
+    sb_cfg = ("window", "hop", "channels", "n_blocks", "kernel",
+              "backend", "sessions_max", "batch_buckets")
+    same_batched = (bsb and csb
+                    and all(bsb.get(k) == csb.get(k) for k in sb_cfg))
+    # serial-vs-drain() on the same host in one process: a same-machine
+    # ratio, so it gates across heterogeneous CI machines like the
+    # streaming speedup above
+    if bsb.get("speedup_vs_serial_step") is not None \
+            and csb.get("speedup_vs_serial_step") is not None:
+        rows.append(("streaming_batched.speedup_vs_serial_step",
+                     bsb["speedup_vs_serial_step"],
+                     csb["speedup_vs_serial_step"], bool(same_batched)))
+    for key in ("fps_batched_step", "fps_serial_step"):
+        if bsb.get(key) is not None and csb.get(key) is not None:
+            rows.append((f"streaming_batched.{key}",
+                         bsb[key], csb[key], False))
     bsc, csc = base.get("scaling") or {}, cur.get("scaling") or {}
     bfps = bsc.get("fps_per_replica_count") or {}
     cfps = csc.get("fps_per_replica_count") or {}
@@ -332,7 +383,8 @@ def check_regression(report, baseline, threshold: float = 0.25,
         gateable = name in ("serving.fps_pipelined_fast",
                             "serving.fps_pipelined_tuned",
                             "streaming.speedup_vs_full_window",
-                            "streaming.frames_ratio")
+                            "streaming.frames_ratio",
+                            "streaming_batched.speedup_vs_serial_step")
         if gated and regressed:
             verdict = "FAIL"
             failures += 1
@@ -397,7 +449,7 @@ def main(argv=None) -> None:
     baseline = _load_baseline(VISION_REPORT)
     print("name,us_per_call,derived")
     failures = 0
-    vision = kernels = scaling = streaming = None
+    vision = kernels = scaling = streaming = streaming_batched = None
 
     # smoke must not clobber the committed perf-trajectory baseline with
     # reduced-size numbers
@@ -407,6 +459,8 @@ def main(argv=None) -> None:
                    if args.smoke else SCALING_REPORT)
     streaming_out = ("experiments/streaming_smoke.json" if args.smoke
                      else STREAMING_REPORT)
+    batched_out = ("experiments/streaming_batched_smoke.json" if args.smoke
+                   else STREAMING_BATCHED_REPORT)
     if args.smoke:
         plan = [
             (bench_kernels, "kernels", lambda: bench_kernels.run()),
@@ -423,9 +477,12 @@ def main(argv=None) -> None:
             # noise-dominated and under-reports the speedup). Only the
             # session-table sizing is trimmed — it is untimed. Runs in an
             # isolated single-device subprocess (see
-            # _run_streaming_isolated).
+            # _run_streaming_isolated). The batched fleet sweep keeps its
+            # full default config too — its gated speedup_vs_serial_step
+            # compares like against like with the committed baseline.
             (bench_streaming, "streaming",
-             lambda: _run_streaming_isolated(streaming_out, n_sessions=2)),
+             lambda: _run_streaming_isolated(streaming_out, batched_out,
+                                             n_sessions=2)),
         ]
     else:
         plan = [
@@ -440,7 +497,7 @@ def main(argv=None) -> None:
             (bench_vision_serving, "scaling",
              lambda: bench_vision_serving.run_scaling(out=scaling_out)),
             (bench_streaming, "streaming",
-             lambda: _run_streaming_isolated(streaming_out)),
+             lambda: _run_streaming_isolated(streaming_out, batched_out)),
         ]
 
     for mod, slot, fn in plan:
@@ -453,7 +510,7 @@ def main(argv=None) -> None:
             elif slot == "scaling":
                 scaling = out
             elif slot == "streaming":
-                streaming = out
+                streaming, streaming_batched = out
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{mod.__name__},0.0,ERROR:{type(e).__name__}:{e}",
@@ -470,14 +527,15 @@ def main(argv=None) -> None:
               f"missing — tuned serving path was not exercised",
               file=sys.stderr)
     _write_trajectory(vision, kernels, baseline, args.smoke, scaling,
-                      streaming)
+                      streaming, streaming_batched)
     if failures:
         # exit on the recorded benchmark errors before asserting report
         # files that a failed benchmark never wrote (a FileNotFoundError
         # here would bury the real cause)
         sys.exit(1)
     if args.smoke:
-        _assert_reports_parse(vision_out, scaling_out, streaming_out)
+        _assert_reports_parse(vision_out, scaling_out, streaming_out,
+                              batched_out)
     if gate_baselines:
         with open(BENCH_REPORT) as f:
             report = json.load(f)

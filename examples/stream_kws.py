@@ -11,10 +11,13 @@ halo — per-window cost O(H + halo) instead of O(W), bit-exact with the
 full-window reference.
 
 The demo opens several concurrent sessions (think: microphones), feeds
-them interleaved random-length chunks, proves every session's logits are
+them interleaved random-length chunks staged with `push(..., defer=True)`,
+then advances the whole fleet with `drain()` — which groups every ready
+session into one bucketed jitted step over the stacked batch axis instead
+of dispatching per session — proves every session's logits are
 bit-identical to `cu.run_qnet` over the corresponding full windows, and
-prints the plan's reuse accounting, the engine stats, and the shared
-observability counters/trace.
+prints the plan's reuse accounting, the engine stats (including the
+batched-stepping counters), and the shared observability counters/trace.
 """
 import os
 import tempfile
@@ -48,11 +51,13 @@ def main():
             print(f"  {os_.name:<24} T={os_.tout:<4} recompute "
                   f"left={os_.lout:<3} right={os_.rout}")
 
-    # one engine, shared jitted prime/step traces, N concurrent sessions
+    # one engine, shared jitted prime/step traces, N concurrent sessions;
+    # batch buckets bound retraces: groups of 2 or 4 sessions advance in
+    # one stacked dispatch, a straggler takes the single-session program
     tracer, metrics = Tracer(), MetricsRegistry()
     eng = ST.StreamEngine(qnet, HOP, tracer=tracer, metrics=metrics,
-                          name="kws")
-    eng.warm()  # pay both XLA compilations before any live audio
+                          name="kws", batch_buckets=(2, 4))
+    eng.warm(batches=(2, 4))  # pay every XLA compilation before live audio
 
     rng = np.random.default_rng(0)
     n_frames = ST.frames_for_windows(N_WINDOWS, WINDOW, HOP)
@@ -60,7 +65,9 @@ def main():
             rng.uniform(-1, 1, (n_frames, net.input_ch)).astype(np.float32)
             for i in range(N_SESSIONS)}
 
-    # interleave random-length chunks across sessions, as live audio would
+    # interleave random-length chunks across sessions, as live audio
+    # would: stage each chunk without stepping (defer=True), then advance
+    # every ready session at once — drain() batches the fleet
     results = {sid: [] for sid in mics}
     cursor = dict.fromkeys(mics, 0)
     while any(cursor[sid] < len(mics[sid]) for sid in mics):
@@ -69,8 +76,10 @@ def main():
             if lo >= len(mics[sid]):
                 continue
             hi = min(lo + int(rng.integers(1, 3 * HOP)), len(mics[sid]))
-            results[sid] += eng.push(sid, mics[sid][lo:hi])
+            eng.push(sid, mics[sid][lo:hi], defer=True)
             cursor[sid] = hi
+        for r in eng.drain():
+            results[r.sid].append(r)
 
     # every session's windows must match the full-window reference exactly
     for sid, frames in mics.items():
@@ -85,7 +94,13 @@ def main():
     print(f"steady-state: {stats['fps_streamed']:.0f} windows/s "
           f"({stats['steps']:.0f} steps, {stats['primes']:.0f} primes, "
           f"{eng.sessions_active} sessions, "
-          f"{eng.session_table_bytes()} buffer bytes resident)")
+          f"{eng.session_table_bytes()} bytes resident = "
+          f"{eng.session_table_buffer_bytes()} ring + "
+          f"{eng.session_table_pending_bytes()} pending)")
+    print(f"batched: {stats['windows_batched']:.0f}/{stats['windows']:.0f} "
+          f"windows in {stats['batched_calls']:.0f} stacked dispatches "
+          f"({stats['batched_traces']:.0f} traces, "
+          f"{stats['pad_rows']:.0f} pad rows)")
     snap = metrics.snapshot()
     for name, val in sorted(snap["counters"].items()):
         print(f"  {name} = {val:.0f}")

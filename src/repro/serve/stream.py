@@ -33,6 +33,21 @@ op's. Integer arithmetic is order-free, so the recomputed edge segments
 (explicit-pad VALID convolutions over buffer slices) are bit-identical
 to the full-window formulation — `tests/test_streaming.py` fuzzes this
 end to end against `cu.run_qnet`.
+
+Batched stepping: the halo geometry above is a function of the *plan*,
+not the session — every session of one (net, hop) pair shares identical
+buffer shapes, so one traced step program advances any group of them
+stacked on a leading batch axis (every op in the step is batch-row
+independent, and the integer/f32-exact arithmetic makes each row bitwise
+the single-session result). `StreamEngine.drain()` is the fleet
+scheduler on top: `push(..., defer=True)` stages frames without
+stepping, and each drain round groups the ready sessions into bucketed
+batch sizes (full max-bucket chunks, the tail padded up to the smallest
+covering bucket — the same bucket-rounding discipline the vision
+pipeline uses to bound jit retraces), gathers their per-session buffer
+pytrees onto the batch axis, runs ONE jitted prime/step per group, and
+scatters the buffers back. A tail of one falls back to the
+single-session program, so stragglers never pay padding.
 """
 from __future__ import annotations
 
@@ -485,6 +500,15 @@ def _step_impl(bufs: Dict[str, jnp.ndarray], new: jnp.ndarray,
     return _finish(pooled, plan, pq, fixed_point), out
 
 
+def _split_rows(bufs: Dict[str, jnp.ndarray], b: int
+                ) -> List[Dict[str, jnp.ndarray]]:
+    """Scatter a stacked buffer pytree back into per-session [1, ...]
+    rows. Traced inside the batched prime/step programs, so XLA fuses the
+    slices into the surrounding computation."""
+    return [{k: jax.lax.slice_in_dim(v, i, i + 1, axis=0)
+             for k, v in bufs.items()} for i in range(b)]
+
+
 def reference_windows(qnet, frames: np.ndarray, window: int, hop: int,
                       fixed_point: bool = False, input_bits: int = 8
                       ) -> np.ndarray:
@@ -533,6 +557,15 @@ class StreamEngine:
     a session runs the full `prime` pass, every later one the O(hop +
     halo) `step` pass — both through ONE shared jitted trace across all
     sessions. Outputs are bit-exact with `cu.run_qnet` on each window.
+
+    Fleet mode: `push(sid, frames, defer=True)` stages frames without
+    advancing, and `drain()` advances every ready session — priming
+    windows and incremental steps alike — through BATCHED jitted
+    programs that stack whole session groups on a leading batch axis
+    (`batch_buckets` bounds the traced batch shapes, exactly like the
+    vision engine's micro-batch buckets). `step_many(sids)` is the
+    explicit one-hop batched advance for callers that schedule
+    themselves. Batched rows are bit-exact with the single-session path.
     """
 
     def __init__(
@@ -543,6 +576,7 @@ class StreamEngine:
         fixed_point: bool = False,
         input_bits: int = 8,
         max_sessions: int = 64,
+        batch_buckets: Sequence[int] = (2, 4, 8),
         clock=None,
         tracer: Optional[OT.Tracer] = None,
         metrics: Optional[OM.MetricsRegistry] = None,
@@ -550,6 +584,8 @@ class StreamEngine:
     ):
         if max_sessions < 1:
             raise ValueError(f"max_sessions {max_sessions} < 1")
+        if any(int(b) < 1 for b in batch_buckets):
+            raise ValueError(f"bad batch_buckets {batch_buckets}")
         self.pq = cu.prepare_qnet(qnet, input_bits=input_bits)
         self.qnet = self.pq.qnet
         self.plan = plan_stream(self.qnet, hop)
@@ -558,17 +594,24 @@ class StreamEngine:
         self.fixed_point = fixed_point
         self.input_bits = input_bits
         self.max_sessions = max_sessions
+        # bucket 1 is implicit — a group of one takes the single-session
+        # program (no padding, no extra trace)
+        self.batch_buckets = tuple(sorted(
+            {int(b) for b in batch_buckets if int(b) > 1}))
         self.name = name
         self._clock = time.perf_counter if clock is None else clock
         self.tracer = tracer if tracer is not None else OT.NULL
         self._reg = metrics if metrics is not None else OM.NULL_REGISTRY
         in_s, in_z = cu.input_qparams(self.qnet)
+        self._in_s, self._in_z = in_s, in_z
 
         plan, pq = self.plan, self.pq
         self._prime = jax.jit(lambda x: _prime_impl(
             x, plan, pq, in_s, in_z, input_bits, fixed_point))
         self._step = jax.jit(lambda bufs, new: _step_impl(
             bufs, new, plan, pq, in_s, in_z, input_bits, fixed_point))
+        self._prime_many_cache: Dict[int, object] = {}
+        self._step_many_cache: Dict[int, object] = {}
 
         self._sessions: "OrderedDict[str, _Session]" = OrderedDict()
         self._sid_counter = itertools.count()
@@ -580,15 +623,27 @@ class StreamEngine:
         self._step_s = 0.0
         self._frames_computed = 0
         self._frames_reused = 0
+        self._windows_batched = 0
+        self._batched_calls = 0
+        self._batched_traces = 0
+        self._pad_rows = 0
         self._init_obs()
 
-    def warm(self) -> None:
-        """Pay both XLA compilations (prime + step) up front, outside any
-        session — so a live stream's first windows never stall on a trace."""
+    def warm(self, batches: Sequence[int] = ()) -> None:
+        """Pay the XLA compilations (prime + step, plus any batched
+        `batches` sizes) up front, outside any session — so a live
+        stream's first windows never stall on a trace."""
         zeros = np.zeros((1, self.window, self.input_ch), np.float32)
         _, bufs = self._prime(zeros)
         jax.block_until_ready(
             self._step(bufs, zeros[:, :self.hop])[0])
+        for b in sorted({int(x) for x in batches}):
+            if b < 2:
+                continue
+            xb = np.zeros((b, self.window, self.input_ch), np.float32)
+            _, outs = self._prime_many_fn(b)(xb)
+            jax.block_until_ready(self._step_many_fn(b)(
+                list(outs), xb[:, :self.hop])[0])
 
     def _init_obs(self) -> None:
         lbl = {"model": self.name}
@@ -606,6 +661,14 @@ class StreamEngine:
         self._m_evicted = self._reg.counter(
             "stream_sessions_evicted_total", "LRU session evictions",
             labels=lbl)
+        self._m_batch = self._reg.histogram(
+            "stream_batch_size",
+            "real sessions advanced per jitted prime/step dispatch",
+            labels=lbl, buckets=(1, 2, 4, 8, 16, 32, 64))
+        self._m_pad = self._reg.counter(
+            "stream_pad_rows_total",
+            "bucket-padding waste rows in batched prime/step calls",
+            labels=lbl)
         self.tracer.name_track(OT.TID_ENGINE, f"stream:{self.name}")
 
     # -- session lifecycle ------------------------------------------------
@@ -613,9 +676,16 @@ class StreamEngine:
     def open_session(self, sid: Optional[str] = None) -> str:
         """Open (or re-open) a session; evicts the LRU session when full."""
         if sid is None:
+            # skip counter values that collide with user-supplied sids —
+            # handing out "s3" when a caller already opened "s3" would
+            # silently alias a foreign session's buffers and pending
             sid = f"s{next(self._sid_counter)}"
+            while sid in self._sessions:
+                sid = f"s{next(self._sid_counter)}"
         if sid in self._sessions:
+            sess = self._sessions[sid]
             self._sessions.move_to_end(sid)
+            sess.last_used = self._clock()  # re-open refreshes recency too
             return sid
         while len(self._sessions) >= self.max_sessions:
             old_sid, old = self._sessions.popitem(last=False)
@@ -647,16 +717,35 @@ class StreamEngine:
     def sessions_active(self) -> int:
         return len(self._sessions)
 
-    def session_table_bytes(self) -> int:
+    def session_table_buffer_bytes(self) -> int:
         """Resident ring-buffer bytes across primed sessions."""
         return sum(self.plan.buffer_bytes for s in self._sessions.values()
                    if s.buffers is not None)
 
+    def session_table_pending_bytes(self) -> int:
+        """float32 staging frames awaiting a full window/hop, all
+        sessions (a cold session that never primes still holds up to
+        window-1 frames here — eviction-by-bytes must see them)."""
+        return sum(s.pending.nbytes for s in self._sessions.values())
+
+    def session_table_bytes(self) -> int:
+        """Total resident session memory: primed ring buffers PLUS the
+        pending staging arrays (see `stats()` for the breakdown)."""
+        return (self.session_table_buffer_bytes()
+                + self.session_table_pending_bytes())
+
     # -- inference --------------------------------------------------------
 
-    def push(self, sid: str, frames: np.ndarray) -> List[StreamResult]:
+    def push(self, sid: str, frames: np.ndarray, *,
+             defer: bool = False) -> List[StreamResult]:
         """Feed raw frames ([n, C] float, calibrated input range) into a
-        session; returns a result per window completed by this chunk."""
+        session; returns a result per window completed by this chunk.
+
+        With `defer=True` the frames are only staged (returns []) — a
+        later `drain()` / `step_many()` advances the session, batched
+        with every other ready session. Frame consumption is
+        transactional either way: if the jitted prime/step raises, the
+        staged frames stay pending and the session remains consistent."""
         sess = self._sessions.get(sid)
         if sess is None:
             raise KeyError(f"unknown session {sid!r}; open_session first")
@@ -667,50 +756,252 @@ class StreamEngine:
         self._sessions.move_to_end(sid)
         sess.last_used = self._clock()
         sess.pending = np.concatenate([sess.pending, frames], axis=0)
+        if defer:
+            return []
         results: List[StreamResult] = []
         while True:
             if sess.buffers is None:
                 if len(sess.pending) < self.window:
                     break
-                x = jnp.asarray(sess.pending[:self.window])[None]
-                sess.pending = sess.pending[self.window:]
-                t0 = self._clock()
-                logits, bufs = self._prime(x)
-                logits = np.asarray(jax.block_until_ready(logits))[0]
-                t1 = self._clock()
-                self._primes += 1
-                self._prime_s += t1 - t0
-                self._frames_computed += self.plan.frames_full
-                self._m_computed.inc(self.plan.frames_full)
-                self.tracer.complete(
-                    "stream_prime", t0, t1, cat="stream", tid=OT.TID_ENGINE,
-                    args={"sid": sid, "frames": self.plan.frames_full})
+                results += self._prime_sessions((sid,), 0)
             else:
                 if len(sess.pending) < self.hop:
                     break
-                new = sess.pending[:self.hop][None]
-                sess.pending = sess.pending[self.hop:]
-                t0 = self._clock()
-                logits, bufs = self._step(sess.buffers, new)
-                logits = np.asarray(jax.block_until_ready(logits))[0]
-                t1 = self._clock()
-                self._step_s += t1 - t0
-                self._frames_computed += self.plan.frames_step
-                self._frames_reused += (self.plan.frames_full
-                                        - self.plan.frames_step)
-                self._m_computed.inc(self.plan.frames_step)
-                self._m_reused.inc(self.plan.frames_full
-                                   - self.plan.frames_step)
-                self.tracer.complete(
-                    "stream_step", t0, t1, cat="stream", tid=OT.TID_ENGINE,
-                    args={"sid": sid, "frames": self.plan.frames_step})
-            sess.buffers = bufs
-            self._windows += 1
-            self._m_windows.inc()
-            results.append(StreamResult(
-                sid=sid, window=sess.windows, logits=logits,
-                streamed=sess.windows > 0))
-            sess.windows += 1
+                results += self._step_sessions((sid,), 0)
+        return results
+
+    # -- batched stepping --------------------------------------------------
+
+    def _prime_many_fn(self, b: int):
+        """Jitted prime over B stacked windows, buffers scattered back to
+        per-session rows inside the trace. One cache entry per batch
+        size (the buckets bound how many exist)."""
+        fn = self._prime_many_cache.get(b)
+        if fn is None:
+            plan, pq = self.plan, self.pq
+            in_s, in_z = self._in_s, self._in_z
+            input_bits, fixed_point = self.input_bits, self.fixed_point
+
+            def impl(x):
+                self._batched_traces += 1  # python runs at trace time only
+                logits, bufs = _prime_impl(x, plan, pq, in_s, in_z,
+                                           input_bits, fixed_point)
+                return logits, _split_rows(bufs, b)
+
+            fn = jax.jit(impl)
+            self._prime_many_cache[b] = fn
+        return fn
+
+    def _step_many_fn(self, b: int):
+        """Jitted step over B sessions: gather the per-session buffer
+        pytrees onto the batch axis, run the (batch-polymorphic) step
+        once, scatter the updated buffers back — all one XLA program."""
+        fn = self._step_many_cache.get(b)
+        if fn is None:
+            plan, pq = self.plan, self.pq
+            in_s, in_z = self._in_s, self._in_z
+            input_bits, fixed_point = self.input_bits, self.fixed_point
+
+            def impl(bufs_list, new):
+                self._batched_traces += 1
+                stacked = {
+                    k: jnp.concatenate([bl[k] for bl in bufs_list], axis=0)
+                    for k in bufs_list[0]}
+                logits, out = _step_impl(stacked, new, plan, pq, in_s, in_z,
+                                         input_bits, fixed_point)
+                return logits, _split_rows(out, b)
+
+            fn = jax.jit(impl)
+            self._step_many_cache[b] = fn
+        return fn
+
+    def _buckets_of(self, sids: Sequence[str]
+                    ) -> List[Tuple[Tuple[str, ...], int]]:
+        """Split ready sids into (group, pad) dispatches: full max-bucket
+        chunks, then the tail rounded UP to the smallest covering bucket
+        (the vision pipeline's bucket-rounding discipline — the jit
+        trace cache stays one entry per bucket). A tail of one takes the
+        single-session program instead of paying padding."""
+        sids = tuple(sids)
+        bs = self.batch_buckets
+        if not bs:
+            return [((sid,), 0) for sid in sids]
+        groups: List[Tuple[Tuple[str, ...], int]] = []
+        i, n = 0, len(sids)
+        maxb = bs[-1]
+        while n - i >= maxb:
+            groups.append((sids[i:i + maxb], 0))
+            i += maxb
+        rem = n - i
+        if rem == 1:
+            groups.append((sids[i:], 0))
+        elif rem > 1:
+            cover = min(x for x in bs if x >= rem)
+            groups.append((sids[i:], cover - rem))
+        return groups
+
+    def _note_window(self, sess: _Session,
+                     logits_row: np.ndarray) -> StreamResult:
+        self._windows += 1
+        self._m_windows.inc()
+        r = StreamResult(sid=sess.sid, window=sess.windows,
+                         logits=logits_row, streamed=sess.windows > 0)
+        sess.windows += 1
+        return r
+
+    def _prime_sessions(self, group: Sequence[str],
+                        pad: int) -> List[StreamResult]:
+        """Run the priming window for a group of sessions in one jitted
+        call (`pad` extra zero rows round the batch up to a bucket)."""
+        sess = [self._sessions[sid] for sid in group]
+        b = len(sess) + pad
+        xs = [s.pending[:self.window] for s in sess]
+        if pad:
+            xs += [np.zeros((self.window, self.input_ch), np.float32)] * pad
+        x = jnp.asarray(np.stack(xs))
+        t0 = self._clock()
+        if b == 1:
+            logits, bufs = self._prime(x)
+            outs = [bufs]
+        else:
+            logits, outs = self._prime_many_fn(b)(x)
+        logits = np.asarray(jax.block_until_ready(logits))
+        t1 = self._clock()
+        results = []
+        for i, s in enumerate(sess):
+            # consume ONLY after the jitted call returned: a failed prime
+            # (device OOM, bad buffer state) must not lose frames
+            s.pending = s.pending[self.window:]
+            s.buffers = outs[i]
+            self._sessions.move_to_end(s.sid)
+            s.last_used = t1
+            results.append(self._note_window(s, logits[i]))
+        self._primes += len(sess)
+        self._prime_s += t1 - t0
+        frames = self.plan.frames_full * b
+        self._frames_computed += frames
+        self._m_computed.inc(frames)
+        self._m_batch.observe(len(sess))
+        if b > 1:
+            self._batched_calls += 1
+            self._windows_batched += len(sess)
+        if pad:
+            self._pad_rows += pad
+            self._m_pad.inc(pad)
+        if b == 1:
+            self.tracer.complete(
+                "stream_prime", t0, t1, cat="stream", tid=OT.TID_ENGINE,
+                args={"sid": group[0], "frames": frames})
+        else:
+            self.tracer.complete(
+                "stream_prime_batched", t0, t1, cat="stream",
+                tid=OT.TID_ENGINE,
+                args={"sids": list(group), "batch": len(sess), "pad": pad,
+                      "frames": frames})
+        return results
+
+    def _step_sessions(self, group: Sequence[str],
+                       pad: int) -> List[StreamResult]:
+        """Advance a group of primed sessions by one hop in one jitted
+        call. Padding rows replicate the first session's buffers; their
+        outputs are discarded (batch rows are independent, so the real
+        rows stay bit-exact)."""
+        sess = [self._sessions[sid] for sid in group]
+        b = len(sess) + pad
+        news = [s.pending[:self.hop] for s in sess]
+        if pad:
+            news += [np.zeros((self.hop, self.input_ch), np.float32)] * pad
+        new = jnp.asarray(np.stack(news))
+        t0 = self._clock()
+        if b == 1:
+            logits, out = self._step(sess[0].buffers, new)
+            outs = [out]
+        else:
+            bufs_list = [s.buffers for s in sess]
+            if pad:
+                bufs_list += [sess[0].buffers] * pad
+            logits, outs = self._step_many_fn(b)(bufs_list, new)
+        logits = np.asarray(jax.block_until_ready(logits))
+        t1 = self._clock()
+        results = []
+        for i, s in enumerate(sess):
+            s.pending = s.pending[self.hop:]  # transactional: after success
+            s.buffers = outs[i]
+            self._sessions.move_to_end(s.sid)
+            s.last_used = t1
+            results.append(self._note_window(s, logits[i]))
+        self._step_s += t1 - t0
+        frames = self.plan.frames_step * b
+        reused = (self.plan.frames_full - self.plan.frames_step) * len(sess)
+        self._frames_computed += frames
+        self._frames_reused += reused
+        self._m_computed.inc(frames)
+        self._m_reused.inc(reused)
+        self._m_batch.observe(len(sess))
+        if b > 1:
+            self._batched_calls += 1
+            self._windows_batched += len(sess)
+        if pad:
+            self._pad_rows += pad
+            self._m_pad.inc(pad)
+        if b == 1:
+            self.tracer.complete(
+                "stream_step", t0, t1, cat="stream", tid=OT.TID_ENGINE,
+                args={"sid": group[0], "frames": frames})
+        else:
+            self.tracer.complete(
+                "stream_step_batched", t0, t1, cat="stream",
+                tid=OT.TID_ENGINE,
+                args={"sids": list(group), "batch": len(sess), "pad": pad,
+                      "frames": frames})
+        return results
+
+    def _ready_sids(self) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+        primes, steps = [], []
+        for sid, s in self._sessions.items():
+            if s.buffers is None:
+                if len(s.pending) >= self.window:
+                    primes.append(sid)
+            elif len(s.pending) >= self.hop:
+                steps.append(sid)
+        return tuple(primes), tuple(steps)
+
+    def step_many(self, sids: Sequence[str]) -> List[StreamResult]:
+        """Advance each named session by ONE hop, grouped into bucketed
+        batched step calls. Sessions that are unprimed or hold fewer than
+        `hop` pending frames are skipped (push their frames first, or use
+        `drain()` which also primes); unknown sids raise KeyError."""
+        ready, seen = [], set()
+        for sid in sids:
+            sess = self._sessions.get(sid)
+            if sess is None:
+                raise KeyError(f"unknown session {sid!r}; open_session first")
+            if sid in seen:
+                continue
+            seen.add(sid)
+            if sess.buffers is not None and len(sess.pending) >= self.hop:
+                ready.append(sid)
+        results: List[StreamResult] = []
+        for group, pad in self._buckets_of(ready):
+            results += self._step_sessions(group, pad)
+        return results
+
+    def drain(self) -> List[StreamResult]:
+        """Advance EVERY ready session until none can move: each round
+        groups the sessions ready to prime and the sessions ready to
+        step into bucketed batched calls (mixed-phase fleets work — a
+        session primed in round k steps in round k+1 if it still holds a
+        hop of frames). Returns all completed windows; per session they
+        are in window order."""
+        results: List[StreamResult] = []
+        while True:
+            primes, steps = self._ready_sids()
+            if not primes and not steps:
+                break
+            for group, pad in self._buckets_of(primes):
+                results += self._prime_sessions(group, pad)
+            for group, pad in self._buckets_of(steps):
+                results += self._step_sessions(group, pad)
         return results
 
     # -- reporting --------------------------------------------------------
@@ -723,6 +1014,14 @@ class StreamEngine:
             "windows": float(self._windows),
             "primes": float(self._primes),
             "steps": float(steps),
+            # fleet mode: windows advanced through batched (B>1) calls,
+            # how many such dispatches ran, the bucket-padding waste, and
+            # how many times a batched program actually traced (bounded
+            # by 2 * len(batch_buckets) when the scheduler is healthy)
+            "windows_batched": float(self._windows_batched),
+            "batched_calls": float(self._batched_calls),
+            "batched_traces": float(self._batched_traces),
+            "pad_rows": float(self._pad_rows),
             "frames_computed_total": float(self._frames_computed),
             "frames_reused_total": float(self._frames_reused),
             "frames_per_window_full": float(self.plan.frames_full),
@@ -731,6 +1030,13 @@ class StreamEngine:
             "macs_per_window_full": float(self.plan.macs_full),
             "macs_per_window_step": float(self.plan.macs_step),
             "session_buffer_bytes": float(self.plan.buffer_bytes),
+            # resident memory breakdown: uint8 ring buffers of primed
+            # sessions + float32 pending staging of ALL sessions — the
+            # total is what an eviction-by-bytes policy must budget
+            "session_table_buffer_bytes":
+                float(self.session_table_buffer_bytes()),
+            "session_table_pending_bytes":
+                float(self.session_table_pending_bytes()),
             "session_table_bytes": float(self.session_table_bytes()),
             "prime_s": self._prime_s,
             "step_s": self._step_s,

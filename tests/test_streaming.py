@@ -206,6 +206,180 @@ def test_window_results_are_ordered_and_flagged():
 
 
 # ---------------------------------------------------------------------------
+# batched stepping: drain / step_many
+# ---------------------------------------------------------------------------
+
+
+def _per_session(results):
+    by = {}
+    for r in results:
+        by.setdefault(r.sid, []).append(r)
+    for rs in by.values():
+        assert [r.window for r in rs] == list(range(rs[0].window,
+                                                    rs[0].window + len(rs)))
+    return by
+
+
+@settings(max_examples=4)
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([3, 5, 8, 9]))
+def test_batched_drain_matches_serial_and_reference(seed, n):
+    """The tentpole property: N sessions advanced through bucketed
+    batched prime/step calls produce, per session, logits bit-identical
+    to (a) the serial single-session path and (b) `cu.run_qnet` on every
+    full window. n sweeps padding (3, 5), an exact bucket (8), and a
+    max-chunk + straggler split (9)."""
+    qnet = _qnet(input_t=32, n_blocks=2)
+    hop, window = 8, qnet.spec.input_hw
+    rng = np.random.default_rng(seed)
+    streams = [rng.uniform(-1, 1, (ST.frames_for_windows(4, window, hop),
+                                   qnet.spec.input_ch)).astype(np.float32)
+               for _ in range(n)]
+    serial = ST.StreamEngine(qnet, hop, max_sessions=n)
+    got_serial = []
+    for i in range(n):
+        sid = serial.open_session()
+        got_serial.append(np.stack(
+            [r.logits for r in serial.push(sid, streams[i])]))
+    batched = ST.StreamEngine(qnet, hop, max_sessions=n)
+    sids = [batched.open_session() for _ in range(n)]
+    for i, sid in enumerate(sids):
+        assert batched.push(sid, streams[i], defer=True) == []
+    by = _per_session(batched.drain())
+    assert batched.stats()["windows_batched"] > 0  # really took the batch path
+    for i, sid in enumerate(sids):
+        got = np.stack([r.logits for r in by[sid]])
+        ref = ST.reference_windows(qnet, streams[i], window, hop)
+        np.testing.assert_array_equal(got, ref)
+        np.testing.assert_array_equal(got, got_serial[i])
+
+
+def test_drain_mixed_phase_groups():
+    """One drain round can hold both a prime group and a step group: old
+    sessions step while new ones prime, and a just-primed session steps
+    in the next round — all bit-exact."""
+    qnet = _qnet(input_t=32, n_blocks=2)
+    hop, window = 8, qnet.spec.input_hw
+    rng = np.random.default_rng(3)
+    n_old, n_new = 3, 3
+    frames = {f"old{i}": rng.uniform(-1, 1, (ST.frames_for_windows(
+        3, window, hop), qnet.spec.input_ch)).astype(np.float32)
+        for i in range(n_old)}
+    frames.update({f"new{i}": rng.uniform(-1, 1, (ST.frames_for_windows(
+        2, window, hop), qnet.spec.input_ch)).astype(np.float32)
+        for i in range(n_new)})
+    eng = ST.StreamEngine(qnet, hop)
+    got = {sid: [] for sid in frames}
+    for i in range(n_old):  # prime the old cohort first
+        sid = f"old{i}"
+        eng.open_session(sid)
+        eng.push(sid, frames[sid][:window], defer=True)
+    got_prime = _per_session(eng.drain())
+    for sid, rs in got_prime.items():
+        got[sid] += rs
+    # now stage: old sessions hold 2 hops each (2 step rounds), new
+    # sessions a full window + 1 hop (prime, then step)
+    for i in range(n_old):
+        eng.push(f"old{i}", frames[f"old{i}"][window:], defer=True)
+    for i in range(n_new):
+        sid = f"new{i}"
+        eng.open_session(sid)
+        eng.push(sid, frames[sid], defer=True)
+    by = _per_session(eng.drain())
+    for sid, rs in by.items():
+        got[sid] += rs
+    for sid, fr in frames.items():
+        ref = ST.reference_windows(qnet, fr, window, hop)
+        np.testing.assert_array_equal(
+            np.stack([r.logits for r in got[sid]]), ref)
+
+
+def test_step_many_advances_exactly_one_hop():
+    qnet = _qnet()
+    hop, window = 8, qnet.spec.input_hw
+    rng = np.random.default_rng(1)
+    eng = ST.StreamEngine(qnet, hop)
+    sids = [eng.open_session() for _ in range(4)]
+    streams = {}
+    for sid in sids:
+        streams[sid] = rng.uniform(-1, 1, (ST.frames_for_windows(
+            3, window, hop), qnet.spec.input_ch)).astype(np.float32)
+        eng.push(sid, streams[sid][:window])  # prime
+        eng.push(sid, streams[sid][window:], defer=True)  # 2 hops staged
+    r1 = eng.step_many(sids)
+    assert sorted(r.window for r in r1) == [1] * 4  # ONE hop each
+    r2 = eng.step_many(sids)
+    assert sorted(r.window for r in r2) == [2] * 4
+    assert eng.step_many(sids) == []  # pending dry: skipped, not an error
+    for sid in sids:
+        ref = ST.reference_windows(qnet, streams[sid], window, hop)
+        got = np.stack([r.logits for r in r1 + r2 if r.sid == sid])
+        np.testing.assert_array_equal(got, ref[1:])
+    with pytest.raises(KeyError):
+        eng.step_many(["nope"])
+
+
+def test_eviction_between_stage_and_drain_drops_only_victim():
+    """A session evicted after its frames were staged must vanish from
+    the next drain without touching the survivors' results."""
+    qnet = _qnet(input_t=32, n_blocks=2)
+    hop, window = 8, qnet.spec.input_hw
+    rng = np.random.default_rng(5)
+    eng = ST.StreamEngine(qnet, hop, max_sessions=2)
+    frames = {sid: rng.uniform(-1, 1, (ST.frames_for_windows(
+        2, window, hop), qnet.spec.input_ch)).astype(np.float32)
+        for sid in ("a", "b", "c")}
+    for sid in ("a", "b"):
+        eng.open_session(sid)
+        eng.push(sid, frames[sid], defer=True)
+    eng.open_session("c")  # evicts "a" (LRU) with its staged frames
+    eng.push("c", frames["c"], defer=True)
+    by = _per_session(eng.drain())
+    assert set(by) == {"b", "c"}
+    assert eng.stats()["sessions_evicted"] == 1.0
+    for sid in ("b", "c"):
+        ref = ST.reference_windows(qnet, frames[sid], window, hop)
+        np.testing.assert_array_equal(
+            np.stack([r.logits for r in by[sid]]), ref)
+
+
+def test_batched_traces_bounded_by_buckets():
+    """Retrace discipline: arbitrary fleet sizes may only ever trace one
+    prime + one step program per bucket."""
+    qnet = _qnet()
+    hop, window = 8, qnet.spec.input_hw
+    rng = np.random.default_rng(2)
+    eng = ST.StreamEngine(qnet, hop, batch_buckets=(2, 4), max_sessions=16)
+    for round_i, n in enumerate((2, 3, 5, 6, 4)):
+        sids = [eng.open_session(f"r{round_i}_{i}") for i in range(n)]
+        for sid in sids:
+            eng.push(sid, rng.uniform(-1, 1, (window, qnet.spec.input_ch)
+                                      ).astype(np.float32), defer=True)
+        eng.drain()
+    assert eng.stats()["batched_traces"] <= 2 * len(eng.batch_buckets)
+
+
+def test_drain_without_buckets_falls_back_to_serial():
+    qnet = _qnet()
+    hop, window = 8, qnet.spec.input_hw
+    rng = np.random.default_rng(9)
+    eng = ST.StreamEngine(qnet, hop, batch_buckets=())
+    frames = {eng.open_session(): rng.uniform(-1, 1, (window,
+                                                      qnet.spec.input_ch)
+                                              ).astype(np.float32)
+              for _ in range(3)}
+    for sid, fr in frames.items():
+        eng.push(sid, fr, defer=True)
+    by = _per_session(eng.drain())
+    assert set(by) == set(frames)
+    st = eng.stats()
+    assert st["windows_batched"] == 0 and st["batched_calls"] == 0
+    for sid, fr in frames.items():
+        ref = ST.reference_windows(qnet, fr, window, hop)
+        np.testing.assert_array_equal(
+            np.stack([r.logits for r in by[sid]]), ref)
+
+
+# ---------------------------------------------------------------------------
 # session table
 # ---------------------------------------------------------------------------
 
@@ -258,6 +432,125 @@ def test_push_validates_inputs():
 
 
 # ---------------------------------------------------------------------------
+# session-lifecycle bugfix regressions
+# ---------------------------------------------------------------------------
+
+
+def test_auto_sid_skips_user_supplied_collisions():
+    """Regression: the auto-sid counter must never hand out a sid a user
+    already opened — that silently re-opened the foreign session (its
+    buffers, its pending) instead of creating a fresh one."""
+    qnet = _qnet()
+    eng = ST.StreamEngine(qnet, 8)
+    user = eng.open_session("s1")
+    eng.push(user, np.zeros((3, qnet.spec.input_ch), np.float32),
+             defer=True)
+    assert eng.open_session() == "s0"
+    fresh = eng.open_session()  # counter hits 1 -> "s1" taken -> skip
+    assert fresh not in ("s0", "s1")
+    assert eng.sessions_active == 3
+    assert len(eng._sessions[fresh].pending) == 0  # NOT the user's state
+    assert len(eng._sessions["s1"].pending) == 3  # user state untouched
+
+
+def test_push_is_transactional_on_step_failure(monkeypatch):
+    """Regression: a jitted step that raises (device OOM, bad buffer
+    state) must not consume the staged frames — after recovery the same
+    frames still produce the bit-exact window."""
+    qnet = _qnet()
+    hop, window = 8, qnet.spec.input_hw
+    rng = np.random.default_rng(4)
+    frames = rng.uniform(-1, 1, (ST.frames_for_windows(2, window, hop),
+                                 qnet.spec.input_ch)).astype(np.float32)
+    eng = ST.StreamEngine(qnet, hop)
+    sid = eng.open_session()
+    eng.push(sid, frames[:window])  # primed
+
+    def boom(*a, **k):
+        raise RuntimeError("device OOM")
+
+    monkeypatch.setattr(eng, "_step", boom)
+    with pytest.raises(RuntimeError, match="OOM"):
+        eng.push(sid, frames[window:])
+    assert len(eng._sessions[sid].pending) == hop  # frames NOT lost
+    assert eng._sessions[sid].windows == 1  # no phantom window recorded
+    monkeypatch.undo()
+    res = eng.push(sid, np.zeros((0, qnet.spec.input_ch), np.float32))
+    ref = ST.reference_windows(qnet, frames, window, hop)
+    np.testing.assert_array_equal(
+        np.stack([r.logits for r in res]), ref[1:])
+
+
+def test_push_is_transactional_on_prime_failure(monkeypatch):
+    qnet = _qnet()
+    hop, window = 8, qnet.spec.input_hw
+    rng = np.random.default_rng(6)
+    frames = rng.uniform(-1, 1, (window, qnet.spec.input_ch)
+                         ).astype(np.float32)
+    eng = ST.StreamEngine(qnet, hop)
+    sid = eng.open_session()
+
+    def boom(*a, **k):
+        raise RuntimeError("prime failed")
+
+    monkeypatch.setattr(eng, "_prime", boom)
+    with pytest.raises(RuntimeError, match="prime"):
+        eng.push(sid, frames)
+    sess = eng._sessions[sid]
+    assert len(sess.pending) == window and sess.buffers is None
+    monkeypatch.undo()
+    res = eng.push(sid, np.zeros((0, qnet.spec.input_ch), np.float32))
+    ref = ST.reference_windows(qnet, frames, window, hop)
+    np.testing.assert_array_equal(
+        np.stack([r.logits for r in res]), ref)
+
+
+def test_reopen_refreshes_last_used():
+    """Regression: re-opening an existing sid moved it in LRU order but
+    left `last_used` stale — any recency policy reading the timestamp
+    saw the session as idle."""
+    qnet = _qnet()
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    eng = ST.StreamEngine(qnet, 8, clock=clock)
+    eng.open_session("a")
+    stale = eng._sessions["a"].last_used
+    eng.open_session("b")
+    eng.open_session("a")  # re-open
+    assert eng._sessions["a"].last_used > stale
+    assert next(reversed(eng._sessions)) == "a"  # MRU position too
+
+
+def test_session_table_bytes_includes_pending_staging():
+    """Regression: `session_table_bytes()` ignored the float32 pending
+    staging arrays, under-reporting resident memory."""
+    qnet = _qnet()
+    hop, window, ch = 8, qnet.spec.input_hw, qnet.spec.input_ch
+    rng = np.random.default_rng(8)
+    eng = ST.StreamEngine(qnet, hop)
+    sid = eng.open_session()
+    eng.push(sid, rng.uniform(-1, 1, (hop, ch)).astype(np.float32),
+             defer=True)  # staged, not yet primable
+    pend = eng._sessions[sid].pending.nbytes
+    assert pend == hop * ch * 4
+    assert eng.session_table_buffer_bytes() == 0
+    assert eng.session_table_pending_bytes() == pend
+    assert eng.session_table_bytes() == pend
+    # prime with 3 leftover frames: buffers + leftover staging both count
+    eng.push(sid, rng.uniform(-1, 1, (window - hop + 3, ch)
+                              ).astype(np.float32))
+    stats = eng.stats()
+    assert stats["session_table_buffer_bytes"] == eng.plan.buffer_bytes
+    assert stats["session_table_pending_bytes"] == 3 * ch * 4
+    assert stats["session_table_bytes"] == (eng.plan.buffer_bytes
+                                            + 3 * ch * 4)
+
+
+# ---------------------------------------------------------------------------
 # observability
 # ---------------------------------------------------------------------------
 
@@ -305,6 +598,54 @@ def test_stream_obs_counters_and_trace():
     phases = [ev["ph"] for ev in doc["traceEvents"]
               if ev.get("name") == "stream_session:kws"]
     assert "b" in phases and "e" in phases  # lifecycle span opened+closed
+
+
+def test_batched_obs_histogram_spans_and_pads():
+    """Fleet-mode obs contract: `stream_batch_size` histogram records the
+    REAL group size per dispatch, `stream_pad_rows_total` the bucket
+    padding waste, and batched prime/step land as their own spans."""
+    qnet = _qnet(input_t=32, n_blocks=2)
+    hop, window = 8, qnet.spec.input_hw
+    t = [0.0]
+
+    def clock():
+        t[0] += 0.001
+        return t[0]
+
+    tracer = Tracer(clock, origin_s=0.0)
+    reg = MetricsRegistry()
+    eng = ST.StreamEngine(qnet, hop, clock=clock, tracer=tracer,
+                          metrics=reg, name="kws", batch_buckets=(4,))
+    rng = np.random.default_rng(0)
+    sids = [eng.open_session() for _ in range(3)]
+    for sid in sids:  # window + 1 hop staged each
+        eng.push(sid, rng.uniform(-1, 1, (window + hop, qnet.spec.input_ch)
+                                  ).astype(np.float32), defer=True)
+    eng.drain()  # round 1: prime batch of 3 (pad 1); round 2: step ditto
+
+    lbl = {"model": "kws"}
+    hist = reg.histogram("stream_batch_size", labels=lbl,
+                         buckets=(1, 2, 4, 8, 16, 32, 64))
+    assert hist.count == 2 and hist.sum == 6.0  # two dispatches of 3 real
+    assert reg.counter("stream_pad_rows_total", labels=lbl).value == 2.0
+    stats = eng.stats()
+    assert stats["pad_rows"] == 2.0
+    assert stats["windows_batched"] == 6.0
+    assert stats["batched_calls"] == 2.0
+    for sid in sids:
+        eng.close_session(sid)
+    doc = tracer.to_chrome()
+    assert validate_chrome_trace(doc) == []
+    names = {ev.get("name") for ev in doc["traceEvents"]}
+    assert "stream_prime_batched" in names
+    assert "stream_step_batched" in names
+    # pad rows are physically computed: the frames counter sees 4-row
+    # batches while reuse accounting credits only the 3 real sessions
+    plan = eng.plan
+    assert (reg.counter("stream_frames_computed_total", labels=lbl).value
+            == 4 * plan.frames_full + 4 * plan.frames_step)
+    assert (reg.counter("stream_frames_reused_total", labels=lbl).value
+            == 3 * (plan.frames_full - plan.frames_step))
 
 
 def test_eviction_closes_lifecycle_span():
