@@ -120,6 +120,12 @@ def run(input_t: int = 2048, channels: int = 256, n_blocks: int = 5,
         eng_n.push(eng_n.open_session(), frames[:input_t])
     table_bytes = eng_n.session_table_bytes()
 
+    # modeled energy (docs/energy.md): busy power x measured step time +
+    # analytic ring-buffer traffic; fps/W at the measured streaming rate
+    energy_j = eng.energy_j_per_window()
+    watts = eng.power.idle_w + energy_j * fps_stream
+    fps_per_watt = fps_stream / watts if watts > 0 else 0.0
+
     report = {
         "net": qnet.spec.name,
         "backend": jax.default_backend(),
@@ -145,6 +151,12 @@ def run(input_t: int = 2048, channels: int = 256, n_blocks: int = 5,
         "session_buffer_bytes": plan.buffer_bytes,
         "n_sessions": n_sessions,
         "session_table_bytes": table_bytes,
+        "bytes_per_window_full": plan.bytes_full,
+        "bytes_per_window_step": plan.bytes_step,
+        "energy_j_per_window_step": energy_j,
+        "watts": watts,
+        "fps_per_watt": fps_per_watt,
+        "power_source": eng.power.source,
     }
     os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
     with open(out, "w") as f:
@@ -157,6 +169,8 @@ def run(input_t: int = 2048, channels: int = 256, n_blocks: int = 5,
         f"{plan.frames_step}/{plan.frames_full}")
     row("stream_bit_exact", 0.0, bit_exact)
     row("stream_session_table_bytes", 0.0, f"{table_bytes}B@{n_sessions}")
+    row("stream_fps_per_watt", 0.0,
+        f"{fps_per_watt:.1f}fps/W ({energy_j * 1e6:.1f}uJ/window)")
     return report
 
 

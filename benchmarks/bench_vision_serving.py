@@ -218,8 +218,11 @@ def run(alpha: float = 0.35, hw: int = 48, batch: int = 8, n_images: int = 64,
         "pad_fraction": stats.pad_fraction,
         "harvest_wait_s": stats.harvest_wait_s,
         "macs_per_image": stats.macs_per_image,
-        "energy_j_per_image_proxy": stats.energy_j_per_image_proxy,
-        "fps_per_watt_proxy": stats.fps_per_watt_proxy,
+        "energy_j_per_image": stats.energy_j_per_image,
+        "watts": stats.watts,
+        "fps_per_watt": stats.fps_per_watt,
+        "power_source": stats.power_source,
+        "energy_tuned_fraction": stats.energy_tuned_fraction,
         "backend": jax.default_backend(),
     }
     os.makedirs(os.path.dirname(out) or ".", exist_ok=True)

@@ -18,8 +18,10 @@
 the replica-scaling sweep + the streaming pass in an isolated
 single-device subprocess) and asserts the JSON reports still parse — the
 CI gate. A full (or smoke) run aggregates the per-benchmark results into a
-perf-trajectory report at the repo root, BENCH_PR8.json: throughput /
-latency / analytic bytes-moved, tuned-vs-default serving FPS (measured
+perf-trajectory report at the repo root, BENCH_PR9.json: throughput /
+latency / analytic bytes-moved, the calibrated energy model's J/image /
+watts / FPS-per-Watt view of serving and streaming (docs/energy.md),
+tuned-vs-default serving FPS (measured
 per-op routes from the committed `experiments/tuned/` cache), the
 obs-enabled serving FPS + metrics-snapshot profile (the observability
 layer's <5% hot-path overhead budget, recorded as `obs_overhead_frac`),
@@ -48,7 +50,7 @@ import os
 import subprocess
 import sys
 
-BENCH_REPORT = "BENCH_PR8.json"
+BENCH_REPORT = "BENCH_PR9.json"
 VISION_REPORT = "experiments/vision_serving.json"
 SCALING_REPORT = "experiments/vision_serving_scaling.json"
 STREAMING_REPORT = "experiments/streaming.json"
@@ -123,7 +125,7 @@ def _write_trajectory(vision, kernels, baseline, smoke: bool,
         pr1_fps = baseline.get("fps_pipelined_fast",
                                baseline.get("fps_pipelined"))
     report = {
-        "pr": 8,
+        "pr": 9,
         "smoke": smoke,
         "baseline_source": VISION_REPORT if baseline else None,
         "serving": None,
@@ -158,6 +160,13 @@ def _write_trajectory(vision, kernels, baseline, smoke: bool,
             "latency_p50_delta_vs_pr1_s": (
                 vision["latency_p50_s"] - baseline["latency_p50_s"]
                 if baseline and "latency_p50_s" in baseline else None),
+            # calibrated energy model (docs/energy.md); absent from
+            # pre-PR-9 baseline files, so every read tolerates None
+            "energy_j_per_image": vision.get("energy_j_per_image"),
+            "watts": vision.get("watts"),
+            "fps_per_watt": vision.get("fps_per_watt"),
+            "power_source": vision.get("power_source"),
+            "energy_tuned_fraction": vision.get("energy_tuned_fraction"),
         }
         if vision.get("fps_pipelined_obs") is not None:
             # the serving profile as the obs layer saw it: headline FPS
@@ -175,8 +184,8 @@ def _write_trajectory(vision, kernels, baseline, smoke: bool,
                 "latency_p50_s": lat.get("p50"),
                 "latency_p95_s": lat.get("p95"),
                 "latency_p99_s": lat.get("p99"),
-                "fps_per_watt_proxy": (snap.get("gauges") or {}).get(
-                    'serve_fps_per_watt_proxy{model="default"}'),
+                "fps_per_watt": (snap.get("gauges") or {}).get(
+                    'serve_fps_per_watt{model="default"}'),
                 "metrics_snapshot": snap,
             }
         if vision.get("tuned_cache"):
@@ -228,6 +237,12 @@ def _write_trajectory(vision, kernels, baseline, smoke: bool,
             "session_buffer_bytes": streaming["session_buffer_bytes"],
             "n_sessions": streaming["n_sessions"],
             "session_table_bytes": streaming["session_table_bytes"],
+            "bytes_per_window_step": streaming.get("bytes_per_window_step"),
+            "energy_j_per_window_step":
+                streaming.get("energy_j_per_window_step"),
+            "watts": streaming.get("watts"),
+            "fps_per_watt": streaming.get("fps_per_watt"),
+            "power_source": streaming.get("power_source"),
         }
     if streaming_batched:
         sb = streaming_batched
@@ -290,7 +305,10 @@ def _collect_throughput_rows(base, cur):
     same_serving = (_serving_config(base) == _serving_config(cur)
                     and None not in _serving_config(cur))
     bs, cs = base.get("serving") or {}, cur.get("serving") or {}
-    for key in ("fps_pipelined_fast", "fps_pipelined_tuned"):
+    for key in ("fps_pipelined_fast", "fps_pipelined_tuned",
+                "fps_per_watt"):
+        # fps_per_watt is modeled-energy throughput (docs/energy.md);
+        # pre-PR-9 baselines lack the key, so the row simply doesn't form
         if bs.get(key) is not None and cs.get(key) is not None:
             rows.append((f"serving.{key}", bs[key], cs[key], same_serving))
     for key in ("fps_pipelined_obs", "fps_pipelined_pr1",
@@ -306,7 +324,8 @@ def _collect_throughput_rows(base, cur):
     # on the same host in one process), so it gates even across
     # heterogeneous CI machines; frames_ratio is a pure function of the
     # plan — any drop means the halo math got worse, so it gates too
-    for key in ("speedup_vs_full_window", "frames_ratio"):
+    for key in ("speedup_vs_full_window", "frames_ratio",
+                "fps_per_watt"):
         if bst.get(key) is not None and cst.get(key) is not None:
             rows.append((f"streaming.{key}", bst[key], cst[key],
                          bool(same_stream)))
@@ -382,8 +401,10 @@ def check_regression(report, baseline, threshold: float = 0.25,
             else (delta > threshold)
         gateable = name in ("serving.fps_pipelined_fast",
                             "serving.fps_pipelined_tuned",
+                            "serving.fps_per_watt",
                             "streaming.speedup_vs_full_window",
                             "streaming.frames_ratio",
+                            "streaming.fps_per_watt",
                             "streaming_batched.speedup_vs_serial_step")
         if gated and regressed:
             verdict = "FAIL"

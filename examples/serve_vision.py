@@ -74,8 +74,10 @@ def main():
     print(f"micro-batches: {stats.micro_batches} "
           f"(pad fraction {stats.pad_fraction:.2f}), "
           f"stage invocations: {stats.stage_invocations}")
-    print(f"energy proxy: {stats.energy_j_per_image_proxy*1e6:.2f} uJ/image "
-          f"-> {stats.fps_per_watt_proxy:.0f} FPS/W-proxy")
+    print(f"modeled energy: {stats.energy_j_per_image*1e6:.2f} uJ/image "
+          f"({stats.power_source}, {stats.energy_tuned_fraction:.0%} from "
+          f"measured routes) -> {stats.watts:.1f} W, "
+          f"{stats.fps_per_watt:.1f} FPS/W")
 
     # 5. multi-model routing: MobileNetV2 + compact EfficientNet share the
     # device(s); the router dispatches micro-batches EDF across models.

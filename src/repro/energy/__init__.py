@@ -1,0 +1,63 @@
+"""Energy modeling: power curves, per-op energy, power-capped dispatch.
+
+The package behind the paper's FPS/Watt headline (Sec. 6, Table 6):
+
+  * `power`    — `PowerModel` device curves; RAPL-calibrated on Linux
+                 CPUs where `/sys/class/powercap` is readable, per-
+                 backend constants otherwise.
+  * `model`    — `estimate_energy`: autotuner route timings × analytic
+                 bytes-moved × the power curve → modeled J/image, plus
+                 the `edp_score` the tuner's energy-delay objective
+                 shares.
+  * `governor` — `PowerGovernor`: the deterministic rolling-window watt
+                 estimate behind `VisionEngine(power_budget_w=...)`.
+
+See docs/energy.md.
+"""
+from .governor import PowerGovernor
+from .model import (
+    PJ_PER_BYTE,
+    PJ_PER_MAC,
+    PJ_PER_MAC_DEFAULT,
+    EnergyReport,
+    OpEnergy,
+    analytic_energy_j,
+    edp_score,
+    estimate_energy,
+    op_bytes_moved,
+    op_macs,
+)
+from .power import (
+    BACKEND_WATTS,
+    DEFAULT_RAPL_ROOT,
+    PowerModel,
+    RaplEnergyReader,
+    RaplUnavailable,
+    calibrate_power,
+    default_power_model,
+    measure_power,
+    reset_default_power_model,
+)
+
+__all__ = [
+    "BACKEND_WATTS",
+    "DEFAULT_RAPL_ROOT",
+    "PJ_PER_BYTE",
+    "PJ_PER_MAC",
+    "PJ_PER_MAC_DEFAULT",
+    "EnergyReport",
+    "OpEnergy",
+    "PowerGovernor",
+    "PowerModel",
+    "RaplEnergyReader",
+    "RaplUnavailable",
+    "analytic_energy_j",
+    "calibrate_power",
+    "default_power_model",
+    "edp_score",
+    "estimate_energy",
+    "measure_power",
+    "op_bytes_moved",
+    "op_macs",
+    "reset_default_power_model",
+]

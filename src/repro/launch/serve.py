@@ -103,7 +103,10 @@ def vision_main(args) -> None:
                         tracer=tracer, metrics=metrics, name=m)
         for m in models
     }
-    router = MultiModelEngine(engines)
+    router = MultiModelEngine(engines, power_budget_w=args.power_budget_w)
+    if args.power_budget_w:
+        print(f"[serve-vision] power cap {args.power_budget_w:.1f} W "
+              f"shared across {len(models)} model(s)")
     router.warmup()
     rng = np.random.default_rng(args.seed)
     now = time.perf_counter()
@@ -119,6 +122,12 @@ def vision_main(args) -> None:
         print(f"[serve-vision] {m}: fps={st.fps:.1f} "
               f"p95={st.latency_p95_s*1e3:.1f}ms "
               f"micro_batches={st.micro_batches} replicas={st.replicas}")
+        print(f"[serve-vision] {m}: "
+              f"{st.energy_j_per_image*1e6:.1f} uJ/image "
+              f"({st.power_source}) -> {st.watts:.1f} W, "
+              f"{st.fps_per_watt:.1f} fps/W"
+              + (f", shed={st.n_shed} deferred={st.n_deferred}"
+                 if args.power_budget_w else ""))
     if tracer is not None:
         print(f"[serve-vision] trace -> {tracer.save(args.trace_out)} "
               f"({len(tracer)} events; load in https://ui.perfetto.dev)")
@@ -146,6 +155,11 @@ def main(argv=None):
     ap.add_argument("--tune", action="store_true",
                     help="autotune per-op routes for each vision model "
                          "before serving (saved to --tuned-cache if given)")
+    ap.add_argument("--power-budget-w", type=float, default=None,
+                    help="shared modeled-power cap in watts for vision "
+                         "serving: one rolling-window governor across all "
+                         "models defers/sheds work to stay under the cap "
+                         "(docs/energy.md)")
     ap.add_argument("--tuned-cache", default=None,
                     help="tuning-cache JSON to load (or write, with "
                          "--tune) for vision serving")

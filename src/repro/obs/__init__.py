@@ -1,8 +1,8 @@
 """Observability layer: request-lifecycle tracing + a metrics registry.
 
-Zero-dependency substrate the serving / tuning / training subsystems report
-into (and the ROADMAP's autoscaling replica manager and energy CI gate will
-read from):
+Zero-dependency substrate the serving / streaming / tuning / training
+subsystems report into (the benchmark harness reads the
+``serve_fps_per_watt`` gauge out of it for the CI energy gate):
 
   * `trace`   — span-based `Tracer` with an injectable clock, exported as
                 Chrome trace-event JSON (Perfetto-loadable); `NULL` no-op
@@ -13,6 +13,21 @@ read from):
   * `summary` — `python -m repro.obs summarize` pipeline-profile reports
                 (top-N slowest spans, queue-wait percentiles); `validate`
                 schema-checks exported traces in CI.
+
+Invariants the tests pin:
+
+  * **Off means off** — with `NULL` / `NULL_REGISTRY`, instrumented code
+    performs zero clock reads and zero allocations on the hot path; the
+    obs-on overhead budget (<5% of serving FPS) gates in the benchmark
+    smoke.
+  * **Byte-determinism under fake clocks** — every timestamp comes from
+    the injected clock, so two runs with the same fake clock export
+    byte-identical traces and snapshots (no wall-clock reads anywhere).
+  * Exported traces must pass `python -m repro.obs validate` — the same
+    schema CI gates on.
+
+See docs/serving.md (Observability section) for the metric and span
+naming conventions, and docs/benchmarks.md for what gates.
 """
 from repro.obs.metrics import (
     LATENCY_BUCKETS_S,

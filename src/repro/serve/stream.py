@@ -48,6 +48,18 @@ pipeline uses to bound jit retraces), gathers their per-session buffer
 pytrees onto the batch axis, runs ONE jitted prime/step per group, and
 scatters the buffers back. A tail of one falls back to the
 single-session program, so stragglers never pay padding.
+
+Invariants this module guarantees (and tests assert):
+
+  * **bit-exactness** — every window's logits, primed, stepped, or
+    batch-stepped, equal `cu.run_qnet` on that window bitwise;
+  * **bounded retraces** — jitted program count is bounded by
+    2 + 2 * len(batch_buckets) regardless of fleet size or traffic;
+  * **determinism under fake clocks** — `clock=` injects the only time
+    source; all stats, traces, and the modeled energy/FPS-per-Watt in
+    `stats()` (see `repro.energy`) replay identically under a fake clock.
+
+Guide: docs/streaming.md; energy accounting: docs/energy.md.
 """
 from __future__ import annotations
 
@@ -72,6 +84,8 @@ from repro.core.integer_ops import (
     quantized_op_epilogue,
 )
 from repro.core.qnet import QNet
+from repro.energy import model as EM
+from repro.energy.power import PowerModel, default_power_model
 from repro.kernels.common import same_pad_amount
 from repro.obs import metrics as OM
 from repro.obs import trace as OT
@@ -153,6 +167,10 @@ class StreamPlan:
     macs_full: int
     macs_step: int
     buffer_bytes: int  # uint8 ring buffers per session
+    # activation traffic per window (bytes written + raw input read; weights
+    # are device-resident, not streamed) — the energy model's memory term
+    bytes_full: int = 0
+    bytes_step: int = 0
 
     @property
     def reuse_fraction(self) -> float:
@@ -230,6 +248,12 @@ def plan_stream(qnet: QNet, hop: int) -> StreamPlan:
     pool_s = pool_z = None
     pooled = False
     frames_full = frames_step = macs_full = macs_step = 0
+    # activation bytes per window: raw input frames read + every op's
+    # output frames written (1 byte/elem — uint8 ring buffers). Mirrors
+    # the frames accounting; the step column only pays the recomputed
+    # halo/hop frames, which is what makes streaming's J/window land.
+    bytes_full = window * spec.input_ch
+    bytes_step = hop * spec.input_ch
     # activations never exceed 8 bits (act_bits <= 8), so ring buffers are
     # stored uint8 — 4x less shuffle traffic and session memory than the
     # int32 the compute ops use; the up-cast happens on the (small) edge
@@ -241,6 +265,8 @@ def plan_stream(qnet: QNet, hop: int) -> StreamPlan:
             for op in block.ops:
                 macs_full += op.macs(1, 1)
                 macs_step += op.macs(1, 1)
+                bytes_full += op.out_ch
+                bytes_step += op.out_ch
             continue
         if block.se is not None:
             raise StreamError(
@@ -269,6 +295,9 @@ def plan_stream(qnet: QNet, hop: int) -> StreamPlan:
             macs_step += (os_.merged.j0 + os_.rout if os_.merged
                           else os_.lout + os_.rout) * per_frame
             buffer_bytes += os_.tout * op.out_ch
+            bytes_full += os_.tout * op.out_ch
+            bytes_step += (os_.merged.j0 + os_.rout if os_.merged
+                           else os_.lout + os_.rout) * op.out_ch
             qop = qnet.ops[op.name]
             cur_s, cur_z = qop.out_scale, qop.out_zp
         res = None
@@ -277,6 +306,8 @@ def plan_stream(qnet: QNet, hop: int) -> StreamPlan:
             res = OpStream(block.name + "/residual", last.tout, last.tout,
                            last.hout, last.lout, last.rout, None, None)
             buffer_bytes += last.tout * block.out_ch
+            bytes_full += last.tout * block.out_ch
+            bytes_step += (last.lout + last.rout) * block.out_ch
             cur_s, cur_z = qnet.res_q[block.name]
         block_streams.append(BlockStream(block, tuple(ops), res, in_s, in_z))
         if block.avgpool:
@@ -290,7 +321,8 @@ def plan_stream(qnet: QNet, hop: int) -> StreamPlan:
         window=window, hop=hop, blocks=tuple(block_streams),
         post_blocks=tuple(post), pool_s=pool_s, pool_z=pool_z,
         frames_full=frames_full, frames_step=frames_step,
-        macs_full=macs_full, macs_step=macs_step, buffer_bytes=buffer_bytes)
+        macs_full=macs_full, macs_step=macs_step, buffer_bytes=buffer_bytes,
+        bytes_full=bytes_full, bytes_step=bytes_step)
 
 
 # ---------------------------------------------------------------------------
@@ -581,6 +613,7 @@ class StreamEngine:
         tracer: Optional[OT.Tracer] = None,
         metrics: Optional[OM.MetricsRegistry] = None,
         name: str = "default",
+        power_model: Optional[PowerModel] = None,
     ):
         if max_sessions < 1:
             raise ValueError(f"max_sessions {max_sessions} < 1")
@@ -602,6 +635,10 @@ class StreamEngine:
         self._clock = time.perf_counter if clock is None else clock
         self.tracer = tracer if tracer is not None else OT.NULL
         self._reg = metrics if metrics is not None else OM.NULL_REGISTRY
+        # device power curve for the modeled J/window and FPS/Watt in
+        # stats() (see docs/energy.md); injectable for determinism
+        self.power = (power_model if power_model is not None
+                      else default_power_model())
         in_s, in_z = cu.input_qparams(self.qnet)
         self._in_s, self._in_z = in_s, in_z
 
@@ -668,6 +705,14 @@ class StreamEngine:
         self._m_pad = self._reg.counter(
             "stream_pad_rows_total",
             "bucket-padding waste rows in batched prime/step calls",
+            labels=lbl)
+        self._m_fpw = self._reg.gauge(
+            "stream_fps_per_watt",
+            "modeled windows per second per watt (calibrated energy model)",
+            labels=lbl)
+        self._m_watts = self._reg.gauge(
+            "stream_watts",
+            "modeled average device watts at the achieved window rate",
             labels=lbl)
         self.tracer.name_track(OT.TID_ENGINE, f"stream:{self.name}")
 
@@ -1006,8 +1051,33 @@ class StreamEngine:
 
     # -- reporting --------------------------------------------------------
 
+    def energy_j_per_window(self) -> float:
+        """Modeled energy of one steady-state streaming step.
+
+        Compute term: the measured average step wall time priced at the
+        device's busy watts (falling back to analytic pJ/MAC over the
+        plan's per-step MACs before any step has run); memory term: the
+        plan's per-step activation traffic at DRAM pJ/byte. The same
+        accounting as `repro.energy.estimate_energy`, specialized to the
+        ring-buffer step geometry."""
+        mem_j = self.plan.bytes_step * EM.PJ_PER_BYTE * 1e-12
+        steps = self._windows - self._primes
+        if steps and self._step_s > 0:
+            return self.power.busy_w * (self._step_s / steps) + mem_j
+        bits = max((op.bits for b in self.qnet.spec.blocks for op in b.ops),
+                   default=8)
+        pj = EM.PJ_PER_MAC.get(bits, EM.PJ_PER_MAC_DEFAULT)
+        return self.plan.macs_step * pj * 1e-12 + mem_j
+
     def stats(self) -> Dict[str, float]:
         steps = self._windows - self._primes
+        wps = (steps / self._step_s
+               if steps and self._step_s > 0 else 0.0)
+        energy_j = self.energy_j_per_window()
+        watts = self.power.idle_w + energy_j * wps
+        fps_per_watt = wps / watts if watts > 0 else 0.0
+        self._m_fpw.set(fps_per_watt)
+        self._m_watts.set(watts)
         return {
             "sessions_active": float(len(self._sessions)),
             "sessions_evicted": float(self._evicted),
@@ -1040,8 +1110,15 @@ class StreamEngine:
             "session_table_bytes": float(self.session_table_bytes()),
             "prime_s": self._prime_s,
             "step_s": self._step_s,
-            "fps_streamed": (steps / self._step_s
-                             if steps and self._step_s > 0 else 0.0),
+            "fps_streamed": wps,
+            # calibrated energy model (docs/energy.md): per-step modeled
+            # joules, average modeled draw at the achieved window rate,
+            # and the paper's headline windows-per-second-per-watt
+            "bytes_per_window_full": float(self.plan.bytes_full),
+            "bytes_per_window_step": float(self.plan.bytes_step),
+            "energy_j_per_window_step": energy_j,
+            "watts": watts,
+            "fps_per_watt": fps_per_watt,
         }
 
 

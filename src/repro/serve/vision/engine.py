@@ -25,9 +25,13 @@ Two scaling axes beyond the single-device engine:
     single-model batch former uses.
 
 `EngineStats` reports the paper's Table 6 serving quantities: FPS, latency
-percentiles, per-stage invocation counts, and an energy proxy (J/image from
-the MAC count at an assumed pJ/MAC for the integer datapath) giving
-FPS-per-Watt-proxy — on real silicon replace the proxy with measured power.
+percentiles, per-stage invocation counts, and modeled energy from the
+calibrated `repro.energy` model (autotuner route timings x analytic
+bytes-moved x a device power curve) — J/image, average watts, and the
+paper's headline FPS/Watt. With `power_budget_w=` the batch former
+consults a `PowerGovernor` before every dispatch and defers (or sheds
+lowest-SLO) work so the modeled rolling-window watt estimate never
+crosses the budget. See docs/energy.md and docs/serving.md.
 """
 from __future__ import annotations
 
@@ -45,35 +49,11 @@ from repro.core import compiler as CC
 from repro.core import graph as G
 from repro.core.qnet import QNet
 from repro.dist.sharding import batch_sharding
+from repro.energy import EnergyReport, PowerGovernor, PowerModel, estimate_energy
 from repro.obs import metrics as OM
 from repro.obs import trace as OT
 from repro.serve.vision.pipeline import PipelinedExecutor
 from repro.serve.vision.stages import CompiledStage, compile_stages
-
-# Energy proxy for the integer datapath, pJ per MAC by operand bit-width.
-# Ballpark 45nm-class numbers (Horowitz, ISSCC'14: int8 MAC ~= 0.2pJ add +
-# mul); scaled linearly for int4. A proxy for FPS/W ranking only.
-_PJ_PER_MAC = {8: 0.23, 4: 0.12, 3: 0.10, 6: 0.18, 5: 0.15}
-
-
-def _energy_j_per_image(net: G.NetSpec) -> float:
-    """MAC-weighted energy proxy: each op's MACs priced at its bit-width
-    (mirrors `NetSpec.count_macs`' shape walk)."""
-    h = net.input_hw
-    w_of = (lambda h_out: 1) if net.spatial_rank == 1 else (lambda h_out: h_out)
-    pj = 0.0
-    for block in net.blocks:
-        for op in block.ops:
-            if op.kind == G.DENSE:
-                pj += op.macs(1, 1) * _PJ_PER_MAC.get(op.bits, 0.2)
-                continue
-            h_out = -(-h // op.stride)
-            pj += op.macs(h_out, w_of(h_out)) * _PJ_PER_MAC.get(op.bits, 0.2)
-            h = h_out
-        if block.se is not None:
-            pj += (block.se.squeeze.macs(1, 1) + block.se.excite.macs(1, 1)
-                   ) * _PJ_PER_MAC.get(block.se.bits, 0.2)
-    return pj * 1e-12
 
 
 def _percentile(sorted_lat: Sequence[float], p: float) -> float:
@@ -97,12 +77,16 @@ class VisionRequest:
     image: np.ndarray  # [H, W, C] float, in the calibrated input range
     deadline_s: Optional[float] = None  # absolute time.perf_counter() time
     arrival_s: float = 0.0
+    # SLO class: higher is more important. Under a power budget the
+    # governor may shed requests at or below the engine's shed class;
+    # work above it is only ever deferred, never dropped.
+    slo: int = 0
 
 
 @dataclasses.dataclass
 class RequestResult:
     rid: int
-    status: str  # "ok" | "expired"
+    status: str  # "ok" | "expired" | "shed"
     logits: Optional[np.ndarray]  # [num_classes] float, None unless ok
     latency_s: float
 
@@ -120,13 +104,23 @@ class EngineStats:
     stage_invocations: Dict[str, int]
     harvest_wait_s: float
     macs_per_image: int
-    energy_j_per_image_proxy: float
-    fps_per_watt_proxy: float
+    # calibrated energy model (repro.energy): J/image from route timings x
+    # bytes-moved x the device power curve; watts = idle + dispatched J /
+    # wall; fps_per_watt is the paper's headline metric
+    energy_j_per_image: float
+    watts: float
+    fps_per_watt: float
+    power_source: str
+    energy_tuned_fraction: float  # fraction of ops priced from measured routes
     replicas: int = 1  # mesh 'data' extent the engine shards over
     latency_p99_s: float = float("nan")
     # traces at non-bucketed shapes per stage (should stay all-zero; see
     # CompiledStage.allowed_batches — a nonzero count is a retrace leak)
     stage_retraces: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # power-capped scheduling outcomes (zero unless power_budget_w is set)
+    n_shed: int = 0
+    n_deferred: int = 0
+    power_budget_w: Optional[float] = None
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -143,7 +137,16 @@ class VisionEngine:
     deadlines, latencies, and wall time all read it; tests pass a fake.
     `tuned`: a `repro.tune.TunedPlan` — measured per-op route selection
     replaces the stage compiler's hard-coded kernel heuristics (ops with
-    no cache entry keep the defaults; see `compile_stages`).
+    no cache entry keep the defaults; see `compile_stages`). The same
+    cache feeds the energy model's per-op timings.
+    `power_model` / `energy`: override the device power curve or the whole
+    `EnergyReport` (defaults: RAPL-calibrated or per-backend constants,
+    and `estimate_energy` over this plan + cache).
+    `power_budget_w`: power-capped mode — before each dispatch the batch
+    former asks a `PowerGovernor` whether the modeled rolling-window
+    (`power_window_s`) watt estimate would cross the budget; if so,
+    requests with `slo <= shed_slo` are shed (terminal "shed" status) and
+    the rest are deferred back to the queue for a later `run()`.
     """
 
     @classmethod
@@ -178,6 +181,11 @@ class VisionEngine:
         tracer: Optional[OT.Tracer] = None,
         metrics: Optional[OM.MetricsRegistry] = None,
         name: str = "default",
+        power_model: Optional[PowerModel] = None,
+        energy: Optional[EnergyReport] = None,
+        power_budget_w: Optional[float] = None,
+        power_window_s: float = 1.0,
+        shed_slo: int = 0,
     ):
         if not buckets or any(b <= 0 for b in buckets):
             raise ValueError(f"bad buckets {buckets}")
@@ -210,12 +218,26 @@ class VisionEngine:
                                       tracer=tracer, metrics=metrics)
         net = qnet.spec
         self.input_shape = net.input_shape()  # (H, W, C) or (T, C)
+        # calibrated energy model: tuned route timings (when a cache is in
+        # hand) x analytic bytes x the device power curve
+        self.energy = energy if energy is not None else estimate_energy(
+            qnet, self.plan, tuned=tuned, power=power_model)
+        self.power_budget_w = power_budget_w
+        self.shed_slo = shed_slo
+        self._governor: Optional[PowerGovernor] = None
+        if power_budget_w is not None:
+            self._governor = PowerGovernor(
+                power_budget_w, window_s=power_window_s,
+                idle_w=self.energy.power.idle_w)
         self._queue: List[VisionRequest] = []
         self._rid = itertools.count()
         self._results: Dict[int, RequestResult] = {}
         # cumulative counters (across run() calls)
         self._n_ok = 0
         self._n_expired = 0
+        self._n_shed = 0
+        self._n_deferred = 0
+        self._dispatched_j = 0.0  # modeled energy of every dispatched row
         self._latencies: List[float] = []
         self._micro_batches = 0
         self._rows = 0
@@ -257,8 +279,19 @@ class VisionEngine:
             "serve_fps", "completed images per second of drain wall time",
             labels=lbl)
         self._m_fpw = reg.gauge(
-            "serve_fps_per_watt_proxy",
-            "images per joule under the pJ/MAC energy proxy", labels=lbl)
+            "serve_fps_per_watt",
+            "modeled FPS per watt (calibrated energy model, incl. idle draw)",
+            labels=lbl)
+        self._m_watts = reg.gauge(
+            "serve_watts",
+            "modeled average device watts over serving wall time", labels=lbl)
+        self._m_shed = reg.counter(
+            "serve_requests_shed_total",
+            "low-SLO requests shed by the power governor", labels=lbl)
+        self._m_deferred = reg.counter(
+            "serve_requests_deferred_total",
+            "requests deferred to a later run() by the power governor",
+            labels=lbl)
         # retrace-leak detection: every stage knows the legal batch shapes
         # (the padded buckets); a trace outside them is a leak past the
         # batch former — counted, warned, and surfaced in stats()
@@ -291,11 +324,13 @@ class VisionEngine:
     # ------------------------------------------------------------------
 
     def submit(self, image: np.ndarray, *, deadline_s: Optional[float] = None,
-               now: Optional[float] = None) -> int:
+               now: Optional[float] = None, slo: int = 0) -> int:
         """Admit one image; returns its request id.
 
-        Raises AdmissionError when the image does not match the compiled
-        input signature or the queue is full."""
+        `slo` is the request's service class (higher = more important);
+        under a power budget only classes at or below `shed_slo` may be
+        shed. Raises AdmissionError when the image does not match the
+        compiled input signature or the queue is full."""
         image = np.asarray(image)
         if image.shape != self.input_shape:
             raise AdmissionError(
@@ -310,7 +345,8 @@ class VisionEngine:
         rid = next(self._rid)
         arrival = self._clock() if now is None else now
         self._queue.append(VisionRequest(
-            rid=rid, image=image, deadline_s=deadline_s, arrival_s=arrival))
+            rid=rid, image=image, deadline_s=deadline_s, arrival_s=arrival,
+            slo=slo))
         self._m_submitted.inc()
         self._m_qdepth.set(len(self._queue))
         if self.tracer:
@@ -380,6 +416,18 @@ class VisionEngine:
             if not live:
                 continue
             bucket = self._bucket_for(len(live))
+            if self._governor is not None:
+                # power-capped dispatch: every padded row costs modeled
+                # J/image on the device; if this batch would push the
+                # rolling-window watt estimate over the budget, shed the
+                # sheddable SLO classes and defer everything else — the
+                # budget is never crossed at any dispatch point.
+                batch_j = bucket * self.energy.j_per_image
+                if self._governor.would_exceed(batch_j, now):
+                    self._shed_or_defer(live, pending[head:], now)
+                    return
+                self._governor.record(batch_j, now)
+            self._dispatched_j += bucket * self.energy.j_per_image
             x = np.zeros((bucket, *self.input_shape), np.float32)
             for i, req in enumerate(live):
                 x[i] = req.image
@@ -409,6 +457,39 @@ class VisionEngine:
                         "queue_wait", req.rid, now,
                         cat=f"request:{self.name}")
             yield live, self._place(x)
+
+    def _shed_or_defer(self, live: List[VisionRequest],
+                       rest: List[VisionRequest], now: float) -> None:
+        """Over-budget batch: shed classes <= shed_slo (terminal), defer
+        the remainder back to the queue for a later run()."""
+        deferred: List[VisionRequest] = []
+        for req in live:
+            if req.slo <= self.shed_slo:
+                self._results[req.rid] = RequestResult(
+                    req.rid, "shed", None, now - req.arrival_s)
+                self._n_shed += 1
+                self._m_shed.inc()
+                if self.tracer:
+                    self.tracer.async_end(
+                        "request", req.rid, now, cat=f"request:{self.name}",
+                        args={"status": "shed"})
+            else:
+                deferred.append(req)
+        deferred.extend(rest)
+        if deferred:
+            # deferral is not terminal: requests keep their arrival and
+            # deadline, and re-enter EDF ordering on the next drain
+            self._queue.extend(deferred)
+            self._n_deferred += len(deferred)
+            self._m_deferred.inc(len(deferred))
+            self._m_qdepth.set(len(self._queue))
+        if self.tracer:
+            self.tracer.instant(
+                "power_cap", now, cat="governor", tid=OT.TID_SCHED,
+                args={"model": self.name,
+                      "watts": self._governor.watts(now),
+                      "budget_w": self.power_budget_w,
+                      "shed": self._n_shed, "deferred": len(deferred)})
 
     # ------------------------------------------------------------------
     # serving
@@ -462,15 +543,17 @@ class VisionEngine:
     def stats(self) -> EngineStats:
         lat = sorted(self._latencies)
         macs = self.qnet.spec.count_macs()
-        energy_j = _energy_j_per_image(self.qnet.spec)
+        energy_j = self.energy.j_per_image
         fps = self._n_ok / self._wall_s if self._wall_s > 0 else 0.0
-        # FPS/W == (img/s)/(J/s) == images per joule: under an energy-only
-        # proxy it is 1/J-per-image by construction, independent of the
-        # achieved rate (real silicon adds a static-power term that would
-        # make it rate-dependent).
+        # modeled draw over the serving window: static idle floor plus the
+        # dispatched (bucket-padded) rows' modeled joules amortized over
+        # wall time — rate-dependent, exactly like measured board power
+        watts = self.energy.power.idle_w + (
+            self._dispatched_j / self._wall_s if self._wall_s > 0 else 0.0)
+        fps_per_watt = fps / watts if watts > 0 else 0.0
         self._m_fps.set(fps)
-        if energy_j > 0:
-            self._m_fpw.set(1.0 / energy_j)
+        self._m_fpw.set(fps_per_watt)
+        self._m_watts.set(watts)
         return EngineStats(
             n_ok=self._n_ok,
             n_expired=self._n_expired,
@@ -484,11 +567,17 @@ class VisionEngine:
                 s.spec.cu: s.invocations for s in self.stages},
             harvest_wait_s=self.pipe.harvest_wait_s,
             macs_per_image=macs,
-            energy_j_per_image_proxy=energy_j,
-            fps_per_watt_proxy=(1.0 / energy_j) if energy_j > 0 else 0.0,
+            energy_j_per_image=energy_j,
+            watts=watts,
+            fps_per_watt=fps_per_watt,
+            power_source=self.energy.power.source,
+            energy_tuned_fraction=self.energy.tuned_fraction,
             replicas=self.replicas,
             latency_p99_s=_percentile(lat, 0.99),
             stage_retraces={s.spec.cu: s.retraces for s in self.stages},
+            n_shed=self._n_shed,
+            n_deferred=self._n_deferred,
+            power_budget_w=self.power_budget_w,
         )
 
 
@@ -511,10 +600,18 @@ class MultiModelEngine:
     to every engine (wall time, latencies, and deadline expiry must never
     mix clocks); with `clock=None` the router adopts the engines' shared
     clock and refuses construction if they disagree.
+
+    `power_budget_w` installs ONE shared `PowerGovernor` across every
+    engine: the rolling-window watt estimate sums all models' dispatches,
+    so the fleet as a whole stays under the budget (an engine that already
+    has its own governor is refused — two books over one device would
+    both be wrong).
     """
 
     def __init__(self, engines: Dict[str, VisionEngine],
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 *, power_budget_w: Optional[float] = None,
+                 power_window_s: float = 1.0):
         if not engines:
             raise ValueError("need at least one model engine")
         self.engines = dict(engines)
@@ -541,6 +638,21 @@ class MultiModelEngine:
             for eng in self.engines.values():
                 eng._clock = clock
                 eng.pipe._clock = clock
+        self.governor: Optional[PowerGovernor] = None
+        if power_budget_w is not None:
+            owned = sorted(m for m, e in self.engines.items()
+                           if e._governor is not None)
+            if owned:
+                raise ValueError(
+                    f"engines {owned} already run their own power governor "
+                    f"— a fleet budget needs one shared book; construct "
+                    f"them without power_budget_w")
+            idle = max(e.energy.power.idle_w for e in self.engines.values())
+            self.governor = PowerGovernor(
+                power_budget_w, window_s=power_window_s, idle_w=idle)
+            for eng in self.engines.values():
+                eng._governor = self.governor
+                eng.power_budget_w = power_budget_w
         self.dispatch_log: List[Tuple[str, int]] = []
         # router dispatch decisions, counted into each engine's registry
         # (engines sharing a registry/tracer yield one fleet-wide view)
@@ -555,13 +667,15 @@ class MultiModelEngine:
 
     def submit(self, model: str, image: np.ndarray, *,
                deadline_s: Optional[float] = None,
-               now: Optional[float] = None) -> Tuple[str, int]:
+               now: Optional[float] = None,
+               slo: int = 0) -> Tuple[str, int]:
         """Admit one image for `model`; returns the (model, rid) handle."""
         eng = self.engines.get(model)
         if eng is None:
             raise AdmissionError(
                 f"unknown model {model!r}; serving {sorted(self.engines)}")
-        return model, eng.submit(image, deadline_s=deadline_s, now=now)
+        return model, eng.submit(image, deadline_s=deadline_s, now=now,
+                                 slo=slo)
 
     def pending(self) -> Dict[str, int]:
         return {m: e.pending() for m, e in self.engines.items()}

@@ -13,6 +13,11 @@
     PYTHONPATH=src python -m repro.tune --models mobilenet_v2 --hw 48 \
         --bits 4 --batch 8 --out experiments/tuned/custom.json
 
+    # energy-delay-product objective (docs/energy.md): same nets, routes
+    # ranked by EDP instead of latency; files gain an `_edp` suffix so
+    # both cache families live side by side
+    PYTHONPATH=src python -m repro.tune --golden --objective edp
+
 Caches are backend-keyed (a cache tuned on CPU resolves nothing on TPU),
 so the filenames carry the backend suffix.
 """
@@ -26,6 +31,12 @@ import sys
 import jax
 
 TUNED_DIR = os.path.join("experiments", "tuned")
+
+
+def _suffix(args) -> str:
+    """Cache filename suffix: latency caches keep their historic names,
+    EDP caches gain `_edp` so both families coexist."""
+    return "" if args.objective == "latency" else f"_{args.objective}"
 
 
 def _build_qnet(model: str, hw: int, bits: int, num_classes: int):
@@ -49,6 +60,7 @@ def tune_golden(args) -> None:
     from tests.regen_golden import CASES, build_net, fixture_paths
 
     backend = jax.default_backend()
+    suffix = _suffix(args)
     wanted = set(args.models.split(",")) if args.models else None
     for model, bits in CASES:
         if wanted and model not in wanted:
@@ -56,8 +68,10 @@ def tune_golden(args) -> None:
         qnet_path, _ = fixture_paths(model, bits)
         qnet = Q.load_qnet(qnet_path, build_net(model, bits))
         plan = tune_qnet(qnet, batch=args.batch, repeats=args.repeats,
-                         seed=args.seed, verbose=args.verbose)
-        out = os.path.join(TUNED_DIR, f"{model}_act{bits}_{backend}.json")
+                         seed=args.seed, verbose=args.verbose,
+                         objective=args.objective)
+        out = os.path.join(
+            TUNED_DIR, f"{model}_act{bits}_{backend}{suffix}.json")
         save_tuned(plan, out)
         print(f"[tune] {model} act{bits}: {len(plan)} entries -> {out}")
 
@@ -71,11 +85,12 @@ def tune_bench(args) -> None:
     for hw in (48, 32):  # full benchmark + the CI smoke geometry
         qnet = _build_qnet("mobilenet_v2", hw, 4, 1000)
         plans.append(tune_qnet(qnet, batch=args.batch, repeats=args.repeats,
-                               seed=args.seed, verbose=args.verbose))
+                               seed=args.seed, verbose=args.verbose,
+                               objective=args.objective))
         print(f"[tune] mobilenet_v2 hw{hw}: {len(plans[-1])} entries",
               file=sys.stderr)
     merged = functools.reduce(lambda a, b: a.merge(b), plans)
-    out = os.path.join(TUNED_DIR, f"bench_{backend}.json")
+    out = os.path.join(TUNED_DIR, f"bench_{backend}{_suffix(args)}.json")
     save_tuned(merged, out)
     print(f"[tune] bench cache: {len(merged)} entries -> {out}")
 
@@ -89,10 +104,11 @@ def tune_custom(args) -> None:
         qnet = _build_qnet(model.strip(), args.hw, args.bits,
                            args.num_classes)
         plans.append(tune_qnet(qnet, batch=args.batch, repeats=args.repeats,
-                               seed=args.seed, verbose=args.verbose))
+                               seed=args.seed, verbose=args.verbose,
+                               objective=args.objective))
     merged = functools.reduce(lambda a, b: a.merge(b), plans)
     out = args.out or os.path.join(
-        TUNED_DIR, f"custom_{backend}.json")
+        TUNED_DIR, f"custom_{backend}{_suffix(args)}.json")
     save_tuned(merged, out)
     print(f"[tune] {args.models}: {len(merged)} entries -> {out}")
 
@@ -111,6 +127,10 @@ def main(argv=None) -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--objective", choices=("latency", "edp"),
+                    default="latency",
+                    help="route ranking metric: measured latency (default) "
+                         "or energy-delay product (docs/energy.md)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)

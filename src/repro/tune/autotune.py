@@ -21,6 +21,25 @@ against the composite of the per-op winners. The result is a `TunedPlan`
 the whole tuned network is verified bit-exact against `cu.run_qnet` before
 the plan is returned — a tuner bug can fail loudly but never emit a plan
 that changes a logit.
+
+`objective="edp"` swaps the ranking metric from latency to energy-delay
+product, scored by the shared `repro.energy.edp_score` (busy-power x time
+plus DRAM bytes, times delay). Per-op candidates share one byte count, so
+EDP ranking there degenerates to latency ranking; the term that can flip
+a winner is block-level traffic — the fused IRB keeps intermediates
+on-chip while the per-op composite spills them — which is exactly the
+paper's co-design argument for fusion. Everything else is objective-
+independent and unchanged:
+
+  * **bit-exactness gating** — a drifting candidate is disqualified
+    before it is ever timed, under either objective;
+  * **hysteresis** — the `margin` fraction applies to the EDP score the
+    same way it applies to latency;
+  * **cache format** — entries still record measured `us`; the objective
+    is recorded in `TunedPlan.meta["objective"]`, and EDP caches are
+    committed alongside latency ones (`*_edp.json`).
+
+Guide: docs/tuning.md; energy model: docs/energy.md.
 """
 from __future__ import annotations
 
@@ -37,6 +56,8 @@ from repro.core import compiler as CC
 from repro.core import cu
 from repro.core import graph as G
 from repro.core.qnet import QNet
+from repro.energy import model as EM
+from repro.energy.power import PowerModel, default_power_model
 from repro.kernels import ops as K
 from repro.obs import trace as OT
 from repro.tune.cache import (
@@ -149,8 +170,14 @@ def default_route(pop: cu.PreparedQOp, backend: str, rank: int = 2) -> str:
 def _select(cands: Sequence[Candidate], x: jnp.ndarray, ref: np.ndarray,
             measure, default: Optional[str] = None,
             margin: float = 0.1, tracer: OT.Tracer = OT.NULL,
-            span_key: str = "") -> Optional[RouteChoice]:
-    """Verify-then-time every candidate; return the fastest exact one.
+            span_key: str = "",
+            scorer: Optional[Callable[[float, Candidate], float]] = None,
+            ) -> Optional[RouteChoice]:
+    """Verify-then-time every candidate; return the best exact one.
+
+    `scorer(seconds, candidate) -> score` replaces raw time as the ranking
+    metric (the EDP objective); `None` ranks by latency. The exactness
+    gate, tie-breaking, and `margin` hysteresis all operate on the score.
 
     Exactness is the hard gate: a candidate whose output differs from the
     reference in any element (or that fails to run) is disqualified before
@@ -195,13 +222,15 @@ def _select(cands: Sequence[Candidate], x: jnp.ndarray, ref: np.ndarray,
                       "disqualified": measured is None})
     if not timed:
         return None
-    timed.sort(key=lambda tc: (tc[0], tc[1].label))
-    us_ref = next((t * 1e6 for t, c in timed if c.route == INT_REF), None)
-    best_t, best = timed[0]
+    score_of = scorer if scorer is not None else (lambda t, c: t)
+    scored = [(score_of(t, c), t, c) for t, c in timed]
+    scored.sort(key=lambda stc: (stc[0], stc[2].label))
+    us_ref = next((t * 1e6 for _, t, c in scored if c.route == INT_REF), None)
+    best_s, best_t, best = scored[0]
     if default is not None and best.route != default:
-        default_timed = [(t, c) for t, c in timed if c.route == default]
-        if default_timed and best_t > default_timed[0][0] * (1.0 - margin):
-            best_t, best = default_timed[0]
+        default_scored = [stc for stc in scored if stc[2].route == default]
+        if default_scored and best_s > default_scored[0][0] * (1.0 - margin):
+            best_s, best_t, best = default_scored[0]
     return RouteChoice.make(
         best.route, best.params, us=best_t * 1e6, us_ref=us_ref,
         n_candidates=len(cands), disqualified=tuple(disqualified))
@@ -224,6 +253,8 @@ def tune_qnet(
     verify_end_to_end: bool = True,
     verbose: bool = False,
     tracer: Optional[OT.Tracer] = None,
+    objective: str = "latency",
+    power: Optional[PowerModel] = None,
 ) -> TunedPlan:
     """Tune every op (and fusable IRB block) of `qnet`; return a TunedPlan.
 
@@ -233,6 +264,11 @@ def tune_qnet(
     -> [Candidate]` are injectable (deterministic fakes in tests).
     `margin` is the selection hysteresis: a challenger route replaces the
     heuristic default only by beating it by more than this fraction.
+    `objective` ranks candidates by `"latency"` (measured seconds) or
+    `"edp"` (energy-delay product via `repro.energy.edp_score`, using
+    `power` — default: the device's calibrated/fallback curve); the
+    bit-exactness gate and the hysteresis semantics are identical under
+    both.
     `verify_end_to_end` re-runs the whole net through the resolved plan and
     raises on any logit drift — the tuner never returns a plan it has not
     proven bit-exact.
@@ -243,6 +279,11 @@ def tune_qnet(
     if isinstance(qnet, cu.PreparedQNet):
         qnet = qnet.qnet
     backend = backend or jax.default_backend()
+    if objective not in ("latency", "edp"):
+        raise ValueError(f"unknown objective {objective!r} "
+                         f"(want 'latency' or 'edp')")
+    if objective == "edp" and power is None:
+        power = default_power_model(backend)
     tracer = tracer if tracer is not None else OT.NULL
     if tracer:
         tracer.name_track(OT.TID_TUNE, "autotune")
@@ -261,6 +302,40 @@ def tune_qnet(
 
     spec = qnet.spec
     rank = spec.spatial_rank
+
+    def op_scorer(op: G.OpSpec, in_hw: Optional[int]):
+        """EDP scorer for one op's candidates (None under latency). Every
+        candidate of one op moves the same bytes, so here EDP is monotone
+        in time — the objective's real leverage is block-level."""
+        if objective != "edp":
+            return None
+        nbytes = EM.op_bytes_moved(op, in_hw, rank)
+        return lambda t, c: EM.edp_score(t, nbytes, power)
+
+    def block_scorer(block: G.BlockSpec, in_hw: Optional[int]):
+        """EDP scorer for the per_op-vs-fused block race: the per-op
+        composite pays DDR traffic for every intermediate activation,
+        the fused kernel only the block's input/output + weights — the
+        byte gap that lets EDP prefer a slightly slower fused route."""
+        if objective != "edp":
+            return None
+        per_op_b, hw = 0, in_hw
+        for op in block.ops:
+            per_op_b += EM.op_bytes_moved(op, hw, rank)
+            if hw is not None and op.kind != G.DENSE:
+                hw = -(-hw // op.stride)
+        w_bytes = sum(op.n_params(with_bias=False) + 4 * op.out_ch
+                      for op in block.ops)
+        first, last = block.ops[0], block.ops[-1]
+        if in_hw is None or hw is None:
+            n_in, n_out = first.in_ch, last.out_ch
+        else:
+            n_in = (in_hw * in_hw if rank == 2 else in_hw) * first.in_ch
+            n_out = (hw * hw if rank == 2 else hw) * last.out_ch
+        by_route = {PER_OP: per_op_b, FUSED_IRB: n_in + n_out + w_bytes}
+        return lambda t, c: EM.edp_score(
+            t, by_route.get(c.route, per_op_b), power)
+
     x = jax.random.uniform(
         jax.random.PRNGKey(seed),
         (batch, *spec.input_shape()),
@@ -292,7 +367,9 @@ def tune_qnet(
                                      default=default_route(pop, backend,
                                                            rank=rank),
                                      margin=margin, tracer=tracer,
-                                     span_key=key)
+                                     span_key=key,
+                                     scorer=op_scorer(
+                                         op, in_hw_by_op[op.name]))
                     if choice is not None and tracer:
                         tracer.instant(
                             "tune_winner", tracer.now(), cat="tune",
@@ -355,7 +432,8 @@ def tune_qnet(
                  Candidate(FUSED_IRB, {}, fused_fn)],
                 x_block, ref_block, measure,
                 default=FUSED_IRB if backend == "tpu" else PER_OP,
-                margin=margin, tracer=tracer, span_key=bkey)
+                margin=margin, tracer=tracer, span_key=bkey,
+                scorer=block_scorer(block, block_in_hw[block.name]))
             if choice is not None:
                 entries[bkey] = choice
                 if tracer:
@@ -377,7 +455,8 @@ def tune_qnet(
         entries=entries,
         meta={"jax": jax.__version__, "input_hw": spec.input_hw,
               "input_bits": input_bits, "seed": seed,
-              "fixed_point": False},
+              "fixed_point": False, "objective": objective,
+              **({"power": power.as_dict()} if objective == "edp" else {})},
     )
 
     if verify_end_to_end:

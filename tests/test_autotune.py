@@ -268,19 +268,92 @@ def test_plan_carries_tuned_to_stage_compiler(tiny_qnet):
 
 
 # ---------------------------------------------------------------------------
+# EDP objective: same gate, different ranking
+# ---------------------------------------------------------------------------
+
+
+def test_edp_flips_traffic_dominated_block_latency_does_not(tiny_qnet):
+    """The whole point of objective='edp': a fused IRB that times slightly
+    SLOWER still wins on EDP because per_op spills its intermediates to
+    DRAM (~3.6x the traffic on this block). Per-op candidates share bytes,
+    so everywhere else EDP degenerates to latency selection."""
+    from repro.energy import PowerModel
+
+    # fused 10% slower than per_op: latency selection (with its 10%
+    # hysteresis) must keep per_op; EDP must flip to fused on traffic
+    times = {"per_op": 1.0, "fused_irb": 1.1,
+             "int_ref": 1.0, "int_f32": 0.5, "dw_shifts": 0.5}
+    power = PowerModel(busy_w=1e-9, source="test")  # traffic-dominated
+    lat = tune_qnet(tiny_qnet, batch=2, measure=_fake_measure(times))
+    edp = tune_qnet(tiny_qnet, batch=2, measure=_fake_measure(times),
+                    objective="edp", power=power)
+    lat_irb = {v.route for k, v in lat.entries.items()
+               if k.startswith("irb:")}
+    edp_irb = {v.route for k, v in edp.entries.items()
+               if k.startswith("irb:")}
+    assert lat_irb == {"per_op"}
+    assert edp_irb == {"fused_irb"}
+    # per-op winners are identical under both objectives (equal bytes)
+    lat_ops = {k: v.route for k, v in lat.entries.items()
+               if not k.startswith("irb:")}
+    edp_ops = {k: v.route for k, v in edp.entries.items()
+               if not k.startswith("irb:")}
+    assert lat_ops == edp_ops
+    # provenance: the cache says how it was ranked, and RouteChoice.us
+    # stays TIME-valued under both (the energy model divides it by batch)
+    assert lat.meta["objective"] == "latency"
+    assert edp.meta["objective"] == "edp"
+    assert edp.meta["power"]["busy_w"] == 1e-9
+    irb_choice = next(v for k, v in edp.entries.items()
+                      if k.startswith("irb:"))
+    assert irb_choice.us == pytest.approx(1.1e6)  # measured seconds, in us
+
+
+def test_edp_selection_still_bit_exact(tiny_qnet):
+    """An EDP winner is exactness-gated like any other: the tuned stage
+    executors must reproduce the reference logits bit-for-bit."""
+    from repro.energy import PowerModel
+
+    times = {"per_op": 1.0, "fused_irb": 1.1}
+    plan = tune_qnet(tiny_qnet, batch=2, measure=_fake_measure(times),
+                     objective="edp",
+                     power=PowerModel(busy_w=1e-9, source="test"))
+    x = jnp.asarray(np.random.default_rng(0).uniform(
+        -1, 1, (2, 16, 16, 3)).astype(np.float32))
+    ref = np.asarray(cu.run_qnet(tiny_qnet, x))
+    y = x
+    for stage in compile_stages(tiny_qnet, tuned=plan):
+        y = stage(y)
+    np.testing.assert_array_equal(np.asarray(y), ref)
+
+
+def test_edp_requires_known_objective(tiny_qnet):
+    with pytest.raises(ValueError):
+        tune_qnet(tiny_qnet, batch=2, measure=_fake_measure({}),
+                  objective="joules")
+
+
+# ---------------------------------------------------------------------------
 # committed caches: tuned-vs-default parity on the frozen goldens
 # ---------------------------------------------------------------------------
 
 
-def _golden_cache_path(model: str, bits: int) -> str:
-    return os.path.join(TUNED_DIR, f"{model}_act{bits}_cpu.json")
+def _golden_cache_path(model: str, bits: int, suffix: str = "") -> str:
+    return os.path.join(TUNED_DIR, f"{model}_act{bits}_cpu{suffix}.json")
 
 
-@pytest.fixture(scope="module", params=CASES,
-                ids=lambda c: f"{c[0]}_act{c[1]}")
+# both committed cache families ride the same conformance tier: the
+# latency-tuned caches and the EDP-tuned ones (`*_edp.json`) must each
+# cover their golden net and serve bit-exactly — an EDP winner is still
+# exactness-gated before it may enter a cache
+_GOLDEN_PARAMS = [(m, b, sfx) for sfx in ("", "_edp") for m, b in CASES]
+
+
+@pytest.fixture(scope="module", params=_GOLDEN_PARAMS,
+                ids=lambda c: f"{c[0]}_act{c[1]}{c[2]}")
 def golden_case(request):
-    model, bits = request.param
-    cache_path = _golden_cache_path(model, bits)
+    model, bits, suffix = request.param
+    cache_path = _golden_cache_path(model, bits, suffix)
     if jax.default_backend() != "cpu":
         pytest.skip("committed caches are CPU-tuned")
     if not os.path.exists(cache_path):

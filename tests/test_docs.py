@@ -1,0 +1,64 @@
+"""Docs stay truthful: tier-1 runs the same gate as the CI ``docs`` job.
+
+Every relative markdown link in README.md + docs/*.md must resolve (files
+and heading anchors), and docs/architecture.md must reference every
+package under src/repro/ — so adding a package without documenting it,
+or moving a file out from under a doc link, fails the suite locally
+before it fails CI.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+CHECKER = REPO / "tools" / "check_docs.py"
+
+sys.path.insert(0, str(REPO / "tools"))
+import check_docs  # noqa: E402
+
+
+def test_docs_tree_exists():
+    for name in ("architecture", "serving", "streaming", "quantization",
+                 "tuning", "energy", "benchmarks"):
+        assert (REPO / "docs" / f"{name}.md").exists(), f"docs/{name}.md missing"
+
+
+def test_links_and_coverage_clean():
+    assert check_docs.collect_errors(REPO) == []
+
+
+def test_checker_catches_broken_link(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    (tmp_path / "README.md").write_text("[gone](docs/nope.md)\n")
+    (tmp_path / "docs" / "architecture.md").write_text("# arch\n")
+    errs = check_docs.collect_errors(tmp_path)
+    assert any("broken link" in e and "nope.md" in e for e in errs)
+
+
+def test_checker_catches_dangling_anchor(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    (tmp_path / "README.md").write_text("x\n")
+    (tmp_path / "docs" / "architecture.md").write_text(
+        "# Arch\n[self](architecture.md#no-such-heading)\n")
+    errs = check_docs.collect_errors(tmp_path)
+    assert any("dangling anchor" in e for e in errs)
+
+
+def test_checker_catches_undocumented_package(tmp_path):
+    (tmp_path / "docs").mkdir()
+    pkg = tmp_path / "src" / "repro" / "newpkg"
+    pkg.mkdir(parents=True)
+    (pkg / "__init__.py").write_text("")
+    (tmp_path / "README.md").write_text("x\n")
+    (tmp_path / "docs" / "architecture.md").write_text("# Arch\n")
+    errs = check_docs.collect_errors(tmp_path)
+    assert any("newpkg" in e for e in errs)
+
+
+def test_checker_cli_exit_status():
+    proc = subprocess.run([sys.executable, str(CHECKER)],
+                          capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+    assert "OK" in proc.stdout

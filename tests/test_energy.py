@@ -1,0 +1,357 @@
+"""Calibrated energy model + RAPL power plumbing + power governor.
+
+Everything here is deterministic: RAPL is exercised against a fixture
+powercap tree under tmp_path (the real `/sys/class/powercap` is never
+touched), clocks are injected counters, and permission faults are driven
+through the `power._read_uj` seam rather than chmod (the suite runs as
+root in CI, where mode bits don't deny anything).
+"""
+import os
+
+import pytest
+
+from repro.core import graph as G
+from repro.energy import (
+    BACKEND_WATTS,
+    EnergyReport,
+    PJ_PER_BYTE,
+    PJ_PER_MAC,
+    PowerGovernor,
+    PowerModel,
+    RaplEnergyReader,
+    RaplUnavailable,
+    analytic_energy_j,
+    calibrate_power,
+    default_power_model,
+    edp_score,
+    estimate_energy,
+    measure_power,
+    op_bytes_moved,
+    op_macs,
+    reset_default_power_model,
+)
+from repro.energy import power as EP
+from repro.models import mobilenet_v2 as mnv2
+from repro.models.layers import make_calibrated_qnet
+
+
+class Ticker:
+    """Fake clock: every read advances by `step` seconds."""
+
+    def __init__(self, step: float = 1.0):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self) -> float:
+        self.t += self.step
+        return self.t
+
+
+def _write_domain(root, name, uj, range_uj=2 ** 32 - 1):
+    d = root / name
+    d.mkdir(parents=True, exist_ok=True)
+    (d / "energy_uj").write_text(f"{uj}\n")
+    (d / "max_energy_range_uj").write_text(f"{range_uj}\n")
+    return d
+
+
+@pytest.fixture(autouse=True)
+def _fresh_memo():
+    reset_default_power_model()
+    yield
+    reset_default_power_model()
+
+
+# ---------------------------------------------------------------------------
+# PowerModel
+# ---------------------------------------------------------------------------
+
+
+def test_power_model_validates():
+    m = PowerModel(busy_w=10.0, idle_w=2.0, source="test")
+    assert m.as_dict() == {"busy_w": 10.0, "idle_w": 2.0, "source": "test"}
+    with pytest.raises(ValueError):
+        PowerModel(busy_w=0.0)
+    with pytest.raises(ValueError):
+        PowerModel(busy_w=5.0, idle_w=-1.0)
+    with pytest.raises(ValueError):
+        PowerModel(busy_w=5.0, idle_w=6.0)  # idle above busy
+
+
+# ---------------------------------------------------------------------------
+# RAPL reader against a fixture powercap tree
+# ---------------------------------------------------------------------------
+
+
+def test_rapl_missing_tree_raises(tmp_path):
+    with pytest.raises(RaplUnavailable):
+        RaplEnergyReader(str(tmp_path / "nope"))
+
+
+def test_rapl_tree_without_counters_raises(tmp_path):
+    (tmp_path / "intel-rapl:0").mkdir()  # directory but no energy_uj
+    with pytest.raises(RaplUnavailable):
+        RaplEnergyReader(str(tmp_path))
+
+
+def test_rapl_reads_package_domains_and_skips_subdomains(tmp_path):
+    _write_domain(tmp_path, "intel-rapl:0", 1_000_000)
+    _write_domain(tmp_path, "intel-rapl:1", 500_000)
+    # core/dram subdomains are INSIDE the package counters: counting them
+    # would double-bill every joule
+    _write_domain(tmp_path, "intel-rapl:0:0", 900_000)
+    r = RaplEnergyReader(str(tmp_path))
+    assert r.n_domains == 2
+    assert r.read_j() == 0.0  # no counter movement yet
+    _write_domain(tmp_path, "intel-rapl:0", 1_250_000)
+    _write_domain(tmp_path, "intel-rapl:1", 750_000)
+    _write_domain(tmp_path, "intel-rapl:0:0", 9_900_000)  # must be ignored
+    assert r.read_j() == pytest.approx(0.5)  # 2 x 250_000 uJ
+
+
+def test_rapl_counter_wraparound(tmp_path):
+    range_uj = 1_000_000
+    _write_domain(tmp_path, "intel-rapl:0", 999_900, range_uj=range_uj)
+    r = RaplEnergyReader(str(tmp_path))
+    r.read_j()
+    # counter wrapped: raw < last means range - last + raw, not a negative
+    _write_domain(tmp_path, "intel-rapl:0", 400, range_uj=range_uj)
+    assert r.read_j() == pytest.approx((range_uj - 999_900 + 400) * 1e-6)
+
+
+def test_rapl_unreadable_domain_skipped_then_unavailable(tmp_path,
+                                                        monkeypatch):
+    """Permission-denied counters (non-root readers) are skipped at scan
+    time; a tree where every domain is denied raises RaplUnavailable."""
+    _write_domain(tmp_path, "intel-rapl:0", 1_000)
+
+    def deny(path):
+        raise PermissionError(13, "Permission denied", path)
+
+    monkeypatch.setattr(EP, "_read_uj", deny)
+    with pytest.raises(RaplUnavailable):
+        RaplEnergyReader(str(tmp_path))
+
+
+def test_rapl_counter_vanishing_mid_run_raises(tmp_path, monkeypatch):
+    _write_domain(tmp_path, "intel-rapl:0", 1_000)
+    r = RaplEnergyReader(str(tmp_path))
+
+    def gone(path):
+        raise FileNotFoundError(2, "No such file", path)
+
+    monkeypatch.setattr(EP, "_read_uj", gone)
+    with pytest.raises(RaplUnavailable):
+        r.read_j()
+
+
+def test_measure_and_calibrate_power_fixture_tree(tmp_path):
+    _write_domain(tmp_path, "intel-rapl:0", 0)
+    reader = RaplEnergyReader(str(tmp_path))
+    clock = Ticker(step=1.0)  # measure_power reads it twice -> dt == 1s
+
+    def burn(uj):
+        def fn():
+            cur = int((tmp_path / "intel-rapl:0" / "energy_uj")
+                      .read_text())
+            _write_domain(tmp_path, "intel-rapl:0", cur + uj)
+        return fn
+
+    assert measure_power(burn(3_000_000), reader, clock) \
+        == pytest.approx(3.0)
+    model = calibrate_power(reader=reader, clock=clock,
+                            idle_fn=burn(2_000_000),
+                            busy_fn=burn(12_000_000))
+    assert model.idle_w == pytest.approx(2.0)
+    assert model.busy_w == pytest.approx(12.0)
+    assert model.source == f"rapl:{tmp_path}"
+
+
+def test_calibrate_clamps_noisy_busy_below_idle(tmp_path):
+    """A busy window that measured below idle is scheduler noise; the
+    model must still satisfy busy >= idle > 0 (PowerModel validates)."""
+    _write_domain(tmp_path, "intel-rapl:0", 0)
+    reader = RaplEnergyReader(str(tmp_path))
+    clock = Ticker(step=1.0)
+
+    def burn(uj):
+        def fn():
+            cur = int((tmp_path / "intel-rapl:0" / "energy_uj")
+                      .read_text())
+            _write_domain(tmp_path, "intel-rapl:0", cur + uj)
+        return fn
+
+    model = calibrate_power(reader=reader, clock=clock,
+                            idle_fn=burn(5_000_000),
+                            busy_fn=burn(1_000_000))
+    assert model.busy_w >= model.idle_w > 0
+
+
+def test_default_power_model_falls_back_to_constants(tmp_path):
+    """No powercap tree (this container, macOS, accelerators): the
+    per-backend constants with a provenance string that says so."""
+    m = default_power_model("cpu", root=str(tmp_path / "absent"))
+    assert (m.busy_w, m.idle_w) == BACKEND_WATTS["cpu"]
+    assert m.source == "constant:cpu"
+    # memoized per (backend, root): same object until reset
+    assert default_power_model("cpu", root=str(tmp_path / "absent")) is m
+    assert default_power_model("tpu").busy_w == BACKEND_WATTS["tpu"][0]
+
+
+def test_default_power_model_calibrates_from_fixture_tree(tmp_path,
+                                                          monkeypatch):
+    # live counters that advance on every read -> calibration succeeds
+    state = {"uj": 0}
+
+    def advancing(path):
+        if path.endswith("max_energy_range_uj"):
+            return 2 ** 32 - 1
+        state["uj"] += 50_000
+        return state["uj"]
+
+    _write_domain(tmp_path, "intel-rapl:0", 0)
+    monkeypatch.setattr(EP, "_read_uj", advancing)
+    m = default_power_model("cpu", root=str(tmp_path), calibrate_s=0.001)
+    assert m.source == f"rapl:{tmp_path}"
+    assert m.busy_w >= m.idle_w > 0
+
+
+# ---------------------------------------------------------------------------
+# the energy model: bytes matter (the deleted MAC-proxy's blind spot)
+# ---------------------------------------------------------------------------
+
+
+def test_dw_and_pw_equal_macs_different_bytes():
+    """Regression for the old `_energy_j_per_image` MAC-only proxy: a DW
+    and a PW op with IDENTICAL MAC counts move ~5x different DDR bytes,
+    so their modeled energy must differ. The proxy scored them equal."""
+    dw = G.OpSpec("dw", G.DW, in_ch=256, out_ch=256, kernel=3, bits=8,
+                  act_bits=8)
+    pw = G.OpSpec("pw", G.PW, in_ch=48, out_ch=48, bits=8, act_bits=8)
+    hw = 16
+    assert op_macs(dw, hw) == op_macs(pw, hw)  # the proxy's whole input
+    b_dw, b_pw = op_bytes_moved(dw, hw), op_bytes_moved(pw, hw)
+    assert b_dw > 4 * b_pw  # DW streams 256ch activations, PW only 48ch
+    e_dw = op_macs(dw, hw) * PJ_PER_MAC[8] * 1e-12 + b_dw * PJ_PER_BYTE * 1e-12
+    e_pw = op_macs(pw, hw) * PJ_PER_MAC[8] * 1e-12 + b_pw * PJ_PER_BYTE * 1e-12
+    assert e_dw > e_pw
+
+
+def test_analytic_energy_includes_byte_term():
+    spec = mnv2.build(alpha=0.35, input_hw=32, num_classes=10)
+    j = analytic_energy_j(spec)
+    mac_only = sum(
+        op_macs(op, in_hw, spec.spatial_rank)
+        * PJ_PER_MAC.get(op.bits, 0.2) * 1e-12
+        for _, _, op, in_hw in __import__(
+            "repro.core.compiler", fromlist=["compile_net"]
+        ).compile_net(spec).op_descriptors())
+    assert j > mac_only  # the byte term is live, not vestigial
+
+
+def test_estimate_energy_analytic_when_untuned():
+    qnet = make_calibrated_qnet(
+        mnv2.build(alpha=0.35, input_hw=32, num_classes=10))
+    power = PowerModel(busy_w=10.0, idle_w=2.0, source="test")
+    rep = estimate_energy(qnet, power=power, backend="cpu")
+    assert isinstance(rep, EnergyReport)
+    assert rep.tuned_fraction == 0.0
+    assert rep.j_per_image > 0 and rep.us_per_image > 0
+    assert set(rep.per_cu()) == {"head", "body", "tail", "classifier"}
+    # rate-dependent watts: idle floor at 0 fps, linear in fps above it
+    assert rep.watts(0.0) == pytest.approx(2.0)
+    assert rep.watts(100.0) == pytest.approx(2.0 + 100 * rep.j_per_image)
+    assert rep.fps_per_watt(100.0) == pytest.approx(
+        100.0 / rep.watts(100.0))
+    d = rep.as_dict()
+    assert d["tuned_fraction"] == 0.0 and d["n_ops"] == len(rep.ops)
+
+
+def test_estimate_energy_tuned_routes_from_committed_cache():
+    cache = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "tuned", "mobilenet_v2_act8_cpu.json")
+    if not os.path.exists(cache):
+        pytest.skip("no committed cache")
+    from repro.tune import load_tuned
+    from tests.regen_golden import build_net, fixture_paths
+    from repro.core import qnet as Q
+
+    qnet_path, _ = fixture_paths("mobilenet_v2", 8)
+    qnet = Q.load_qnet(qnet_path, build_net("mobilenet_v2", 8))
+    tuned = load_tuned(cache)
+    power = PowerModel(busy_w=10.0, source="test")
+    rep = estimate_energy(qnet, tuned=tuned, power=power)
+    tuned_ops = [o for o in rep.ops if o.source == "tuned"]
+    assert tuned_ops, "committed cache resolved no routes"
+    # every autotuned op is measurement-priced; only SE side ops fall back
+    assert all(o.source == "tuned" for o in rep.ops if o.key)
+    assert rep.tuned_fraction > 0.5
+    # measured timings dominate the pJ/MAC guess by orders of magnitude on
+    # this host; the report must reflect the measurement, not the guess
+    analytic = estimate_energy(qnet, power=power, backend="cpu")
+    assert rep.j_per_image != analytic.j_per_image
+
+
+# ---------------------------------------------------------------------------
+# EDP score
+# ---------------------------------------------------------------------------
+
+
+def test_edp_score_properties():
+    p = PowerModel(busy_w=10.0, source="test")
+    assert edp_score(0.0, 100, p) == float("inf")
+    assert edp_score(-1.0, 100, p) == float("inf")
+    assert edp_score(float("nan"), 100, p) == float("inf")
+    # equal bytes -> monotone in t (per-op EDP degenerates to latency)
+    assert edp_score(1e-3, 1000, p) < edp_score(2e-3, 1000, p)
+    # traffic can flip a winner: slightly slower but much lighter wins
+    heavy = edp_score(1.00e-6, 10_000_000, p)
+    light = edp_score(1.05e-6, 1_000, p)
+    assert light < heavy
+
+
+# ---------------------------------------------------------------------------
+# PowerGovernor
+# ---------------------------------------------------------------------------
+
+
+def test_governor_validates():
+    with pytest.raises(ValueError):
+        PowerGovernor(1.0, idle_w=2.0)  # budget below idle floor
+    with pytest.raises(ValueError):
+        PowerGovernor(10.0, window_s=0.0)
+    g = PowerGovernor(10.0, idle_w=2.0)
+    with pytest.raises(ValueError):
+        g.record(-1.0, now=0.0)
+
+
+def test_governor_rolling_window_accounting():
+    g = PowerGovernor(10.0, window_s=1.0, idle_w=2.0)
+    assert g.watts(0.0) == pytest.approx(2.0)  # idle floor
+    assert g.headroom_j(0.0) == pytest.approx(8.0)
+    g.record(3.0, now=0.0)
+    g.record(4.0, now=0.5)
+    assert g.window_j(0.5) == pytest.approx(7.0)
+    assert g.watts(0.5) == pytest.approx(9.0)
+    assert not g.would_exceed(1.0, now=0.5)
+    assert g.would_exceed(1.1, now=0.5)
+    # the t=0 event ages out of the window; headroom comes back
+    assert g.window_j(1.25) == pytest.approx(4.0)
+    assert not g.would_exceed(4.0, now=1.25)
+    assert g.total_j == pytest.approx(7.0)  # lifetime total never pruned
+
+
+def test_governor_never_crosses_budget_when_policed():
+    """The engine's contract: check would_exceed BEFORE record. Under
+    that discipline the windowed estimate never exceeds the budget."""
+    g = PowerGovernor(5.0, window_s=1.0, idle_w=1.0)
+    t = 0.0
+    dispatched = 0
+    for _ in range(50):
+        j = 1.5
+        if not g.would_exceed(j, now=t):
+            g.record(j, now=t)
+            dispatched += 1
+        assert g.watts(t) <= g.budget_w + 1e-9
+        t += 0.2
+    assert dispatched > 10  # headroom keeps returning as events age out

@@ -548,6 +548,152 @@ def test_queue_drain_throughput_smoke(mnv2_qnet):
     assert all(v == stats.micro_batches
                for v in stats.stage_invocations.values())
     assert stats.macs_per_image == mnv2_qnet.spec.count_macs()
-    assert stats.energy_j_per_image_proxy > 0
+    assert stats.energy_j_per_image > 0
+    assert stats.watts >= stats.fps * stats.energy_j_per_image
+    assert stats.fps_per_watt > 0
     d = stats.as_dict()
-    assert {"fps", "latency_p50_s", "fps_per_watt_proxy"} <= set(d)
+    assert {"fps", "latency_p50_s", "fps_per_watt", "watts",
+            "power_source", "energy_tuned_fraction"} <= set(d)
+
+
+# ---------------------------------------------------------------------------
+# power-capped dispatch (docs/energy.md): deterministic fake-clock stress
+# ---------------------------------------------------------------------------
+
+
+def _fat_energy(j_per_image: float, idle_w: float = 0.0):
+    """Synthetic EnergyReport with an exact J/image — the governor tests
+    need batch energies that dominate the budget, not mnv2's real uJ."""
+    from repro.energy import EnergyReport, OpEnergy, PowerModel
+
+    op = OpEnergy(name="fat", cu="body", kind="pw", key="", us=1.0,
+                  source="analytic", macs=1, bytes_moved=1,
+                  compute_j=j_per_image, memory_j=0.0)
+    return EnergyReport(net="fake", backend="cpu",
+                        power=PowerModel(busy_w=max(10.0, idle_w + 1.0),
+                                         idle_w=idle_w, source="test"),
+                        ops=(op,))
+
+
+def test_power_cap_stays_under_budget_zero_high_slo_drops(mnv2_qnet):
+    """The acceptance stress: 1 J/image, 10 W budget over a 1 s window ->
+    at most 2 bucket-4 batches per window. The governor must (a) keep the
+    modeled watts under budget at every dispatch point, (b) shed ONLY the
+    shed class (slo <= 0), (c) serve every slo-1 request eventually —
+    zero drops above the shed class."""
+    clock = FakeClock(step=1e-4)
+    eng = VisionEngine(mnv2_qnet, buckets=(4,), clock=clock,
+                       energy=_fat_energy(1.0), power_budget_w=10.0,
+                       power_window_s=1.0, shed_slo=0)
+    imgs = _images(12)
+    rids = {eng.submit(img, slo=i % 2): i % 2
+            for i, img in enumerate(imgs)}
+    results = {}
+    for _ in range(8):  # drain over advancing windows
+        results.update(eng.run())
+        assert eng._governor.watts(clock.t) <= 10.0 + 1e-9
+        if not eng.pending():
+            break
+        clock.advance(0.5)
+    assert not eng.pending()
+    by_status = {}
+    for rid, slo in rids.items():
+        by_status.setdefault(results[rid].status, []).append(slo)
+    # every shed request was sheddable; every slo-1 request came back ok
+    assert set(by_status.get("shed", [])) <= {0}
+    assert all(results[rid].status == "ok"
+               for rid, slo in rids.items() if slo == 1)
+    stats = eng.stats()
+    assert stats.n_shed == len(by_status.get("shed", []))
+    assert stats.n_deferred > 0  # the cap actually bit
+    assert stats.power_budget_w == 10.0
+    # shed results carry no logits; ok results are bit-exact
+    for rid, slo in rids.items():
+        if results[rid].status == "ok":
+            ref = np.asarray(cu.run_qnet(
+                mnv2_qnet, jnp.asarray(imgs[list(rids).index(rid)][None])))
+            np.testing.assert_array_equal(results[rid].logits, ref[0])
+        else:
+            assert results[rid].logits is None
+
+
+def test_power_cap_generous_budget_never_sheds(mnv2_qnet):
+    clock = FakeClock(step=1e-4)
+    eng = VisionEngine(mnv2_qnet, buckets=(4,), clock=clock,
+                       energy=_fat_energy(1e-3), power_budget_w=100.0)
+    rids = [eng.submit(img, slo=0) for img in _images(8)]
+    results = eng.run()
+    assert all(results[r].status == "ok" for r in rids)
+    stats = eng.stats()
+    assert stats.n_shed == 0 and stats.n_deferred == 0
+
+
+def test_power_cap_deferred_requests_keep_deadlines(mnv2_qnet):
+    """Deferral is not terminal and preserves EDF ordering: a deferred
+    request with a live deadline is served on the next window; one whose
+    deadline passes while deferred expires (not sheds)."""
+    clock = FakeClock(step=1e-4)
+    eng = VisionEngine(mnv2_qnet, buckets=(2,), clock=clock,
+                       energy=_fat_energy(1.0), power_budget_w=6.0,
+                       power_window_s=1.0, shed_slo=-1)  # nothing sheddable
+    imgs = _images(6)
+    now = clock.t
+    r_live = eng.submit(imgs[0], slo=1, deadline_s=now + 100.0)
+    r_tight = eng.submit(imgs[1], slo=1, deadline_s=now + 0.3)
+    rest = [eng.submit(img, slo=1) for img in imgs[2:]]
+    results = dict(eng.run())  # EDF serves r_tight first; budget defers tail
+    for _ in range(6):
+        if not eng.pending():
+            break
+        clock.advance(0.6)
+        results.update(eng.run())
+    assert results[r_tight].status == "ok"  # tight deadline went first
+    assert results[r_live].status == "ok"
+    # everything else either completed or expired while deferred — but
+    # nothing was shed (shed_slo=-1) and nothing vanished
+    assert set(results) == {r_live, r_tight, *rest}
+    assert all(results[r].status in ("ok", "expired") for r in rest)
+    assert eng.stats().n_shed == 0
+
+
+def test_power_budget_must_clear_idle_floor(mnv2_qnet):
+    with pytest.raises(ValueError):
+        VisionEngine(mnv2_qnet, buckets=(2,),
+                     energy=_fat_energy(1.0, idle_w=5.0),
+                     power_budget_w=4.0)  # budget below idle draw
+
+
+def test_multi_model_shared_power_budget(mnv2_qnet, effnet_qnet):
+    """One governor spans the fleet: both models' dispatches debit the
+    same rolling window, and the shared watt estimate stays capped."""
+    clock = FakeClock(step=1e-4)
+    engines = {
+        "m": VisionEngine(mnv2_qnet, buckets=(2,), clock=clock,
+                          energy=_fat_energy(1.0), name="m"),
+        "e": VisionEngine(effnet_qnet, buckets=(2,), clock=clock,
+                          energy=_fat_energy(1.0), name="e"),
+    }
+    router = MultiModelEngine(engines, power_budget_w=5.0)
+    assert engines["m"]._governor is router.governor
+    assert engines["e"]._governor is router.governor
+    handles = [router.submit("m" if i % 2 == 0 else "e", img, slo=1)
+               for i, img in enumerate(_images(8))]
+    results = dict(router.run())
+    for _ in range(8):
+        if not any(e.pending() for e in engines.values()):
+            break
+        assert router.governor.watts(clock.t) <= 5.0 + 1e-9
+        clock.advance(1.0)
+        results.update(router.run())
+    assert all(results[h].status == "ok" for h in handles)
+    assert router.governor.total_j > 0
+
+
+def test_multi_model_refuses_double_governor(mnv2_qnet, effnet_qnet):
+    clock = FakeClock()
+    owned = VisionEngine(mnv2_qnet, buckets=(2,), clock=clock,
+                         energy=_fat_energy(1.0), power_budget_w=10.0)
+    other = VisionEngine(effnet_qnet, buckets=(2,), clock=clock,
+                         energy=_fat_energy(1.0))
+    with pytest.raises(ValueError):
+        MultiModelEngine({"a": owned, "b": other}, power_budget_w=5.0)

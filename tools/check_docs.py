@@ -1,0 +1,114 @@
+"""Docs gate: relative-link resolution + architecture.md package coverage.
+
+Run from anywhere inside the repo:
+
+    python tools/check_docs.py
+
+Checks, over README.md and every docs/*.md:
+
+  1. every relative markdown link target resolves to a real file or
+     directory (links with a URL scheme are skipped; so are targets that
+     escape the repo root, like the README CI badge's GitHub-relative
+     ../../actions/... path — they are not filesystem claims),
+  2. every ``#fragment`` pointing at a markdown file matches a heading in
+     that file (GitHub anchor slug rules),
+  3. docs/architecture.md references every package under src/repro/ —
+     a new package cannot land without a line in the architecture map.
+
+Exit status 0 on success, 1 with one line per problem otherwise. Wired
+into CI as the ``docs`` job and into tier-1 via tests/test_docs.py.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+SCHEME_RE = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")
+
+
+def repo_root() -> Path:
+    return Path(__file__).resolve().parent.parent
+
+
+def doc_files(root: Path) -> list[Path]:
+    return [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+
+
+def heading_slugs(md_text: str) -> set[str]:
+    """GitHub-style anchor slugs for every heading in a markdown text."""
+    slugs = set()
+    for m in HEADING_RE.finditer(md_text):
+        title = m.group(1).strip().replace("`", "")
+        slug = re.sub(r"[^\w\- ]", "", title).strip().lower().replace(" ", "-")
+        slugs.add(slug)
+    return slugs
+
+
+def check_links(doc: Path, root: Path) -> list[str]:
+    errors = []
+    text = doc.read_text()
+    rel = doc.relative_to(root)
+    for target in LINK_RE.findall(text):
+        if SCHEME_RE.match(target):
+            continue  # external URL
+        path_part, _, fragment = target.partition("#")
+        if path_part:
+            resolved = (doc.parent / path_part).resolve()
+            if not resolved.is_relative_to(root):
+                continue  # GitHub-relative (badge/actions), not a file claim
+            if not resolved.exists():
+                errors.append(f"{rel}: broken link -> {target}")
+                continue
+        else:
+            resolved = doc  # pure in-page anchor
+        if fragment and resolved.suffix == ".md":
+            if fragment.lower() not in heading_slugs(resolved.read_text()):
+                errors.append(f"{rel}: dangling anchor -> {target}")
+    return errors
+
+
+def check_architecture_coverage(root: Path) -> list[str]:
+    arch = root / "docs" / "architecture.md"
+    if not arch.exists():
+        return ["docs/architecture.md is missing"]
+    text = arch.read_text()
+    errors = []
+    for pkg in sorted(p for p in (root / "src" / "repro").iterdir()
+                      if p.is_dir() and (p / "__init__.py").exists()):
+        if f"src/repro/{pkg.name}/" not in text:
+            errors.append(
+                f"docs/architecture.md: package src/repro/{pkg.name}/ is "
+                "not referenced in the architecture map"
+            )
+    return errors
+
+
+def collect_errors(root: Path | None = None) -> list[str]:
+    root = (root or repo_root()).resolve()
+    errors = []
+    for doc in doc_files(root):
+        if not doc.exists():
+            errors.append(f"{doc.relative_to(root)} is missing")
+            continue
+        errors.extend(check_links(doc, root))
+    errors.extend(check_architecture_coverage(root))
+    return errors
+
+
+def main() -> int:
+    errors = collect_errors()
+    for err in errors:
+        print(err, file=sys.stderr)
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s)", file=sys.stderr)
+        return 1
+    n = len(doc_files(repo_root()))
+    print(f"check_docs: {n} files OK (links resolve, architecture map covers src/repro/*)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
