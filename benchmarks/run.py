@@ -18,7 +18,7 @@
 the replica-scaling sweep + the streaming pass in an isolated
 single-device subprocess) and asserts the JSON reports still parse — the
 CI gate. A full (or smoke) run aggregates the per-benchmark results into a
-perf-trajectory report at the repo root, BENCH_PR9.json: throughput /
+perf-trajectory report at the repo root, BENCH_PR10.json: throughput /
 latency / analytic bytes-moved, the calibrated energy model's J/image /
 watts / FPS-per-Watt view of serving and streaming (docs/energy.md),
 tuned-vs-default serving FPS (measured
@@ -26,7 +26,10 @@ per-op routes from the committed `experiments/tuned/` cache), the
 obs-enabled serving FPS + metrics-snapshot profile (the observability
 layer's <5% hot-path overhead budget, recorded as `obs_overhead_frac`),
 the per-replica-count scaling curve (each point conformance-checked
-against the frozen golden fixtures), plus deltas against the previous
+against the frozen golden fixtures), the mixed-precision Pareto summary
+(the committed `experiments/precision/` artifact the per-layer act-bit
+search produced — front size, headline domination pair, per-point
+objectives; see docs/tuning.md), plus deltas against the previous
 PR's `experiments/vision_serving.json` baseline captured before this run
 overwrote it. Force N CPU devices with
 `XLA_FLAGS=--xla_force_host_platform_device_count=N` to exercise the
@@ -50,7 +53,8 @@ import os
 import subprocess
 import sys
 
-BENCH_REPORT = "BENCH_PR9.json"
+BENCH_REPORT = "BENCH_PR10.json"
+PRECISION_PARETO = "experiments/precision/mobilenet_v2_cpu_pareto.json"
 VISION_REPORT = "experiments/vision_serving.json"
 SCALING_REPORT = "experiments/vision_serving_scaling.json"
 STREAMING_REPORT = "experiments/streaming.json"
@@ -111,6 +115,47 @@ def _run_streaming_isolated(out: str, batched_out: str,
     return streaming, batched
 
 
+def _precision_summary(path: str = PRECISION_PARETO):
+    """The committed mixed-precision Pareto artifact, trajectory-shaped:
+    front size, the headline mixed-dominates-uniform pair, and each
+    point's four objectives. None when no artifact is committed (the
+    trajectory row is absent, not null-filled, pre-PR-10)."""
+    if not os.path.exists(path):
+        return None
+    try:
+        from repro.tune import precision as P
+        doc = P.check_pareto_artifact(path)
+        points = {p["name"]: {
+            "accuracy": p["accuracy"],
+            "fps": p["fps"],
+            "us_per_image": p["us_per_image"],
+            "model_bytes": p["model_bytes"],
+            "j_per_image": p["j_per_image"],
+            "uniform": p["uniform"],
+        } for p in doc["points"]}
+        dom = P.find_domination([P.PrecisionPoint(
+            name=p["name"], block_bits=p["block_bits"], alloc=p["alloc"],
+            uniform=p["uniform"], accuracy=p["accuracy"],
+            us_per_image=p["us_per_image"], model_bytes=p["model_bytes"],
+            j_per_image=p["j_per_image"], edp=p["edp"],
+            tuned_fraction=p["tuned_fraction"]) for p in doc["points"]])
+        return {
+            "artifact": path,
+            "model": doc["model"],
+            "backend": doc["backend"],
+            "choices": doc["choices"],
+            "n_points": len(doc["points"]),
+            "front": doc["pareto"],
+            "domination": ({"mixed": dom[0], "uniform": dom[1]}
+                           if dom else None),
+            "points": points,
+        }
+    except (ValueError, KeyError, ImportError) as e:
+        print(f"# precision artifact {path} unreadable: {e}",
+              file=sys.stderr)
+        return None
+
+
 def _write_trajectory(vision, kernels, baseline, smoke: bool,
                       scaling=None, streaming=None,
                       streaming_batched=None) -> None:
@@ -125,7 +170,7 @@ def _write_trajectory(vision, kernels, baseline, smoke: bool,
         pr1_fps = baseline.get("fps_pipelined_fast",
                                baseline.get("fps_pipelined"))
     report = {
-        "pr": 9,
+        "pr": 10,
         "smoke": smoke,
         "baseline_source": VISION_REPORT if baseline else None,
         "serving": None,
@@ -134,6 +179,7 @@ def _write_trajectory(vision, kernels, baseline, smoke: bool,
         "scaling": None,
         "streaming": None,
         "streaming_batched": None,
+        "precision": _precision_summary(),
         "kernels": kernels,
     }
     if vision:

@@ -17,7 +17,8 @@ The same IR drives:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import re
+from typing import Dict, Optional, Tuple
 
 # Operator kinds
 CONV = "conv"  # normal convolution (spatial + channel reduction)
@@ -222,6 +223,16 @@ class NetSpec:
         return total
 
 
+# name suffix appended by the act-bit rewrites below; stripped before
+# re-appending so re-quantization is idempotent on the name
+_ACT_SUFFIX_RE = re.compile(r"(_act(?:\d+|mix[0-9a-f]+))+$")
+
+
+def _base_name(name: str) -> str:
+    """Net name with any `_act{n}` / `_actmix{hash}` suffix removed."""
+    return _ACT_SUFFIX_RE.sub("", name)
+
+
 def with_act_bits(net: NetSpec, act_bits: int) -> NetSpec:
     """The same network at a different activation bit-width.
 
@@ -232,6 +243,11 @@ def with_act_bits(net: NetSpec, act_bits: int) -> NetSpec:
     exactly [0, 1] regardless of BW, and `SESpec` derives both widths from
     one field. Op names (and therefore param trees) are unchanged, so one
     set of float params serves every anneal stage.
+
+    The name gains one `_act{n}` suffix; any existing act suffix is
+    stripped first, so re-quantizing an already-suffixed net yields
+    `mnv2_act4`, never `mnv2_act8_act4` (artifact / tuned-cache / golden
+    naming stays in sync across repeated anneal steps).
     """
     blocks = tuple(
         dataclasses.replace(
@@ -240,7 +256,61 @@ def with_act_bits(net: NetSpec, act_bits: int) -> NetSpec:
         for b in net.blocks
     )
     return dataclasses.replace(
-        net, name=f"{net.name}_act{act_bits}", blocks=blocks)
+        net, name=f"{_base_name(net.name)}_act{act_bits}", blocks=blocks)
+
+
+def with_op_act_bits(net: NetSpec, alloc: Dict[str, int]) -> NetSpec:
+    """Per-op generalization of `with_act_bits`: heterogeneous precision.
+
+    `alloc` maps op names to activation bit-widths; ops absent from the
+    map keep their current `act_bits`. Unknown names raise — a typo'd
+    allocation silently keeping the old width is exactly the bug class
+    the mixed-precision tooling must not have. SE gate ops are derived
+    from `SESpec` and are not individually addressable (the gate range is
+    [0, 1] at any BW), so their names are rejected too.
+
+    The returned net's name carries a deterministic `_actmix{hash}`
+    suffix (stripping any existing act suffix first), so two different
+    allocations never alias in tuned-cache `nets` lists or artifact
+    filenames, while the same allocation always produces the same name.
+    """
+    if not alloc:
+        return net
+    known = {op.name for b in net.blocks for op in b.ops}
+    unknown = sorted(set(alloc) - known)
+    if unknown:
+        raise KeyError(
+            f"with_op_act_bits: unknown op name(s) {unknown!r} — "
+            f"allocation keys must name plain ops of {net.name!r}")
+    blocks = tuple(
+        dataclasses.replace(
+            b, ops=tuple(
+                dataclasses.replace(op, act_bits=int(alloc[op.name]))
+                if op.name in alloc else op
+                for op in b.ops))
+        for b in net.blocks
+    )
+    new = dataclasses.replace(net, blocks=blocks)
+    widths = sorted({op.act_bits for b in new.blocks for op in b.ops})
+    if len(widths) == 1:
+        # degenerate map: every op ends at one width — same spelling as
+        # the uniform rewrite so names stay canonical
+        name = f"{_base_name(net.name)}_act{widths[0]}"
+    else:
+        sig = "-".join(f"{op.name}={op.act_bits}"
+                       for b in new.blocks for op in b.ops)
+        import hashlib
+
+        digest = hashlib.sha1(sig.encode()).hexdigest()[:8]
+        name = f"{_base_name(net.name)}_actmix{digest}"
+    return dataclasses.replace(new, name=name)
+
+
+def op_act_bits(net: NetSpec) -> Dict[str, int]:
+    """The net's current per-op activation widths, `{op_name: bits}` —
+    the inverse view `with_op_act_bits` consumes (plain ops only; SE gate
+    widths are derived from `SESpec.bits`)."""
+    return {op.name: op.act_bits for b in net.blocks for op in b.ops}
 
 
 __all__ = [
@@ -249,6 +319,8 @@ __all__ = [
     "BlockSpec",
     "NetSpec",
     "with_act_bits",
+    "with_op_act_bits",
+    "op_act_bits",
     "CONV",
     "DW",
     "PW",

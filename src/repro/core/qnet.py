@@ -180,9 +180,14 @@ def build_netspec(build: Dict) -> G.NetSpec:
     reconstructs the graph the weights were quantized against. An
     `act_bits` entry differing from the weight BW is applied through
     `graph.with_act_bits` after the family builder runs (the builders
-    derive both widths from one `bits` knob)."""
+    derive both widths from one `bits` knob). A heterogeneous artifact
+    instead carries `op_act_bits` — a `{op_name: bits}` allocation map
+    applied through `graph.with_op_act_bits` on top of any uniform
+    `act_bits` base, so a mixed-precision `.qnet` self-describes its full
+    per-layer assignment."""
     kind = build.get("model")
-    kw = {k: v for k, v in build.items() if k not in ("model", "act_bits")}
+    kw = {k: v for k, v in build.items()
+          if k not in ("model", "act_bits", "op_act_bits")}
     if kind == "mobilenet_v2":
         from repro.models import mobilenet_v2 as mnv2
         net = mnv2.build(**kw)
@@ -200,6 +205,10 @@ def build_netspec(build: Dict) -> G.NetSpec:
     act_bits = build.get("act_bits")
     if act_bits is not None and act_bits != build.get("bits"):
         net = G.with_act_bits(net, act_bits)
+    alloc = build.get("op_act_bits")
+    if alloc:
+        net = G.with_op_act_bits(net, {str(k): int(v)
+                                       for k, v in alloc.items()})
     return net
 
 

@@ -26,6 +26,7 @@ from .model import (
     estimate_energy,
     op_bytes_moved,
     op_macs,
+    op_pj_per_mac,
 )
 from .power import (
     BACKEND_WATTS,
@@ -59,5 +60,6 @@ __all__ = [
     "measure_power",
     "op_bytes_moved",
     "op_macs",
+    "op_pj_per_mac",
     "reset_default_power_model",
 ]

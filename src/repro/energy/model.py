@@ -54,16 +54,33 @@ PJ_PER_MAC_DEFAULT = 0.2
 # must not score equally.
 PJ_PER_BYTE = 20.0
 
+
+def op_pj_per_mac(op: G.OpSpec) -> float:
+    """pJ per MAC at the op's *effective* datapath width.
+
+    A MAC multiplies an `op.bits` weight by an activation; pricing by
+    weight width alone let a w4/a8 op bill 4-bit MACs while moving and
+    multiplying 8-bit activations. The effective width is the wider of
+    the two — for uniform w4/a4 nets this reduces to the old `op.bits`
+    pricing bit-for-bit."""
+    eff = max(op.bits, op.act_bits)
+    return PJ_PER_MAC.get(eff, PJ_PER_MAC_DEFAULT)
+
 _TUNED = "tuned"
 _ANALYTIC = "analytic"
 
 
-def op_bytes_moved(op: G.OpSpec, in_hw: Optional[int], rank: int = 2) -> int:
+def op_bytes_moved(op: G.OpSpec, in_hw: Optional[int], rank: int = 2,
+                   *, in_bits: Optional[int] = None) -> int:
     """Analytic DDR bytes for one op at batch 1.
 
-    Input activations read + output activations written (1 byte per
-    element — the integer datapath keeps activations at ≤8 bits) plus
-    the weight tensor streamed once (1 byte per weight, int32 bias).
+    Input activations read + output activations written, packed at their
+    activation bit-widths (`in_bits` for the incoming tensor — the
+    upstream op's `act_bits`, defaulting to this op's own width when the
+    caller doesn't thread the chain — and `op.act_bits` for the output:
+    a 4-bit tensor moves half the DDR bytes of an 8-bit one, which is
+    exactly the axis the mixed-precision search trades on) plus the
+    weight tensor streamed once (1 byte per weight, int32 bias).
     Intermediate SRAM/cache reuse is deliberately not modeled: this is
     the off-chip traffic bound the paper's co-design minimizes."""
     if op.kind == G.DENSE or in_hw is None:
@@ -76,8 +93,10 @@ def op_bytes_moved(op: G.OpSpec, in_hw: Optional[int], rank: int = 2) -> int:
         else:
             n_in = in_hw * in_hw * op.in_ch
             n_out = out_hw * out_hw * op.out_ch
+    in_bits = op.act_bits if in_bits is None else int(in_bits)
+    act_bytes = (n_in * in_bits + n_out * op.act_bits) / 8.0
     w_bytes = op.n_params(with_bias=False) + 4 * op.out_ch
-    return int(n_in + n_out + w_bytes)
+    return int(math.ceil(act_bytes)) + w_bytes
 
 
 def op_macs(op: G.OpSpec, in_hw: Optional[int], rank: int = 2) -> int:
@@ -197,17 +216,22 @@ def estimate_energy(
 
     ops = []
     seen_se = set()
+    # incoming activation width, threaded op to op in schedule order (the
+    # same `cur_bits = op.act_bits` chain `cu.prepare_qnet` walks); the
+    # input image is quantized at 8 bits
+    cur_bits = 8
     for cu, block, op, in_hw in plan.op_descriptors():
         key = TC.op_key(op, in_hw, backend, rank)
         macs = op_macs(op, in_hw, rank)
-        nbytes = op_bytes_moved(op, in_hw, rank)
+        nbytes = op_bytes_moved(op, in_hw, rank, in_bits=cur_bits)
+        cur_bits = op.act_bits
         entry = tuned.entries.get(key) if tuned is not None else None
         if entry is not None and entry.us > 0:
             us = entry.us / per_image
             compute_j = power.busy_w * us * 1e-6
             source = _TUNED
         else:
-            compute_j = macs * PJ_PER_MAC.get(op.bits, PJ_PER_MAC_DEFAULT) * 1e-12
+            compute_j = macs * op_pj_per_mac(op) * 1e-12
             us = compute_j / power.busy_w * 1e6
             source = _ANALYTIC
         memory_j = nbytes * PJ_PER_BYTE * 1e-12
@@ -221,9 +245,7 @@ def estimate_energy(
             for se_op in _se_ops(block):
                 se_macs = op_macs(se_op, 1, rank)
                 se_bytes = op_bytes_moved(se_op, 1, rank)
-                se_cj = (se_macs
-                         * PJ_PER_MAC.get(se_op.bits, PJ_PER_MAC_DEFAULT)
-                         * 1e-12)
+                se_cj = se_macs * op_pj_per_mac(se_op) * 1e-12
                 ops.append(OpEnergy(
                     name=f"{block.name}/{se_op.name}", cu=cu, kind=se_op.kind,
                     key="", us=se_cj / power.busy_w * 1e6, source=_ANALYTIC,
@@ -243,10 +265,12 @@ def analytic_energy_j(spec: G.NetSpec) -> float:
     total = 0.0
     rank = spec.spatial_rank
     plan = CC.compile_net(spec)
+    cur_bits = 8
     for _, block, op, in_hw in plan.op_descriptors():
-        total += (op_macs(op, in_hw, rank)
-                  * PJ_PER_MAC.get(op.bits, PJ_PER_MAC_DEFAULT) * 1e-12)
-        total += op_bytes_moved(op, in_hw, rank) * PJ_PER_BYTE * 1e-12
+        total += op_macs(op, in_hw, rank) * op_pj_per_mac(op) * 1e-12
+        total += (op_bytes_moved(op, in_hw, rank, in_bits=cur_bits)
+                  * PJ_PER_BYTE * 1e-12)
+        cur_bits = op.act_bits
     return total
 
 
@@ -276,4 +300,5 @@ __all__ = [
     "estimate_energy",
     "op_bytes_moved",
     "op_macs",
+    "op_pj_per_mac",
 ]

@@ -3,6 +3,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse  # noqa: E402
 import json  # noqa: E402
+import sys  # noqa: E402
 
 from repro.launch.dryrun import run_cell, shape_by_name  # noqa: E402
 
@@ -15,6 +16,14 @@ from repro.launch.dryrun import run_cell, shape_by_name  # noqa: E402
 
 Results land in experiments/perf/<cell>__<tag>.json next to the baselines in
 experiments/dryrun/, so before/after deltas are directly comparable.
+
+The driver also fronts the mixed-precision search (the act-bit analogue of
+a plan-override hillclimb — candidates are per-block bit allocations and
+the objective surface is the tuned-cache latency table). `--precision`
+forwards every remaining flag to `python -m repro.tune --precision`:
+
+    python -m repro.launch.hillclimb --precision --hw 32 --num-classes 10
+    python -m repro.launch.hillclimb --precision --fake --out /tmp/p.json
 """
 
 
@@ -34,6 +43,10 @@ def parse_override(kv: str):
 
 
 def main():
+    if "--precision" in sys.argv[1:]:
+        from repro.tune.__main__ import main as tune_main
+        tune_main(sys.argv[1:])
+        return
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)

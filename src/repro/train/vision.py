@@ -77,6 +77,11 @@ class VisionTrainConfig:
     num_classes: int = 4
     bits: int = 4  # weight BW
     act_bits: int = 4  # deployment activation BW
+    # heterogeneous deployment: sorted ((op_name, act_bits), ...) pairs
+    # applied on top of the uniform `act_bits` base (tuple-of-pairs so the
+    # frozen config stays hashable; `alloc` exposes the dict view). Rides
+    # the build record, so mixed-precision artifacts self-describe.
+    op_act_bits: Optional[Tuple[Tuple[str, int], ...]] = None
     anneal_from: Optional[int] = None  # e.g. 8: first half of QAT at 8b acts
     bn: bool = True  # float phase trains with BatchNorm, fused before QAT
     float_steps: int = 40
@@ -101,6 +106,13 @@ class VisionTrainConfig:
     def total_steps(self) -> int:
         return self.float_steps + self.qat_steps
 
+    @property
+    def alloc(self) -> Optional[Dict[str, int]]:
+        """The per-op activation allocation as a dict, or None (uniform)."""
+        if not self.op_act_bits:
+            return None
+        return {str(k): int(v) for k, v in self.op_act_bits}
+
 
 @dataclasses.dataclass(frozen=True)
 class Phase:
@@ -114,14 +126,19 @@ class Phase:
 
 def build_net(cfg: VisionTrainConfig, act_bits: Optional[int] = None) -> G.NetSpec:
     """The deployment NetSpec (weight BW = cfg.bits, activation BW =
-    cfg.act_bits); `act_bits` overrides the activation BW for anneal
-    phases. ONE dispatch for both directions: the spec trained against is
-    by construction the spec `load_qnet(path)` rebuilds from the
-    artifact's build record — the record cannot drift from the builder
-    call."""
+    cfg.act_bits, plus the per-op `op_act_bits` allocation when the config
+    carries one); `act_bits` overrides the activation BW for anneal
+    phases — an anneal phase at a different uniform width trains WITHOUT
+    the allocation (the 8-bit warm phase is uniform; the allocation lands
+    with the deployment width). ONE dispatch for both directions: the spec
+    trained against is by construction the spec `load_qnet(path)` rebuilds
+    from the artifact's build record — the record cannot drift from the
+    builder call."""
     rec = build_record(cfg)
     if act_bits is not None:
         rec["act_bits"] = act_bits
+        if act_bits != cfg.act_bits:
+            rec.pop("op_act_bits", None)
     return Q.build_netspec(rec)
 
 
@@ -136,6 +153,8 @@ def build_record(cfg: VisionTrainConfig) -> Dict[str, Any]:
                            "act_bits": cfg.act_bits}
     if cfg.model == "mobilenet_v2":
         rec["alpha"] = cfg.alpha
+    if cfg.alloc:
+        rec["op_act_bits"] = cfg.alloc
     return rec
 
 
@@ -181,6 +200,35 @@ def train_batch(cfg: VisionTrainConfig, step: int) -> Dict[str, jnp.ndarray]:
                     cfg.num_classes)
     return {"images": jnp.asarray(b["images"]),
             "labels": jnp.asarray(b["labels"])}
+
+
+def eval_accuracy(
+    params,
+    net: G.NetSpec,
+    cfg: VisionTrainConfig,
+    *,
+    qat: bool = True,
+    eval_seed: int = 2,
+    eval_batches: int = 4,
+) -> float:
+    """Held-out top-1 accuracy of the fake-quantized forward.
+
+    The evaluation stream is a seed stream disjoint from both the training
+    stream (`data_seed`) and the calibration stream (`calib_seed`), fixed
+    by (`eval_seed`, batch index) — so the number is a pure function of
+    (params, net, cfg) and comparable across mixed-precision candidates.
+    `qat=True` evaluates through the per-op fake-quant path, i.e. at the
+    net's (possibly heterogeneous) deployment activation widths."""
+    correct = total = 0
+    for i in range(eval_batches):
+        b = image_batch(eval_seed, i, cfg.batch, cfg.input_hw,
+                        cfg.num_classes)
+        logits, _ = layers.forward(params, jnp.asarray(b["images"]), net,
+                                   qat=qat)
+        pred = np.asarray(jnp.argmax(logits, axis=-1))
+        correct += int((pred == b["labels"]).sum())
+        total += int(b["labels"].size)
+    return correct / total if total else 0.0
 
 
 def calibration_batches(cfg: VisionTrainConfig) -> List[jnp.ndarray]:
@@ -681,6 +729,7 @@ def export(
                 "seed": cfg.seed, "data_seed": cfg.data_seed,
                 "calib_seed": cfg.calib_seed,
                 "calib_batches": cfg.calib_batches,
+                "op_act_bits": cfg.alloc,
                 "verified_routes": report.get("routes", [])}
         if provenance:
             prov.update(provenance)
@@ -737,6 +786,7 @@ __all__ = [
     "phase_at",
     "train_batch",
     "calibration_batches",
+    "eval_accuracy",
     "make_vision_train_step",
     "observer_keys",
     "init_observers",

@@ -5,7 +5,9 @@ tuning cache (see `autotune.tune_qnet` and `cache.TunedPlan`).
     save_tuned(plan, "experiments/tuned/my_cpu.json")
     engine = VisionEngine(qnet, tuned=load_tuned(...))  # cache lookup
 
-`python -m repro.tune` regenerates the committed caches.
+`python -m repro.tune` regenerates the committed caches;
+`python -m repro.tune --precision` runs the mixed-precision search
+(`precision.search_precision`) over the cached timings.
 """
 from repro.tune.autotune import (
     Candidate,
@@ -31,6 +33,17 @@ from repro.tune.cache import (
     op_key,
     save_tuned,
 )
+from repro.tune.precision import (
+    LatencyTable,
+    PrecisionPoint,
+    PrecisionResult,
+    QATFinetuneAccuracy,
+    check_pareto_artifact,
+    export_point,
+    pareto_front,
+    search_precision,
+    write_pareto,
+)
 
 __all__ = [
     "Candidate",
@@ -53,4 +66,13 @@ __all__ = [
     "load_tuned",
     "op_key",
     "save_tuned",
+    "LatencyTable",
+    "PrecisionPoint",
+    "PrecisionResult",
+    "QATFinetuneAccuracy",
+    "check_pareto_artifact",
+    "export_point",
+    "pareto_front",
+    "search_precision",
+    "write_pareto",
 ]

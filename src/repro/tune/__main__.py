@@ -18,6 +18,16 @@
     # both cache families live side by side
     PYTHONPATH=src python -m repro.tune --golden --objective edp
 
+    # mixed-precision search (docs/tuning.md "Per-layer precision"):
+    # per-block act-bit allocation over the cached timings, Pareto
+    # artifact under experiments/precision/; --precision-export also
+    # writes the best mixed allocation as a conformant .qnet
+    PYTHONPATH=src python -m repro.tune --precision --hw 32 \
+        --num-classes 10 --choices 4,6,8
+    PYTHONPATH=src python -m repro.tune --precision --fake --out /tmp/p.json
+    PYTHONPATH=src python -m repro.tune --check-pareto \
+        experiments/precision/mobilenet_v2_cpu_pareto.json
+
 Caches are backend-keyed (a cache tuned on CPU resolves nothing on TPU),
 so the filenames carry the backend suffix.
 """
@@ -113,12 +123,103 @@ def tune_custom(args) -> None:
     print(f"[tune] {args.models}: {len(merged)} entries -> {out}")
 
 
+def tune_precision(args) -> None:
+    """Mixed-precision search driver (`repro.tune.precision`)."""
+    import glob
+
+    from repro.train.vision import VisionTrainConfig
+    from repro.tune import load_tuned
+    from repro.tune import precision as P
+
+    backend = jax.default_backend()
+    choices = tuple(int(c) for c in args.choices.split(","))
+    model = (args.models or "mobilenet_v2").split(",")[0].strip()
+    if args.fake:
+        # tiny but non-zero training budget: the search itself scores with
+        # fake_accuracy, but --precision-export still fine-tunes + verifies
+        # through the real QAT/export path
+        cfg = VisionTrainConfig(model=model, input_hw=8, num_classes=4,
+                                bits=args.bits, act_bits=min(choices),
+                                float_steps=6, qat_steps=4,
+                                calibrate_every=0, ckpt_every=0, batch=8)
+        measure, accuracy_fn, tuned = P.fake_measure, P.fake_accuracy, None
+    else:
+        cfg = VisionTrainConfig(
+            model=model, input_hw=args.hw, num_classes=args.num_classes,
+            bits=args.bits, act_bits=min(choices),
+            float_steps=args.float_steps, qat_steps=args.qat_steps,
+            batch=args.batch)
+        measure, accuracy_fn = None, None
+        tuned = None
+        # seed the latency table from every committed cache of this model
+        # family on this backend (the per-width `{model}_act{n}` files)
+        paths = sorted(glob.glob(os.path.join(
+            TUNED_DIR, f"{model}_act*_{backend}.json")))
+        for p in paths:
+            t = load_tuned(p)
+            tuned = t if tuned is None else tuned.merge(t)
+            print(f"[precision] seeded {len(t)} entries from {p}",
+                  file=sys.stderr)
+    result = P.search_precision(
+        cfg, choices=choices, tuned=tuned, backend=backend,
+        accuracy_fn=accuracy_fn, measure=measure,
+        ladder_budget=args.ladder_budget,
+        tune_batch=args.batch, tune_repeats=args.repeats,
+        finetune_steps=args.finetune_steps,
+        log=lambda s: print(s, file=sys.stderr))
+    out = args.out or P.pareto_path(model, backend)
+    P.write_pareto(result, out)
+    dom = P.find_domination(list(result.points))
+    print(f"[precision] {len(result.points)} points, front: "
+          f"{', '.join(result.front)} -> {out}")
+    if dom:
+        m, u = dom
+        print(f"[precision] {m} dominates {u} on (latency, model_bytes) "
+              f"at >= accuracy")
+    if args.precision_export:
+        # headline = the dominating mixed point if one exists, else the
+        # first mixed allocation on the front (export must exercise a
+        # genuinely heterogeneous net), else the front head
+        name = dom[0] if dom else next(
+            (n for n in result.front if n.startswith("mix")),
+            result.front[0])
+        best = next(p for p in result.points if p.name == name)
+        impl = None
+        if args.fake:
+            # smoke still exports through the REAL conformance path —
+            # only the search-time scoring was faked
+            impl = P.QATFinetuneAccuracy(cfg, steps=0)
+        report = P.export_point(cfg, best, args.precision_export,
+                                accuracy_impl=impl)
+        print(f"[precision] exported {best.name} -> "
+              f"{args.precision_export} (routes: "
+              f"{', '.join(report.get('routes', []))})")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(prog="python -m repro.tune")
     ap.add_argument("--golden", action="store_true",
                     help="tune the 4 frozen golden-fixture nets")
     ap.add_argument("--bench", action="store_true",
                     help="tune the benchmark nets into one merged cache")
+    ap.add_argument("--precision", action="store_true",
+                    help="per-block mixed-precision search over the cached "
+                         "timings (writes a Pareto artifact)")
+    ap.add_argument("--choices", default="4,6,8",
+                    help="act-bit widths the precision search draws from")
+    ap.add_argument("--float-steps", type=int, default=40)
+    ap.add_argument("--qat-steps", type=int, default=20)
+    ap.add_argument("--ladder-budget", type=int, default=5,
+                    help="mixed candidates per savings ladder")
+    ap.add_argument("--finetune-steps", type=int, default=10,
+                    help="QAT fine-tune steps per candidate allocation")
+    ap.add_argument("--fake", action="store_true",
+                    help="deterministic fake measure + accuracy (CI smoke)")
+    ap.add_argument("--precision-export", default=None, metavar="PATH",
+                    help="also export the headline allocation as a .qnet "
+                         "(full 4-route conformance gate)")
+    ap.add_argument("--check-pareto", default=None, metavar="PATH",
+                    help="schema-check a Pareto artifact and exit")
     ap.add_argument("--models", default=None,
                     help="comma-separated models for an ad-hoc tune")
     ap.add_argument("--hw", type=int, default=48)
@@ -135,6 +236,14 @@ def main(argv=None) -> None:
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
+    if args.check_pareto:
+        from repro.tune import precision as P
+        P.check_pareto_artifact(args.check_pareto)
+        print(f"[precision] OK {args.check_pareto}")
+        return
+    if args.precision:
+        tune_precision(args)
+        return
     if args.golden:
         args_g = argparse.Namespace(**{**vars(args), "batch": 2})
         tune_golden(args_g)  # golden fixtures serve batch 2
@@ -143,7 +252,8 @@ def main(argv=None) -> None:
     if args.models and not args.golden:  # with --golden, --models filters it
         tune_custom(args)
     if not (args.golden or args.bench or args.models):
-        ap.error("pick at least one of --golden / --bench / --models")
+        ap.error("pick at least one of --golden / --bench / --models "
+                 "/ --precision / --check-pareto")
 
 
 if __name__ == "__main__":

@@ -28,7 +28,11 @@ from typing import Dict, Optional, Set, Tuple
 from repro.core import compiler as CC
 from repro.core import graph as G
 
-CACHE_VERSION = 1
+# v2: `irb_key` carries all three act bit-widths of the fused block
+# (expand/dw/project) instead of collapsing them into the project op's —
+# a heterogeneous-bit block no longer aliases a uniform-bit block. Any
+# v1 cache must be regenerated (`python -m repro.tune --golden --bench`).
+CACHE_VERSION = 2
 
 # route identifiers understood by the routed executor (core.cu._run_qop)
 INT_REF = "int_ref"  # reference XLA integer ops (conv/dot_general, s32)
@@ -59,11 +63,18 @@ def op_key(op: G.OpSpec, in_hw: Optional[int], backend: str,
 
 
 def irb_key(block: G.BlockSpec, in_hw: Optional[int], backend: str) -> str:
-    """Cache key for a whole fusable IRB (expand -> dw -> project) block."""
+    """Cache key for a whole fusable IRB (expand -> dw -> project) block.
+
+    All three stage act bit-widths are in the key: the fused kernel's
+    timing (and its eligibility — `fusable_irb` requires one width) is a
+    function of every stage's BW, so a mixed-bit block must never resolve
+    a route measured on a uniform-bit block that happens to share the
+    project op's width."""
     e, d, p = block.ops
     hw = 0 if in_hw is None else int(in_hw)
     return (f"irb:hw{hw}:c{e.in_ch}x{e.out_ch}x{p.out_ch}"
-            f":k{d.kernel}:s{d.stride}:a{p.act_bits}"
+            f":k{d.kernel}:s{d.stride}"
+            f":a{e.act_bits}x{d.act_bits}x{p.act_bits}"
             f":r{int(block.residual)}:{backend}")
 
 

@@ -28,6 +28,7 @@ from repro.energy import (
     measure_power,
     op_bytes_moved,
     op_macs,
+    op_pj_per_mac,
     reset_default_power_model,
 )
 from repro.energy import power as EP
@@ -235,6 +236,52 @@ def test_dw_and_pw_equal_macs_different_bytes():
     e_dw = op_macs(dw, hw) * PJ_PER_MAC[8] * 1e-12 + b_dw * PJ_PER_BYTE * 1e-12
     e_pw = op_macs(pw, hw) * PJ_PER_MAC[8] * 1e-12 + b_pw * PJ_PER_BYTE * 1e-12
     assert e_dw > e_pw
+
+
+def test_mixed_act_bits_change_byte_and_mac_pricing():
+    """Regression for the uniform-width blind spots: `op_bytes_moved` used
+    to charge 1 B/element regardless of act width, and the analytic MAC
+    price keyed on weight bits alone. A DW op at act4 must move ~half the
+    activation bytes of the same op at act8, and a w4/a8 op must be priced
+    at the 8-bit MAC energy (the datapath runs at the wider operand)."""
+    hw = 16
+    dw8 = G.OpSpec("dw", G.DW, in_ch=256, out_ch=256, kernel=3, bits=8,
+                   act_bits=8)
+    dw4 = G.OpSpec("dw", G.DW, in_ch=256, out_ch=256, kernel=3, bits=8,
+                   act_bits=4)
+    b8, b4 = op_bytes_moved(dw8, hw), op_bytes_moved(dw4, hw)
+    assert b4 < b8
+    # exactly the activation-stream halving: weights are unchanged
+    n_el = hw * hw * 256 + hw * hw * 256  # input + output feature maps
+    assert b8 - b4 == n_el // 2
+    # upstream width matters too: an act8 op fed by an act4 producer reads
+    # narrower input traffic than the same op fed at 8 bits
+    assert op_bytes_moved(dw8, hw, in_bits=4) < op_bytes_moved(dw8, hw)
+    # MAC pricing follows the wider of weight/act operand
+    w4a8 = G.OpSpec("pw", G.PW, in_ch=48, out_ch=48, bits=4, act_bits=8)
+    w4a4 = G.OpSpec("pw", G.PW, in_ch=48, out_ch=48, bits=4, act_bits=4)
+    assert op_pj_per_mac(w4a8) == PJ_PER_MAC[8]
+    assert op_pj_per_mac(w4a4) == PJ_PER_MAC[4]
+    assert op_pj_per_mac(w4a8) > op_pj_per_mac(w4a4)
+
+
+def test_mixed_allocation_lowers_modeled_energy():
+    """End to end through `estimate_energy`: dropping part of a net to
+    act4 must strictly lower the modeled J/image vs the uniform-8 net
+    (byte traffic shrinks, nothing else changes)."""
+    net8 = G.with_act_bits(
+        mnv2.build(alpha=0.35, input_hw=32, num_classes=10), 8)
+    alloc = G.op_act_bits(net8)
+    mixed = dict(alloc)
+    for name in list(mixed)[len(mixed) // 2:]:
+        mixed[name] = 4
+    net_mix = G.with_op_act_bits(net8, mixed)
+    power = PowerModel(busy_w=10.0, idle_w=2.0, source="test")
+    j8 = estimate_energy(make_calibrated_qnet(net8, bits=8),
+                         power=power, backend="cpu").j_per_image
+    jm = estimate_energy(make_calibrated_qnet(net_mix, bits=8),
+                         power=power, backend="cpu").j_per_image
+    assert jm < j8
 
 
 def test_analytic_energy_includes_byte_term():

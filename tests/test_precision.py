@@ -1,0 +1,275 @@
+"""Mixed-precision search (`repro.tune.precision`) + the PR-10 precision
+plumbing regressions: heterogeneous cache keys, quantization-name
+idempotence, per-op allocation maps through graph/build records, and the
+fake-driven (deterministic, train-free) search/artifact pipeline CI's
+smoke job runs."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.core import graph as G, qnet as Q
+from repro.models import mobilenet_v2 as mnv2
+from repro.train.vision import VisionTrainConfig
+from repro.tune import cache as TC
+from repro.tune import precision as P
+
+
+def _tiny_cfg(**over):
+    base = dict(model="mobilenet_v2", input_hw=8, num_classes=4, bits=4,
+                act_bits=4, float_steps=6, qat_steps=4, calibrate_every=0,
+                ckpt_every=0, batch=8)
+    base.update(over)
+    return VisionTrainConfig(**base)
+
+
+def _tiny_net(act_bits=8):
+    net = mnv2.build(alpha=0.35, input_hw=8, bits=4, num_classes=4)
+    return G.with_act_bits(net, act_bits)
+
+
+# ---------------------------------------------------------------------------
+# bugfix regressions
+# ---------------------------------------------------------------------------
+
+
+def test_irb_key_distinguishes_heterogeneous_blocks():
+    """Regression: `irb_key` used to key a fused IRB on the PROJECT op's
+    act width alone, so a mixed block (expand/dw at 4, project at 8)
+    aliased the uniform-8 block's cache entry and could resolve a route
+    timed (and verified) on a different numerical workload."""
+    def irb(e_bits, d_bits, p_bits):
+        return G.BlockSpec("irb0", (
+            G.OpSpec("irb0/expand", G.PW, 8, 16, 1, 1, G.RELU6, 4, e_bits),
+            G.OpSpec("irb0/dw", G.DW, 16, 16, 3, 1, G.RELU6, 4, d_bits),
+            G.OpSpec("irb0/project", G.PW, 16, 8, 1, 1, G.NONE, 4, p_bits),
+        ), residual=True)
+
+    uniform8 = TC.irb_key(irb(8, 8, 8), 16, "cpu")
+    mixed = TC.irb_key(irb(4, 4, 8), 16, "cpu")
+    assert mixed != uniform8  # the aliasing bug
+    # every stage width is load-bearing, not just a combined hash
+    assert TC.irb_key(irb(4, 8, 8), 16, "cpu") != mixed
+    assert TC.irb_key(irb(4, 4, 8), 16, "cpu") == mixed  # deterministic
+    assert "a4x4x8" in mixed and "a8x8x8" in uniform8
+
+
+def test_cache_version_bumped_for_irb_key_change():
+    """v1 caches hold irb entries under the aliasing key — they must be
+    rejected, not silently resolved."""
+    assert TC.CACHE_VERSION == 2
+    with pytest.raises(ValueError, match="version"):
+        TC.TunedPlan.from_json({"version": 1, "backend": "cpu",
+                                "entries": {}})
+
+
+def test_with_act_bits_name_idempotent():
+    """Regression: `with_act_bits` used to append `_act{n}` on every
+    application, so re-quantizing an already-quantized spec produced
+    `..._act8_act8` names (and unbounded growth under a search loop)."""
+    net = mnv2.build(alpha=0.35, input_hw=8, bits=4, num_classes=4)
+    once = G.with_act_bits(net, 6)
+    twice = G.with_act_bits(once, 6)
+    assert once.name == twice.name == f"{net.name}_act6"
+    # re-widening replaces the suffix instead of stacking a second one
+    assert G.with_act_bits(once, 8).name == f"{net.name}_act8"
+    # and the mixed-allocation suffix is stripped the same way
+    alloc = {op.name: (4 if i % 2 else 8)
+             for i, (_, op) in enumerate(net.all_ops())}
+    mixed = G.with_op_act_bits(net, alloc)
+    assert mixed.name.startswith(f"{net.name}_actmix")
+    assert G.with_act_bits(mixed, 8).name == f"{net.name}_act8"
+
+
+def test_with_op_act_bits_roundtrip_and_validation():
+    net = _tiny_net(8)
+    alloc = G.op_act_bits(net)
+    assert set(alloc.values()) == {8}
+    mixed = dict(alloc)
+    for name in list(mixed)[::3]:
+        mixed[name] = 4
+    net_mix = G.with_op_act_bits(net, mixed)
+    assert G.op_act_bits(net_mix) == mixed
+    # collapsing back to one width restores the uniform name
+    assert G.with_op_act_bits(
+        net_mix, {k: 8 for k in mixed}).name == net.name
+    with pytest.raises(KeyError, match="nonexistent"):
+        G.with_op_act_bits(net, {"nonexistent/op": 8})
+
+
+def test_build_netspec_applies_op_act_bits():
+    """A heterogeneous `.qnet` self-describes: the build record's
+    allocation map must reconstruct the exact per-op widths."""
+    net = _tiny_net(8)
+    alloc = G.op_act_bits(net)
+    for name in list(alloc)[: len(alloc) // 2]:
+        alloc[name] = 6
+    build = {"model": "mobilenet_v2", "alpha": 0.35, "input_hw": 8,
+             "bits": 4, "num_classes": 4, "act_bits": 8,
+             "op_act_bits": alloc}
+    rebuilt = Q.build_netspec(build)
+    assert G.op_act_bits(rebuilt) == alloc
+    assert rebuilt.name == G.with_op_act_bits(net, alloc).name
+
+
+def test_train_config_carries_allocation_into_build_record():
+    from repro.train import vision as V
+
+    net = _tiny_net(8)
+    alloc = G.op_act_bits(net)
+    for name in list(alloc)[:5]:
+        alloc[name] = 4
+    cfg = _tiny_cfg(act_bits=8, op_act_bits=tuple(sorted(alloc.items())))
+    assert cfg.alloc == alloc
+    rec = V.build_record(cfg)
+    assert rec["op_act_bits"] == alloc
+    assert G.op_act_bits(V.build_net(cfg)) == alloc
+    # anneal phases train at a uniform override width: allocation dropped
+    uniform = V.build_net(cfg, act_bits=6)
+    assert set(G.op_act_bits(uniform).values()) == {6}
+
+
+# ---------------------------------------------------------------------------
+# latency table + search (fake measure/accuracy: deterministic, train-free)
+# ---------------------------------------------------------------------------
+
+
+def test_latency_table_analytic_fallback_then_coverage():
+    from repro.energy import PowerModel
+
+    net = _tiny_net(8)
+    empty = TC.TunedPlan(backend="cpu", nets=(), tuned_batch=2, entries={})
+    table = P.LatencyTable(
+        empty, PowerModel(busy_w=10.0, idle_w=2.0, source="test"), "cpu")
+    cost = table.net_cost(net)
+    assert cost.n_tuned == 0 and cost.missing  # all analytic
+    assert cost.us_per_image > 0
+    table = P.ensure_coverage(table, [net], measure=P.fake_measure,
+                              batch=2)
+    cost2 = table.net_cost(net)
+    assert not cost2.missing and cost2.tuned_fraction == 1.0
+
+
+def test_block_allocation_expands_and_validates():
+    net = _tiny_net(8)
+    alloc = P.block_allocation(net, {"irb3": 4})
+    assert set(alloc) == {op.name for op in
+                          next(b for b in net.blocks
+                               if b.name == "irb3").ops}
+    assert set(alloc.values()) == {4}
+    with pytest.raises(KeyError, match="irb99"):
+        P.block_allocation(net, {"irb99": 4})
+
+
+def _fake_search(**over):
+    kw = dict(choices=(4, 6, 8), backend="cpu",
+              accuracy_fn=P.fake_accuracy, measure=P.fake_measure,
+              ladder_budget=3, tune_batch=2)
+    kw.update(over)
+    return P.search_precision(_tiny_cfg(), **kw)
+
+
+@pytest.fixture(scope="module")
+def fake_result():
+    return P.search_precision(
+        _tiny_cfg(), choices=(4, 6, 8), backend="cpu",
+        accuracy_fn=P.fake_accuracy, measure=P.fake_measure,
+        ladder_budget=3, tune_batch=2)
+
+
+def test_search_produces_uniform_anchors_and_mixed_points(fake_result):
+    names = [p.name for p in fake_result.points]
+    assert {"uniform4", "uniform6", "uniform8"} <= set(names)
+    assert any(n.startswith("mix") for n in names)
+    # uniform anchors carry their width; mixed points don't
+    by_name = {p.name: p for p in fake_result.points}
+    assert by_name["uniform8"].uniform == 8
+    mixed = next(p for p in fake_result.points if p.uniform is None)
+    assert len(set(mixed.alloc.values())) > 1
+    # per-block granularity: every block is internally uniform
+    net = Q.build_netspec(
+        {**fake_result.build, "op_act_bits": mixed.alloc})
+    for block in net.blocks:
+        assert len({op.act_bits for op in block.ops}) == 1, block.name
+
+
+def test_search_is_deterministic(fake_result):
+    again = _fake_search()
+    assert [p.as_dict() for p in again.points] == \
+        [p.as_dict() for p in fake_result.points]
+    assert again.front == fake_result.front
+
+
+def test_artifact_roundtrip_and_schema_gate(fake_result, tmp_path):
+    path = str(tmp_path / "pareto.json")
+    P.write_pareto(fake_result, path)
+    P.check_pareto_artifact(path)  # passes
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["schema"] == P.PARETO_SCHEMA
+    assert len(doc["pareto"]) >= 3
+    # tampering with the recorded front must be caught
+    doc["pareto"] = doc["pareto"][:1]
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    with pytest.raises(ValueError, match="front"):
+        P.check_pareto_artifact(path)
+
+
+def test_pareto_front_drops_dominated_points(fake_result):
+    pts = list(fake_result.points)
+    worst = dataclasses.replace(
+        pts[0], name="strictly_worse", accuracy=0.0,
+        us_per_image=pts[0].us_per_image * 10,
+        j_per_image=pts[0].j_per_image * 10,
+        model_bytes=pts[0].model_bytes + 1)
+    front = P.pareto_front(pts + [worst])
+    assert all(p.name != "strictly_worse" for p in front)
+    assert P.dominates(pts[0], worst)
+    assert not P.dominates(worst, pts[0])
+    assert not P.dominates(pts[0], pts[0])
+
+
+def test_export_searched_allocation_passes_conformance(fake_result,
+                                                       tmp_path):
+    """The CI smoke contract: a searched mixed allocation exports through
+    the REAL QAT fine-tune + 4-route `verify_export` gate and the artifact
+    reloads with the exact searched widths."""
+    cfg = _tiny_cfg()
+    point = next(p for p in fake_result.points if p.uniform is None)
+    path = str(tmp_path / "mixed.qnet")
+    impl = P.QATFinetuneAccuracy(cfg, steps=0)
+    report = P.export_point(cfg, point, path, accuracy_impl=impl)
+    assert {"reference", "prepared", "stage-executors"} <= \
+        set(report["routes"])
+    meta = Q.read_qnet_meta(path)
+    assert meta["build"]["op_act_bits"] == {
+        k: v for k, v in point.alloc.items()}
+    qnet = Q.load_qnet(path)
+    assert G.op_act_bits(qnet.spec) == point.alloc
+
+
+def test_find_domination_semantics():
+    def pt(name, uniform, acc, us, nbytes):
+        return P.PrecisionPoint(
+            name=name, block_bits={}, alloc={}, uniform=uniform,
+            accuracy=acc, us_per_image=us, model_bytes=nbytes,
+            j_per_image=1.0, edp=1.0, tuned_fraction=1.0)
+
+    u8 = pt("uniform8", 8, 0.90, 100.0, 500)
+    faster = pt("mix_a", None, 0.90, 80.0, 500)
+    slower = pt("mix_b", None, 0.95, 120.0, 500)
+    assert P.find_domination([u8, slower, faster]) == ("mix_a", "uniform8")
+    assert P.find_domination([u8, slower]) is None
+
+
+def test_committed_pareto_artifact_is_valid():
+    """The committed MobileNetV2/cpu artifact satisfies the acceptance
+    bar: schema-clean, >= 3 non-dominated points, and at least one mixed
+    allocation strictly dominates a uniform one on (latency, model bytes)
+    at equal-or-better accuracy."""
+    import os
+    path = P.pareto_path("mobilenet_v2", "cpu")
+    if not os.path.exists(path):
+        pytest.skip("committed artifact absent (pre-generation tree)")
+    P.check_pareto_artifact(path, min_points=3, require_domination=True)

@@ -185,6 +185,21 @@ def test_op_kernels_flag_validation(mnv2_qnet):
 # ---------------------------------------------------------------------------
 
 
+ACT_CHOICES = (4, 6, 8)  # widths the mixed-precision search draws from
+
+
+def _mixed_act_bits(net: G.NetSpec, plan: int) -> G.NetSpec:
+    """Deterministically scatter per-op act bits from ACT_CHOICES over the
+    net (plan is a base-3 digit stream), keeping the stem at 8 like the
+    model builders do. plan=0 leaves the net uniform."""
+    if plan == 0:
+        return net
+    alloc = {}
+    for i, (_, op) in enumerate(net.all_ops()):
+        alloc[op.name] = ACT_CHOICES[(plan >> (2 * i)) % len(ACT_CHOICES)]
+    return G.with_op_act_bits(net, alloc)
+
+
 def _rand_netspec(stem_ch: int, n_body: int, expand: int, kernel: int,
                   stride: int, bits: int, body_ch: int) -> G.NetSpec:
     """A small compile_net-compatible net: CONV stem -> IRB-ish body blocks
@@ -230,16 +245,24 @@ def _rand_netspec(stem_ch: int, n_body: int, expand: int, kernel: int,
     bits=st.sampled_from([4, 8]),
     body_ch=st.sampled_from([8, 16]),
     seed=st.integers(0, 2**16),
+    act_plan=st.integers(0, 2**20),
 )
 def test_fuzz_fast_path_matches_reference(stem_ch, n_body, expand, kernel,
-                                          stride, bits, body_ch, seed):
+                                          stride, bits, body_ch, seed,
+                                          act_plan):
     """Differential property: for random small NetSpecs (mixed DW kernel /
-    stride / 5x5 / residual / act bits), the PreparedQNet fast path — eager
-    AND jitted, float AND fixed-point requant — is bit-exact with the
-    reference interpreter. Catches per-op formulation drift (e.g. f32
-    reassociation under jit) that the two fixed model topologies miss."""
-    net = _rand_netspec(stem_ch, n_body, expand, kernel, stride, bits,
-                        body_ch)
+    stride / 5x5 / residual / PER-OP heterogeneous act bits from {4,6,8}),
+    the PreparedQNet fast path — eager AND jitted, float AND fixed-point
+    requant — is bit-exact with the reference interpreter, and the full
+    `verify_export` route chain (reference / prepared / stage executors /
+    engine kernels) agrees bitwise. Catches per-op formulation drift (e.g.
+    f32 reassociation under jit, requant chained at the wrong input width)
+    that the two fixed model topologies miss."""
+    from repro.train.vision import verify_export
+
+    net = _mixed_act_bits(
+        _rand_netspec(stem_ch, n_body, expand, kernel, stride, bits,
+                      body_ch), act_plan)
     qnet = _make_qnet(net, seed=seed % 7)
     pq = cu.prepare_qnet(qnet)
     x = jnp.asarray(np.asarray(jax.random.uniform(
@@ -251,6 +274,14 @@ def test_fuzz_fast_path_matches_reference(stem_ch, n_body, expand, kernel,
     ref_fx = np.asarray(cu.run_qnet(qnet, x, fixed_point=True))
     np.testing.assert_array_equal(
         ref_fx, np.asarray(cu.run_qnet(pq, x, fixed_point=True)))
+    np.testing.assert_array_equal(
+        ref_fx,
+        np.asarray(jax.jit(
+            lambda t: cu.run_qnet(pq, t, fixed_point=True))(x)))
+    # 4-route conformance chain on the heterogeneous net (raises on drift)
+    report = verify_export(qnet, np.asarray(x))
+    assert {"reference", "prepared", "stage-executors",
+            "engine"} <= set(report["routes"])
 
 
 # ---------------------------------------------------------------------------
